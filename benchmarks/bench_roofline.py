@@ -1,0 +1,44 @@
+"""§Roofline summary: reads the dry-run artifact (launch/dryrun.py output)
+and prints the three-term table per (arch × shape × mesh)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Report
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "experiments", "dryrun_results.json")
+
+
+def run(report: Report | None = None, path: str = RESULTS) -> dict:
+    report = report or Report()
+    if not os.path.exists(path):
+        report.add("roofline_missing", 0.0,
+                   "run: python -m repro.launch.dryrun --all [--multi-pod]")
+        return {}
+    with open(path) as f:
+        results = json.load(f)
+    ok = {k: v for k, v in results.items() if v.get("ok")}
+    for key, v in sorted(ok.items()):
+        if "singlepod" not in key:
+            continue
+        name = f"roofline_{v['arch']}_{v['shape']}"
+        report.add(name, 0.0,
+                   f"compute={v['compute_s_term']*1e3:.2f}ms "
+                   f"memory={v['memory_s_term']*1e3:.2f}ms "
+                   f"collective={v['collective_s_term']*1e3:.2f}ms "
+                   f"dominant={v['dominant']} "
+                   f"useful={100*v['useful_flops_ratio']:.0f}% "
+                   f"hbm={v['memory_stats']['peak_estimate_gb']}GB/dev")
+    n_multi = sum(1 for k in ok if "multipod" in k)
+    report.add("roofline_cells_ok", 0.0,
+               f"{sum(1 for k in ok if 'singlepod' in k)}/40 single-pod, "
+               f"{n_multi}/40 multi-pod")
+    return ok
+
+
+if __name__ == "__main__":
+    r = Report()
+    run(r)
+    r.print_csv(header=True)

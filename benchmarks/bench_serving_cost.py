@@ -1,0 +1,77 @@
+"""Figs. 7–9 reproduction: ERCache serving cost — QPS, latency, bandwidth.
+
+Our cache is in-mesh HBM (DESIGN.md §6), so the "serving cost" has two
+parts: (a) measured op cost of lookup / insert / combined write on this
+host (µs/call → achievable QPS per core), and (b) the paper-scale derived
+accounting: write-QPS reduction from update combination (Fig. 5 / Fig. 7)
+and write bandwidth at the paper's QPS (Fig. 9).
+
+Fig. 8 (read-latency CDF) belongs to the RPC memcache design; the in-HBM
+probe has no host round-trip. We report the measured in-process lookup
+latency alongside the paper's p50/p99 for contrast.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Report, time_us
+from repro.core import cache as C
+from repro.core import combiner as G
+from repro.core.hashing import Key64
+
+N_MODELS = 30
+DIM = 64
+BATCH = 1024
+
+
+def run(report: Report | None = None) -> dict:
+    report = report or Report()
+    rng = np.random.default_rng(0)
+    state = C.init_cache(1 << 14, 8, DIM)
+    ids = rng.integers(0, 1 << 40, BATCH)
+    keys = Key64.from_int(ids)
+    vals = jnp.asarray(rng.standard_normal((BATCH, DIM)), jnp.float32)
+
+    lookup = jax.jit(lambda s, k: C.lookup(s, k, 1000, 60_000))
+    insert = jax.jit(lambda s, k, v: C.insert(s, k, v, 1000, 60_000))
+    state = insert(state, keys, vals)
+
+    us_lookup = time_us(lookup, state, keys)
+    us_insert = time_us(insert, state, keys, vals)
+    report.add("fig8_lookup_batch1024", us_lookup,
+               f"{us_lookup/BATCH:.2f}us/req in-process "
+               f"(paper RPC p50=770us p99=8470us)")
+    report.add("fig7_insert_batch1024", us_insert,
+               f"{us_insert/BATCH:.2f}us/req")
+
+    # grouped write: 30 models × 64 dims in ONE insert (Fig. 5 → Fig. 7)
+    spec = G.GroupSpec(members=tuple(
+        G.GroupMember(f"m{i}", dim=DIM, ttl_ms=300_000)
+        for i in range(N_MODELS)))
+    gstate = G.init_grouped(spec, 1 << 12, 8)
+    member_vals = {f"m{i}": vals for i in range(N_MODELS)}
+    ginsert = jax.jit(lambda s, k: G.insert_group(
+        spec, s, k, member_vals, 1000))
+    us_ginsert = time_us(ginsert, gstate, keys)
+    report.add("fig7_combined_write_30models", us_ginsert,
+               f"{us_ginsert/BATCH:.2f}us/user-write "
+               f"qps_reduction={G.write_amplification(N_MODELS, 1):.0f}x")
+
+    # paper-scale accounting: Fig. 7 write QPS 0.93–1.63 M/s; Fig. 9 BW
+    row_bytes = spec.total_dim * 4
+    for qps_m in (0.93, 1.63):
+        bw = qps_m * 1e6 * row_bytes / 1e9
+        report.add(f"fig9_write_bw_at_{qps_m}Mqps", 0.0,
+                   f"{bw:.2f}GB/s row={row_bytes}B "
+                   f"(paper: 7.26-12.43GB/s)")
+    return {"lookup_us_per_req": us_lookup / BATCH,
+            "combined_write_us": us_ginsert / BATCH,
+            "row_bytes": row_bytes}
+
+
+if __name__ == "__main__":
+    r = Report()
+    run(r)
+    r.print_csv(header=True)

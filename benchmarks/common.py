@@ -1,0 +1,44 @@
+"""Shared helpers for the paper-artifact benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+
+def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time of fn(*args) in microseconds (jit-warmed)."""
+    for _ in range(warmup):
+        r = fn(*args)
+    _block(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        _block(r)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _block(r):
+    import jax
+    for leaf in jax.tree_util.tree_leaves(r):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+class Report:
+    """Collects ``name,us_per_call,derived`` rows for run.py's CSV."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us_per_call: float = 0.0, derived: str = ""):
+        self.rows.append((name, us_per_call, derived))
+
+    def print_csv(self, header: bool = False):
+        if header:
+            print("name,us_per_call,derived")
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.2f},{derived}")

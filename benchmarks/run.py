@@ -1,0 +1,54 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.Report).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,table2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import Report
+
+BENCHES = [
+    ("fig2_access_pattern", "benchmarks.bench_access_pattern"),
+    ("fig6_hit_rate", "benchmarks.bench_hit_rate"),
+    ("table2_direct_cache", "benchmarks.bench_direct_cache"),
+    ("table3_failover", "benchmarks.bench_failover"),
+    ("table4_ttl_ne", "benchmarks.bench_ttl_ne"),
+    ("fig7_8_9_serving_cost", "benchmarks.bench_serving_cost"),
+    ("fig10_drain", "benchmarks.bench_drain"),
+    ("capacity_beyond_paper", "benchmarks.bench_capacity"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    report = Report()
+    t_start = time.perf_counter()
+    for name, module in BENCHES:
+        if only and not any(f in name for f in only):
+            continue
+        t0 = time.perf_counter()
+        print(f"# --- {name} ---", file=sys.stderr, flush=True)
+        mod = __import__(module, fromlist=["run"])
+        try:
+            mod.run(report)
+        except Exception as e:  # keep the harness going; record the failure
+            report.add(f"{name}_FAILED", 0.0, f"{type(e).__name__}: {e}")
+        print(f"# {name} done in {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr, flush=True)
+    report.print_csv(header=True)
+    print(f"# total {time.perf_counter()-t_start:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end serving driver: a transformer user tower behind ERCache.
+
+A (reduced) LLaMA-family LM produces pooled user representations (paper
+ref [24], Scaling User Modeling); ERCache fronts it over the Fig. 2-
+calibrated request stream with injected inference failures. Reports the
+Table 2/3 quantities for this deployment plus a no-cache baseline.
+
+    PYTHONPATH=src python examples/serve_lm_tower.py [--minutes 90]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import server as srv
+from repro.core.config import CacheConfig, HOUR_MS, MINUTE_MS
+from repro.core.hashing import Key64
+from repro.core.metrics import power_savings
+from repro.data.access_patterns import (FIG6_KNOTS, InterArrivalDist,
+                                        StreamConfig, generate_stream_fast)
+from repro.ft.failure import FailureInjector
+from repro.models import transformer as tfm
+
+SEQ = 32
+BATCH = 64
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--minutes", type=int, default=90)
+    ap.add_argument("--users", type=int, default=1200)
+    ap.add_argument("--failure-rate", type=float, default=0.02)
+    args = ap.parse_args()
+
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+
+    def tower_fn(p, tokens):
+        return tfm.user_tower_step(p, tokens, cfg)
+
+    cache_cfg = CacheConfig(model_id=7, model_type="ctr",
+                            cache_ttl_ms=5 * MINUTE_MS,
+                            failover_ttl_ms=1 * HOUR_MS,
+                            n_buckets=1 << 12, ways=8,
+                            value_dim=cfg.user_embed_dim)
+    server = srv.CachedEmbeddingServer(cfg=cache_cfg, tower_fn=tower_fn,
+                                       miss_budget=int(BATCH * 0.75))
+    state = srv.init_server_state(cache_cfg, writebuf_capacity=BATCH * 4)
+
+    stream = StreamConfig(n_users=args.users,
+                          horizon_s=args.minutes * 60.0, seed=0)
+    times_ms, users = generate_stream_fast(stream,
+                                           InterArrivalDist(FIG6_KNOTS))
+    injector = FailureInjector(base_rate=args.failure_rate, seed=0)
+    rng = np.random.default_rng(0)
+
+    def tokens_of(ids):
+        # deterministic per-user behaviour history (stable across calls)
+        return jnp.asarray([(np.arange(SEQ) * (7 + i)) % cfg.vocab
+                            for i in ids], jnp.int32)
+
+    totals = {"requests": 0, "hits": 0, "towers": 0, "fallbacks": 0}
+    for lo in range(0, len(users) - BATCH + 1, BATCH):
+        ids = users[lo:lo + BATCH]
+        now = int(times_ms[lo + BATCH - 1])
+        res = server.jit_serve_step(
+            params, state, Key64.from_int(ids), tokens_of(ids), now,
+            jnp.asarray(injector.mask(BATCH, now)))
+        state = server.jit_flush(res.state, now)
+        totals["requests"] += int(res.stats["requests"])
+        totals["hits"] += int(res.stats["direct_hits"])
+        totals["towers"] += int(res.stats["tower_inferences"])
+        totals["fallbacks"] += int(res.stats["fallbacks"])
+
+    hit_rate = totals["hits"] / max(totals["requests"], 1)
+    print(f"requests           : {totals['requests']}")
+    print(f"direct hit rate    : {hit_rate:.3f}")
+    print(f"tower inferences   : {totals['towers']} "
+          f"({totals['towers']/max(totals['requests'],1):.2%} of requests)")
+    print(f"fallback rate      : "
+          f"{totals['fallbacks']/max(totals['requests'],1):.4%} "
+          f"(failure rate injected: {args.failure_rate:.1%})")
+    print(f"compute savings    : {power_savings(hit_rate, 0.8):.1%} "
+          f"(tower share 0.8, Table 2 model)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Render the §Dry-run/§Roofline tables of EXPERIMENTS.md from
+experiments/dryrun_results.json. Run after a sweep:
+
+    PYTHONPATH=src python scripts/render_experiments.py
+"""
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "experiments", "dryrun_results.json")
+MARK_BEGIN = "<!-- AUTOGEN:ROOFLINE BEGIN -->"
+MARK_END = "<!-- AUTOGEN:ROOFLINE END -->"
+
+
+def fmt_table(results):
+    rows = []
+    head = ("| arch | shape | compute | memory | collective | dominant | "
+            "useful | HBM/dev | multi-pod |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    rows.append(head)
+    single = {k: v for k, v in results.items()
+              if v.get("ok") and k.endswith("singlepod")}
+    for key in sorted(single):
+        v = single[key]
+        mkey = key.replace("singlepod", "multipod")
+        mp = results.get(mkey, {})
+        mp_s = "✓" if mp.get("ok") else "✗"
+        def ms(x):
+            return (f"{x*1e3:.2f} ms" if x < 10 else f"{x:.2f} s")
+        rows.append(
+            f"| {v['arch']} | {v['shape']} | {ms(v['compute_s_term'])} "
+            f"| {ms(v['memory_s_term'])} | {ms(v['collective_s_term'])} "
+            f"| {v['dominant']} | {100*v['useful_flops_ratio']:.0f}% "
+            f"| {v['memory_stats']['peak_estimate_gb']:.2f} GB | {mp_s} |")
+    n_s = len(single)
+    n_m = sum(1 for k, v in results.items()
+              if v.get("ok") and k.endswith("multipod"))
+    rows.append(f"\n**{n_s}/40 single-pod and {n_m}/40 multi-pod cells "
+                "compile.**")
+    return "\n".join(rows)
+
+
+def main():
+    with open(RESULTS) as f:
+        results = json.load(f)
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        doc = f.read()
+    lo = doc.index(MARK_BEGIN) + len(MARK_BEGIN)
+    hi = doc.index(MARK_END)
+    doc = doc[:lo] + "\n" + fmt_table(results) + "\n" + doc[hi:]
+    with open(path, "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md roofline table updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Architecture registry: ``get_config(arch_id, smoke=False)`` + shape sets."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
+                                GNNConfig, GNNShape, LMConfig, LMShape,
+                                MoEConfig, RecsysConfig, RecsysShape)
+
+_MODULES: Dict[str, str] = {
+    "yi-6b": "yi_6b",
+    "llama3-8b": "llama3_8b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "arctic-480b": "arctic_480b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "gin-tu": "gin_tu",
+    "wide-deep": "wide_deep",
+    "sasrec": "sasrec",
+    "bst": "bst",
+    "mind": "mind",
+}
+
+SHAPES_BY_FAMILY = {
+    "lm": LM_SHAPES,
+    "gnn": GNN_SHAPES,
+    "recsys": RECSYS_SHAPES,
+}
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def get_config(arch_id: str, smoke: bool = False):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def shapes_for(cfg) -> Dict[str, object]:
+    return SHAPES_BY_FAMILY[cfg.family]
+
+
+def all_cells() -> List[tuple]:
+    """The 40 (arch, shape) dry-run cells."""
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name in shapes_for(cfg):
+            cells.append((arch, shape_name))
+    return cells
+
+
+__all__ = [
+    "LMConfig", "LMShape", "MoEConfig", "GNNConfig", "GNNShape",
+    "RecsysConfig", "RecsysShape", "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES",
+    "list_archs", "get_config", "shapes_for", "all_cells",
+]

@@ -1,0 +1,27 @@
+"""ERCache core — the paper's contribution as composable JAX modules.
+
+Public surface:
+  cache        — CacheState, init_cache, lookup, insert (TTL semantics)
+  config       — CacheConfig / StageConfig / registry (paper Table 1)
+  server       — CachedEmbeddingServer (direct → miss-budget tower → failover)
+  combiner     — grouped update combination across models × stages (Fig. 5)
+  writebuf     — asynchronous write buffer (§3.5)
+  ratelimit    — regional token buckets (§3.7)
+  regions      — 13-region sticky routing + drain-test harness (§3.6, Fig. 10)
+  metrics      — hit rate / fallback rate / power savings / NE
+"""
+from repro.core.cache import CacheState, LookupResult, init_cache, insert, lookup
+from repro.core.config import CacheConfig, CacheConfigRegistry, StageConfig
+from repro.core.hashing import Key64
+from repro.core.server import (CachedEmbeddingServer, ServerState, ServeResult,
+                               init_server_state, serve_step_no_cache,
+                               SRC_COMPUTED, SRC_DIRECT, SRC_FAILOVER,
+                               SRC_FALLBACK)
+
+__all__ = [
+    "CacheState", "LookupResult", "init_cache", "insert", "lookup",
+    "CacheConfig", "CacheConfigRegistry", "StageConfig", "Key64",
+    "CachedEmbeddingServer", "ServerState", "ServeResult",
+    "init_server_state", "serve_step_no_cache",
+    "SRC_COMPUTED", "SRC_DIRECT", "SRC_FAILOVER", "SRC_FALLBACK",
+]

@@ -1,0 +1,231 @@
+"""ERCache core: a functional, set-associative, TTL-validated embedding cache.
+
+This is the paper's central data structure re-thought for a JAX/TPU serving
+fleet (DESIGN.md §2): instead of an out-of-mesh memcache tier, the cache lives
+in device HBM as a pytree of arrays and every operation is a pure function
+suitable for jit / pjit:
+
+  * ``n_buckets`` buckets × ``ways`` slots (memcache-slab-like set-associative
+    layout — this is what makes lookup a single contiguous (ways, dim) gather,
+    which the Pallas ``cache_probe`` kernel exploits).
+  * TTL-based validity and TTL-based eviction (paper §3.3): a hit requires the
+    key to match AND ``now - write_ts <= ttl``; inserts pick, within the
+    bucket:  key-match > empty > expired > oldest.
+  * No read-refresh: per the paper (§3.2, "Cache update"), entries are only
+    written when fresh embeddings come back from model inference.
+
+Timestamps are int32 milliseconds from the simulation epoch. Keys are 64-bit
+(hi, lo) int32 pairs (see hashing.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import EMPTY_HI, EMPTY_LO, Key64, bucket_index
+
+INT32_MIN = -0x80000000
+INT32_MAX = 0x7FFFFFFF
+# Timestamp value for never-written slots (also the minimum, so "oldest wins"
+# eviction prefers empty slots automatically on the ts tie-break).
+TS_EMPTY = jnp.int32(INT32_MIN)
+
+
+class CacheState(NamedTuple):
+    """All arrays of one cache namespace. Shardable along axis 0 (buckets)."""
+
+    key_hi: jnp.ndarray    # (n_buckets, ways) int32
+    key_lo: jnp.ndarray    # (n_buckets, ways) int32
+    write_ts: jnp.ndarray  # (n_buckets, ways) int32, ms
+    values: jnp.ndarray    # (n_buckets, ways, dim)
+
+    @property
+    def n_buckets(self) -> int:
+        return self.key_hi.shape[0]
+
+    @property
+    def ways(self) -> int:
+        return self.key_hi.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.values.shape[-1]
+
+    @property
+    def capacity(self) -> int:
+        return self.n_buckets * self.ways
+
+    def occupancy(self) -> jnp.ndarray:
+        """Fraction of slots holding an entry (any age)."""
+        occupied = ~((self.key_hi == EMPTY_HI) & (self.key_lo == EMPTY_LO))
+        return jnp.mean(occupied.astype(jnp.float32))
+
+
+class LookupResult(NamedTuple):
+    hit: jnp.ndarray     # (B,) bool — key present AND within TTL
+    values: jnp.ndarray  # (B, dim) — cached value where hit, zeros otherwise
+    age_ms: jnp.ndarray  # (B,) int32 — now - write_ts where hit, -1 otherwise
+
+
+def init_cache(n_buckets: int, ways: int, dim: int,
+               dtype=jnp.float32) -> CacheState:
+    """Create an empty cache. ``n_buckets`` must be a power of two."""
+    assert n_buckets & (n_buckets - 1) == 0, "n_buckets must be a power of 2"
+    shape = (n_buckets, ways)
+    return CacheState(
+        key_hi=jnp.full(shape, EMPTY_HI, dtype=jnp.int32),
+        key_lo=jnp.full(shape, EMPTY_LO, dtype=jnp.int32),
+        write_ts=jnp.full(shape, TS_EMPTY, dtype=jnp.int32),
+        values=jnp.zeros(shape + (dim,), dtype=dtype),
+    )
+
+
+def _probe(state: CacheState, keys: Key64):
+    """Shared probe: bucket index + per-way match/empty/ts gathers.
+
+    Returns (bucket (B,), match (B,W) bool, empty (B,W) bool, ts (B,W) int32).
+    """
+    bucket = bucket_index(keys, state.n_buckets)
+    k_hi = state.key_hi[bucket]          # (B, W)
+    k_lo = state.key_lo[bucket]
+    ts = state.write_ts[bucket]
+    match = (k_hi == keys.hi[:, None]) & (k_lo == keys.lo[:, None])
+    empty = (k_hi == EMPTY_HI) & (k_lo == EMPTY_LO)
+    return bucket, match, empty, ts
+
+
+def lookup(state: CacheState, keys: Key64, now_ms, ttl_ms) -> LookupResult:
+    """Batched TTL-validated lookup (pure-jnp reference path).
+
+    The Pallas ``cache_probe`` kernel implements the same contract fused
+    (kernels/cache_probe.py); tests assert they agree bit-exactly.
+    """
+    now_ms = jnp.int32(now_ms)
+    ttl_ms = jnp.int32(ttl_ms)
+    bucket, match, _, ts = _probe(state, keys)
+    fresh = (now_ms - ts) <= ttl_ms          # garbage for empty slots,
+    valid = match & fresh                    # but match is False there.
+    hit = jnp.any(valid, axis=-1)
+    # At most one way can match a given key (insert overwrites matches), so
+    # argmax of the bool picks the unique valid way when hit.
+    way = jnp.argmax(valid, axis=-1)
+    vals = state.values[bucket, way]
+    vals = jnp.where(hit[:, None], vals, jnp.zeros_like(vals))
+    age = jnp.where(hit, now_ms - ts[jnp.arange(keys.hi.shape[0]), way],
+                    jnp.int32(-1))
+    return LookupResult(hit=hit, values=vals, age_ms=age)
+
+
+def _ways_by_evictability(empty, expired, ts) -> jnp.ndarray:
+    """(B, W) → (B, W): way indices sorted best-to-evict first.
+
+    Order: empty > expired > oldest live (paper §3.3 TTL eviction).
+    Lexicographic (priority, ts) argsort in two stable stages (int32-safe).
+    """
+    priority = jnp.where(empty, 0, jnp.where(expired, 1, 2)).astype(jnp.int32)
+    order_ts = jnp.argsort(ts, axis=-1, stable=True)
+    prio_sorted = jnp.take_along_axis(priority, order_ts, axis=-1)
+    order_prio = jnp.argsort(prio_sorted, axis=-1, stable=True)
+    return jnp.take_along_axis(order_ts, order_prio, axis=-1)
+
+
+def plan_insert(state: CacheState, keys: Key64, now_ms, ttl_ms,
+                write_mask: Optional[jnp.ndarray] = None):
+    """Slot assignment for a batched insert, emulating sequential writes.
+
+    Returns (winner (B,) bool, bucket (B,), way (B,)). Semantics:
+
+    * identical keys within the batch: LAST occurrence wins (sequential
+      last-writer-wins), earlier ones are dropped;
+    * a key already in its bucket overwrites its own way (match priority);
+    * distinct new keys that hash to the same bucket get DISTINCT ways,
+      assigned in evictability order (empty > expired > oldest) by their
+      per-bucket rank — the fix for batched writes racing on one slot;
+    * > W distinct new keys in one bucket in one batch: ranks clip to the
+      last (worst) way and collide there (bounded, last-writer-wins) —
+      a cache may drop writes under pressure.
+    """
+    B = keys.hi.shape[0]
+    now_ms = jnp.int32(now_ms)
+    ttl_ms = jnp.int32(ttl_ms)
+    W = state.ways
+    bucket, match, empty, ts = _probe(state, keys)
+    expired = (~empty) & ((now_ms - ts) > ttl_ms)
+    live = (write_mask if write_mask is not None
+            else jnp.ones((B,), bool))
+
+    # ---- stage 1: per-key dedupe + per-bucket rank of distinct keys
+    idx = jnp.arange(B, dtype=jnp.int32)
+    bkt_live = jnp.where(live, bucket, jnp.int32(state.n_buckets))
+    order = jnp.lexsort((idx, keys.lo, keys.hi, bkt_live))
+    s_b = bkt_live[order]
+    s_hi = keys.hi[order]
+    s_lo = keys.lo[order]
+    nxt = lambda a, fill: jnp.concatenate([a[1:], jnp.full((1,), fill,
+                                                           a.dtype)])
+    same_as_next = ((s_b == nxt(s_b, -1)) & (s_hi == nxt(s_hi, 0))
+                    & (s_lo == nxt(s_lo, 0)))
+    winner_sorted = (~same_as_next) & (s_b < state.n_buckets)
+
+    # rank among distinct-key winners within each bucket group
+    win_i = winner_sorted.astype(jnp.int32)
+    cum = jnp.cumsum(win_i)
+    prev_b = jnp.concatenate([jnp.full((1,), -1, s_b.dtype), s_b[:-1]])
+    is_start = s_b != prev_b
+    seg_base = jax.lax.cummax(jnp.where(is_start, cum - win_i, -1))
+    rank_sorted = cum - 1 - seg_base
+
+    winner = jnp.zeros((B,), bool).at[order].set(winner_sorted)
+    rank = jnp.zeros((B,), jnp.int32).at[order].set(rank_sorted)
+
+    # ---- stage 2: way choice
+    has_match = jnp.any(match, axis=-1)
+    way_match = jnp.argmax(match, axis=-1).astype(jnp.int32)
+    evict_order = _ways_by_evictability(empty, expired, ts)     # (B, W)
+    way_rank = jnp.take_along_axis(
+        evict_order, jnp.clip(rank, 0, W - 1)[:, None], axis=-1)[:, 0]
+    way = jnp.where(has_match, way_match, way_rank.astype(jnp.int32))
+    return winner, bucket, way
+
+
+def insert(state: CacheState, keys: Key64, values: jnp.ndarray,
+           now_ms, ttl_ms,
+           write_mask: Optional[jnp.ndarray] = None,
+           ts_ms: Optional[jnp.ndarray] = None) -> CacheState:
+    """Batched insert/overwrite with sequential-write emulation (see
+    ``plan_insert``).
+
+    * ``write_mask`` disables individual writes (padding in the async write
+      buffer).
+    * ``ts_ms`` optionally carries per-entry compute timestamps: an embedding
+      computed at t but flushed at t+δ ages from t, not t+δ — async writes
+      (paper §3.5) move work off the critical path without faking freshness.
+    """
+    B = values.shape[0]
+    now_ms = jnp.int32(now_ms)
+    if ts_ms is None:
+        ts_vec = jnp.broadcast_to(now_ms, (B,))
+    else:
+        ts_vec = jnp.asarray(ts_ms, jnp.int32)
+
+    winner, bucket, way = plan_insert(state, keys, now_ms, ttl_ms,
+                                      write_mask)
+    # safety net: residual slot collisions (clipped ranks / match-vs-evict
+    # overlap) resolve last-writer-wins by slot target
+    target = jnp.where(winner, bucket * state.ways + way, jnp.int32(-1))
+    order = jnp.argsort(target, stable=True)
+    st = target[order]
+    nxt = jnp.concatenate([st[1:], jnp.full((1,), -2, jnp.int32)])
+    winner = jnp.zeros((B,), bool).at[order].set((st != nxt) & (st >= 0))
+
+    # Scatter with mode='drop': losers get an out-of-range bucket.
+    b_w = jnp.where(winner, bucket, jnp.int32(state.n_buckets))
+    return CacheState(
+        key_hi=state.key_hi.at[b_w, way].set(keys.hi, mode="drop"),
+        key_lo=state.key_lo.at[b_w, way].set(keys.lo, mode="drop"),
+        write_ts=state.write_ts.at[b_w, way].set(ts_vec, mode="drop"),
+        values=state.values.at[b_w, way].set(
+            values.astype(state.values.dtype), mode="drop"),
+    )

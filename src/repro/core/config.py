@@ -1,0 +1,92 @@
+"""Per-model cache configuration (paper §3.3, Table 1) + registry.
+
+ERCache lets every ranking model (or model *type*) opt in with its own TTL.
+Production values from the paper's evaluation:
+
+  * direct cache TTLs:   1–5 minutes (Table 2; NE-neutral up to 5 min, Table 4)
+  * failover cache TTLs: 1–2 hours   (Table 3)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+MINUTE_MS = 60_000
+HOUR_MS = 3_600_000
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Table 1 of the paper, plus the failover TTL and sizing knobs."""
+
+    model_id: int                       # unique id of the ranking model
+    model_type: str                     # family, e.g. "ctr", "cvr"
+    enable_flag: bool = True
+    cache_ttl_ms: int = 5 * MINUTE_MS   # direct-cache TTL
+    failover_ttl_ms: int = 1 * HOUR_MS  # failover-cache TTL
+    # TPU-native sizing knobs (no memcache tier to hide capacity in):
+    n_buckets: int = 1 << 14
+    ways: int = 8
+    value_dim: int = 64
+    # serving-tier provisioning: max tower inferences per serve batch,
+    # as a fraction of the batch (see core/server.py miss-budget compaction).
+    miss_budget_frac: float = 0.75
+
+
+@dataclasses.dataclass(frozen=True)
+class StageConfig:
+    """A (model, ranking-stage) pair — the unit the update combiner groups
+    across (paper Fig. 5: retrieval / first / second stages)."""
+
+    stage: str                          # "retrieval" | "first" | "second"
+    cache: CacheConfig
+
+
+class CacheConfigRegistry:
+    """enable/lookup by model_id with model_type fallback (paper Table 1:
+    caching can be enabled per model id OR per model type)."""
+
+    def __init__(self) -> None:
+        self._by_id: Dict[int, CacheConfig] = {}
+        self._by_type: Dict[str, CacheConfig] = {}
+
+    def register(self, cfg: CacheConfig) -> None:
+        self._by_id[cfg.model_id] = cfg
+
+    def register_type(self, cfg: CacheConfig) -> None:
+        self._by_type[cfg.model_type] = cfg
+
+    def get(self, model_id: int, model_type: Optional[str] = None
+            ) -> Optional[CacheConfig]:
+        cfg = self._by_id.get(model_id)
+        if cfg is None and model_type is not None:
+            cfg = self._by_type.get(model_type)
+        if cfg is not None and not cfg.enable_flag:
+            return None
+        return cfg
+
+
+def paper_production_configs() -> Dict[str, StageConfig]:
+    """The (task × stage) cells of Tables 2–3, with the paper's TTLs."""
+    cells = {}
+    rows = [
+        # (name, model_id, type, stage, direct ttl min, failover ttl h)
+        ("cvr_retrieval", 10, "cvr", "retrieval", 5, 1),
+        ("ctr_retrieval", 11, "ctr", "retrieval", 5, 1),
+        ("cvr_first_a", 12, "cvr", "first", 5, 1),
+        ("cvr_first_b", 13, "cvr", "first", 5, 1),
+        ("ctr_first_a", 14, "ctr", "first", 5, 1),
+        ("ctr_first_b", 15, "ctr", "first", 5, 1),
+        ("ctr_second", 16, "ctr", "second", 5, 2),
+        ("cvr_second", 17, "cvr", "second", 1, 2),
+    ]
+    for name, mid, mtype, stage, ttl_min, fo_h in rows:
+        cells[name] = StageConfig(
+            stage=stage,
+            cache=CacheConfig(
+                model_id=mid, model_type=mtype,
+                cache_ttl_ms=ttl_min * MINUTE_MS,
+                failover_ttl_ms=fo_h * HOUR_MS,
+            ),
+        )
+    return cells

@@ -1,0 +1,86 @@
+"""Vectorized hashing for 64-bit cache keys on a no-x64 JAX build.
+
+JAX defaults to 32-bit integer arrays (x64 disabled). Production user IDs are
+64-bit, so keys are carried everywhere as an (hi, lo) pair of int32 arrays.
+The hash is an xxhash/murmur-style avalanche over the two words, computed in
+uint32 arithmetic (wrap-around semantics are what we want).
+
+All functions are shape-polymorphic and jit-friendly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# Sentinel key marking an empty slot. Real user ids are non-negative, so a
+# negative hi-word can never collide with a real key.
+EMPTY_HI = jnp.int32(-0x80000000)
+EMPTY_LO = jnp.int32(0)
+
+_PRIME32_1 = jnp.uint32(0x9E3779B1)
+_PRIME32_2 = jnp.uint32(0x85EBCA77)
+_PRIME32_3 = jnp.uint32(0xC2B2AE3D)
+_PRIME32_4 = jnp.uint32(0x27D4EB2F)
+_PRIME32_5 = jnp.uint32(0x165667B1)
+
+
+class Key64(NamedTuple):
+    """A batch of 64-bit keys as two int32 words."""
+
+    hi: jnp.ndarray
+    lo: jnp.ndarray
+
+    @staticmethod
+    def from_int(ids) -> "Key64":
+        """Build from python/numpy int64-like ids (host side, pre-jit)."""
+        import numpy as np
+
+        ids = np.asarray(ids, dtype=np.int64)
+        hi = (ids >> 32).astype(np.int32)
+        lo = (ids & 0xFFFFFFFF).astype(np.uint32).astype(np.int64)
+        # reinterpret the low 32 bits as int32
+        lo = lo.astype(np.uint32).view(np.int32)
+        return Key64(jnp.asarray(hi), jnp.asarray(lo))
+
+    def equal(self, other: "Key64") -> jnp.ndarray:
+        return (self.hi == other.hi) & (self.lo == other.lo)
+
+    def is_empty(self) -> jnp.ndarray:
+        return (self.hi == EMPTY_HI) & (self.lo == EMPTY_LO)
+
+
+def _rotl32(x: jnp.ndarray, r: int) -> jnp.ndarray:
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def _avalanche(h: jnp.ndarray) -> jnp.ndarray:
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * _PRIME32_2
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * _PRIME32_3
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def hash_u32(key: Key64, seed: int = 0) -> jnp.ndarray:
+    """xxhash32-style hash of a 64-bit key → uint32.
+
+    Deterministic, vectorized, wrap-around uint32 arithmetic.
+    """
+    hi = key.hi.astype(jnp.uint32)
+    lo = key.lo.astype(jnp.uint32)
+    h = jnp.uint32(seed) + _PRIME32_5 + jnp.uint32(8)
+    h = h + lo * _PRIME32_3
+    h = _rotl32(h, 17) * _PRIME32_4
+    h = h + hi * _PRIME32_3
+    h = _rotl32(h, 17) * _PRIME32_4
+    return _avalanche(h)
+
+
+def bucket_index(key: Key64, n_buckets: int, seed: int = 0) -> jnp.ndarray:
+    """Map keys to bucket indices in [0, n_buckets). n_buckets must be a
+    power of two (mask instead of modulo)."""
+    assert n_buckets & (n_buckets - 1) == 0, "n_buckets must be a power of 2"
+    h = hash_u32(key, seed)
+    return (h & jnp.uint32(n_buckets - 1)).astype(jnp.int32)

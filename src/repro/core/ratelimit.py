@@ -1,0 +1,61 @@
+"""Regional token-bucket rate limiter (paper §3.7).
+
+ERCache "filters requests based on regional thresholds if there is a sudden
+spike in QPS" — protecting the cache tier from cascading effects during
+traffic oscillations / regional outages / site events. Deterministic,
+sim-clock driven; lives in the (Python) serving tier, not inside jitted
+programs, exactly like the production placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class TokenBucket:
+    rate_per_s: float           # sustained regional threshold
+    burst: float                # bucket capacity
+    tokens: float = 0.0
+    last_ms: int = 0
+    admitted: int = 0
+    rejected: int = 0
+
+    def __post_init__(self) -> None:
+        if self.tokens == 0.0:
+            self.tokens = self.burst
+
+    def admit(self, now_ms: int, n: int = 1) -> int:
+        """Try to admit ``n`` requests at ``now_ms``; returns #admitted.
+
+        Partial admission is allowed (a batch may be trimmed), matching a
+        threshold filter that sheds the spike's excess rather than the whole
+        batch.
+        """
+        dt = max(now_ms - self.last_ms, 0) / 1e3
+        self.tokens = min(self.burst, self.tokens + dt * self.rate_per_s)
+        self.last_ms = max(self.last_ms, now_ms)
+        ok = int(min(n, self.tokens))
+        self.tokens -= ok
+        self.admitted += ok
+        self.rejected += n - ok
+        return ok
+
+
+@dataclasses.dataclass
+class RegionalRateLimiter:
+    """One bucket per region; thresholds provisioned per-region."""
+
+    buckets: dict
+
+    @staticmethod
+    def uniform(regions, rate_per_s: float, burst_s: float = 1.0
+                ) -> "RegionalRateLimiter":
+        return RegionalRateLimiter(buckets={
+            r: TokenBucket(rate_per_s=rate_per_s, burst=rate_per_s * burst_s)
+            for r in regions})
+
+    def admit(self, region, now_ms: int, n: int = 1) -> int:
+        return self.buckets[region].admit(now_ms, n)
+
+    def stats(self):
+        return {r: (b.admitted, b.rejected) for r, b in self.buckets.items()}

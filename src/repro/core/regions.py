@@ -1,0 +1,156 @@
+"""Regional consistency + drain-test simulation (paper §3.6–3.7, Fig. 10).
+
+The production deployment spans 13 main regions; requests are routed to the
+region that served the user previously ("good locality"), each region holds
+its own cache, and a regional rate limiter sheds QPS spikes. The paper's
+reliability evidence is a 6-hour drain test: one region is taken down, its
+traffic redistributes, and the global cache hit rate stays stable.
+
+Regions are a datacenter concept orthogonal to one TPU mesh, so this layer is
+a deterministic discrete-time simulator over jitted per-region cache ops: it
+drives CachedEmbeddingServer instances (one per region) with a shared
+request stream from data/access_patterns.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.ratelimit import RegionalRateLimiter
+
+
+@dataclasses.dataclass
+class RegionRouter:
+    """Sticky routing: a user keeps hitting their home region until a drain
+    (or random re-shuffle with prob. 1-locality) moves them."""
+
+    n_regions: int
+    locality: float = 0.98           # prob. request lands in home region
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+        self._home: Dict[int, int] = {}
+        self.drained: set = set()
+
+    def _fresh_region(self, exclude: Optional[set] = None) -> int:
+        live = [r for r in range(self.n_regions)
+                if r not in self.drained and r not in (exclude or set())]
+        return int(self._rng.choice(live))
+
+    def route(self, user_id: int) -> int:
+        home = self._home.get(user_id)
+        if home is None or home in self.drained:
+            home = self._fresh_region()
+            self._home[user_id] = home
+        if self._rng.random() > self.locality:
+            # cross-region excursion (does NOT move home — the paper's
+            # "most of the time" qualifier)
+            return self._fresh_region()
+        return home
+
+    def drain(self, region: int) -> None:
+        """Take a region down; its users re-home lazily on next request."""
+        self.drained.add(region)
+
+    def undrain(self, region: int) -> None:
+        self.drained.discard(region)
+
+
+@dataclasses.dataclass
+class DrainTestHarness:
+    """Runs a request stream through per-region servers and reports the
+    hit-rate timeline (the Fig. 10 reproduction)."""
+
+    servers: list                    # one CachedEmbeddingServer per region
+    states: list                     # matching ServerState list
+    params: object
+    router: RegionRouter
+    limiter: RegionalRateLimiter
+    feature_fn: object               # (user_ids ndarray, now_ms) -> features
+    key_fn: object                   # (user_ids ndarray) -> Key64
+    batch: int = 256
+    flush_every_ms: int = 1_000
+
+    def run(self, events: np.ndarray, times_ms: np.ndarray,
+            drain_region: Optional[int] = None,
+            drain_window_ms: Optional[tuple] = None,
+            bucket_ms: int = 600_000) -> Dict[str, List[float]]:
+        """events: (N,) user ids ordered by times_ms. Returns per-time-bucket
+        hit rate + per-region load trace."""
+        n_regions = len(self.servers)
+        # accumulate per-bucket counters
+        timeline: Dict[int, List[int]] = {}
+        region_load: Dict[int, np.ndarray] = {}
+        pending: Dict[int, List[int]] = {r: [] for r in range(n_regions)}
+        pending_t: Dict[int, List[int]] = {r: [] for r in range(n_regions)}
+        last_flush = {r: 0 for r in range(n_regions)}
+        drained_now = False
+
+        def bucket_of(t: int) -> int:
+            return int(t // bucket_ms)
+
+        def ensure(b: int) -> None:
+            if b not in timeline:
+                timeline[b] = [0, 0]                  # [hits, requests]
+                region_load[b] = np.zeros(n_regions, np.int64)
+
+        def serve_region(r: int) -> None:
+            ids = pending[r][:self.batch]
+            ts = pending_t[r][:self.batch]
+            del pending[r][:len(ids)], pending_t[r][:len(ids)]
+            if not ids:
+                return
+            now = int(ts[-1])
+            ids_np = np.asarray(ids, np.int64)
+            pad = self.batch - len(ids)
+            if pad:
+                ids_np = np.concatenate([ids_np, np.full(pad, -1, np.int64)])
+            keys = self.key_fn(ids_np)
+            feats = self.feature_fn(ids_np, now)
+            res = self.servers[r].jit_serve_step(
+                self.params, self.states[r], keys, feats, now)
+            self.states[r] = res.state
+            src = np.asarray(res.source)[:len(ids)]
+            b = bucket_of(now)
+            ensure(b)
+            timeline[b][0] += int((src == 0).sum())
+            timeline[b][1] += len(ids)
+            region_load[b][r] += len(ids)
+            if now - last_flush[r] >= self.flush_every_ms:
+                self.states[r] = self.servers[r].jit_flush(self.states[r], now)
+                last_flush[r] = now
+
+        for uid, t in zip(events, times_ms):
+            t = int(t)
+            if drain_window_ms is not None and drain_region is not None:
+                lo, hi = drain_window_ms
+                if lo <= t < hi and not drained_now:
+                    self.router.drain(drain_region)
+                    drained_now = True
+                elif t >= hi and drained_now:
+                    self.router.undrain(drain_region)
+                    drained_now = False
+            r = self.router.route(int(uid))
+            if self.limiter.admit(r, t, 1) == 0:
+                b = bucket_of(t)
+                ensure(b)
+                timeline[b][1] += 1          # shed request counts as non-hit
+                continue
+            pending[r].append(int(uid))
+            pending_t[r].append(t)
+            if len(pending[r]) >= self.batch:
+                serve_region(r)
+        for r in range(n_regions):
+            while pending[r]:
+                serve_region(r)
+
+        buckets = sorted(timeline)
+        return {
+            "bucket_ms": [b * bucket_ms for b in buckets],
+            "hit_rate": [timeline[b][0] / max(timeline[b][1], 1)
+                         for b in buckets],
+            "region_load": [region_load[b].tolist() for b in buckets],
+        }

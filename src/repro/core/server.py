@@ -1,0 +1,186 @@
+"""CachedEmbeddingServer — the paper's Fig. 3 sequence diagram as one
+static-shape JAX program (DESIGN.md §2, "miss-budget compaction").
+
+Per serve batch:
+
+  1. **Direct cache check** — TTL-validated probe for every request.
+  2. **Compaction** — misses are compacted to the front (stable argsort on the
+     hit flag) and the user tower runs on the first ``miss_budget`` of them
+     only. ``miss_budget`` is the provisioned-compute knob: the paper's
+     "constrained computational resources" as a literal static shape.
+  3. **Failover cache assistance** — inference *failures* (injected or real)
+     and miss-budget *overflow* consult the long-TTL failover cache; what it
+     cannot recover becomes a **model fallback** (default embedding), the
+     paper's fallback-rate metric.
+  4. **Cache update** — computed embeddings are appended to the async write
+     buffer (one combined record per user; flushed off the critical path).
+
+Every request's provenance is reported (DIRECT/COMPUTED/FAILOVER/FALLBACK) so
+the serving tier can account Tables 2–3 mechanically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as cache_lib
+from repro.core import writebuf as wb_lib
+from repro.core.cache import CacheState
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64
+from repro.core.writebuf import WriteBuffer
+
+# Provenance codes (per request)
+SRC_DIRECT = 0
+SRC_COMPUTED = 1
+SRC_FAILOVER = 2
+SRC_FALLBACK = 3
+
+
+class ServerState(NamedTuple):
+    direct: CacheState
+    failover: CacheState
+    writebuf: WriteBuffer
+
+
+class ServeResult(NamedTuple):
+    embeddings: jnp.ndarray   # (B, D)
+    source: jnp.ndarray       # (B,) int32 — SRC_* provenance
+    age_ms: jnp.ndarray       # (B,) int32 — staleness of the served embedding
+    state: ServerState        # updated (write buffer appended)
+    stats: dict               # scalar counters
+
+
+def init_server_state(cfg: CacheConfig, dtype=jnp.float32,
+                      writebuf_capacity: int = 4096) -> ServerState:
+    return ServerState(
+        direct=cache_lib.init_cache(cfg.n_buckets, cfg.ways, cfg.value_dim,
+                                    dtype),
+        failover=cache_lib.init_cache(cfg.n_buckets, cfg.ways, cfg.value_dim,
+                                      dtype),
+        writebuf=wb_lib.init_writebuf(writebuf_capacity, cfg.value_dim, dtype),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CachedEmbeddingServer:
+    """Binds a user-tower fn to ERCache semantics.
+
+    ``tower_fn(params, features) -> (B, D)`` must be shape-polymorphic in B
+    (it is called with ``miss_budget`` rows).
+    """
+
+    cfg: CacheConfig
+    tower_fn: Callable
+    miss_budget: int
+    fallback_value: float = 0.0   # default embedding on total fallback
+
+    # ----------------------------------------------------------------- serve
+    def serve_step(self, params, state: ServerState, keys: Key64,
+                   features, now_ms, failure_mask: Optional[jnp.ndarray] = None,
+                   ) -> ServeResult:
+        B = keys.hi.shape[0]
+        M = self.miss_budget
+        cfg = self.cfg
+        now_ms = jnp.int32(now_ms)
+        if failure_mask is None:
+            failure_mask = jnp.zeros((B,), bool)
+
+        # (1) direct cache check ------------------------------------------
+        direct = cache_lib.lookup(state.direct, keys, now_ms, cfg.cache_ttl_ms)
+
+        # (2) compaction: misses first, stable --------------------------------
+        order = jnp.argsort(direct.hit, stable=True)        # False (miss) first
+        sel = order[:M]                                     # (M,) batch indices
+        sel_is_miss = ~direct.hit[sel]                      # tail may be hits
+
+        sel_features = jax.tree_util.tree_map(lambda x: x[sel], features)
+        towered = self.tower_fn(params, sel_features)       # (M, D)
+        towered = towered.astype(state.direct.values.dtype)
+
+        sel_failed = failure_mask[sel]
+        sel_ok = sel_is_miss & ~sel_failed                  # produced embedding
+
+        # (3) scatter computed rows back; find who still needs help -------
+        computed = jnp.zeros((B,), bool).at[sel].set(sel_ok)
+        emb = direct.values
+        emb = emb.at[sel].set(jnp.where(sel_ok[:, None], towered, emb[sel]))
+        unresolved = ~direct.hit & ~computed                # overflow ∪ failed
+
+        fo = cache_lib.lookup(state.failover, keys, now_ms, cfg.failover_ttl_ms)
+        use_fo = unresolved & fo.hit
+        emb = jnp.where(use_fo[:, None], fo.values.astype(emb.dtype), emb)
+        fallback = unresolved & ~fo.hit
+        emb = jnp.where(fallback[:, None],
+                        jnp.full_like(emb, self.fallback_value), emb)
+
+        source = jnp.where(
+            direct.hit, SRC_DIRECT,
+            jnp.where(computed, SRC_COMPUTED,
+                      jnp.where(use_fo, SRC_FAILOVER, SRC_FALLBACK))
+        ).astype(jnp.int32)
+        age = jnp.where(direct.hit, direct.age_ms,
+                        jnp.where(computed, 0,
+                                  jnp.where(use_fo, fo.age_ms, -1)))
+
+        # (4) async cache update: append computed rows to the write buffer
+        sel_keys = Key64(hi=keys.hi[sel], lo=keys.lo[sel])
+        new_wb = wb_lib.append(state.writebuf, sel_keys, towered, now_ms,
+                               mask=sel_ok)
+
+        stats = {
+            "requests": jnp.int32(B),
+            "direct_hits": jnp.sum(direct.hit.astype(jnp.int32)),
+            "tower_inferences": jnp.sum(sel_is_miss.astype(jnp.int32)),
+            "tower_failures": jnp.sum((sel_is_miss & sel_failed).astype(jnp.int32)),
+            # misses beyond the provisioned budget (never attempted)
+            "overflow": jnp.sum((~direct.hit).astype(jnp.int32))
+                - jnp.sum(sel_is_miss.astype(jnp.int32)),
+            "failover_hits": jnp.sum(use_fo.astype(jnp.int32)),
+            "fallbacks": jnp.sum(fallback.astype(jnp.int32)),
+            "mean_age_ms": jnp.sum(jnp.where(age > 0, age, 0)) /
+                jnp.maximum(jnp.sum((age > 0).astype(jnp.int32)), 1),
+        }
+        return ServeResult(
+            embeddings=emb, source=source, age_ms=age.astype(jnp.int32),
+            state=ServerState(direct=state.direct, failover=state.failover,
+                              writebuf=new_wb),
+            stats=stats)
+
+    # ----------------------------------------------------------------- flush
+    def flush(self, state: ServerState, now_ms) -> ServerState:
+        """Apply the async write buffer to BOTH caches (same embeddings, the
+        failover simply keeps them valid longer — paper §4.4). Runs off the
+        serving critical path."""
+        direct, wb1 = wb_lib.flush(state.writebuf, state.direct, now_ms,
+                                   self.cfg.cache_ttl_ms)
+        failover, _ = wb_lib.flush(state.writebuf, state.failover, now_ms,
+                                   self.cfg.failover_ttl_ms)
+        return ServerState(direct=direct, failover=failover, writebuf=wb1)
+
+    # ------------------------------------------------------------------ jit
+    @functools.cached_property
+    def jit_serve_step(self):
+        return jax.jit(self.serve_step)
+
+    @functools.cached_property
+    def jit_flush(self):
+        return jax.jit(self.flush)
+
+
+def serve_step_no_cache(tower_fn: Callable, params, keys: Key64, features,
+                        failure_mask: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The cache-disabled baseline (the paper's "w/o cache" arm): every
+    request pays a tower inference; failures go straight to model fallback."""
+    emb = tower_fn(params, features)
+    B = emb.shape[0]
+    if failure_mask is None:
+        failure_mask = jnp.zeros((B,), bool)
+    emb = jnp.where(failure_mask[:, None], jnp.zeros_like(emb), emb)
+    source = jnp.where(failure_mask, SRC_FALLBACK, SRC_COMPUTED)
+    return emb, source.astype(jnp.int32)

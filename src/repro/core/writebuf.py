@@ -1,0 +1,87 @@
+"""Asynchronous write buffer (paper §3.5).
+
+Production ERCache sends one grouped write RPC per user *asynchronously* so
+the write never sits on the serving critical path. The JAX analogue: the
+serve step appends (key, value, ts) records to a fixed-size ring buffer
+pytree — an O(B) scatter, no cache-table traffic — and a separate ``flush``
+program (dispatched off the latency path, e.g. on the next step's bubble)
+performs the actual cache inserts.
+
+Entries carry their compute timestamp so deferred flushing never inflates
+freshness (see cache.insert ``ts_ms``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import cache as cache_lib
+from repro.core.hashing import Key64
+
+
+class WriteBuffer(NamedTuple):
+    key_hi: jnp.ndarray   # (cap,) int32
+    key_lo: jnp.ndarray   # (cap,) int32
+    ts_ms: jnp.ndarray    # (cap,) int32
+    values: jnp.ndarray   # (cap, dim)
+    count: jnp.ndarray    # () int32 — total appended since last flush (may
+                          # exceed cap; ring overwrites oldest)
+
+    @property
+    def capacity(self) -> int:
+        return self.key_hi.shape[0]
+
+
+def init_writebuf(capacity: int, dim: int, dtype=jnp.float32) -> WriteBuffer:
+    return WriteBuffer(
+        key_hi=jnp.zeros((capacity,), jnp.int32),
+        key_lo=jnp.zeros((capacity,), jnp.int32),
+        ts_ms=jnp.zeros((capacity,), jnp.int32),
+        values=jnp.zeros((capacity, dim), dtype),
+        count=jnp.int32(0),
+    )
+
+
+def append(buf: WriteBuffer, keys: Key64, values: jnp.ndarray,
+           ts_ms, mask: jnp.ndarray) -> WriteBuffer:
+    """Append masked records at the ring head. O(B) scatter."""
+    B = values.shape[0]
+    ts_vec = jnp.broadcast_to(jnp.asarray(ts_ms, jnp.int32), (B,))
+    # Compact live records to the front so ring slots aren't wasted on pads.
+    order = jnp.argsort(~mask, stable=True)          # live first
+    n_live = jnp.sum(mask.astype(jnp.int32))
+    pos_in_batch = jnp.arange(B, dtype=jnp.int32)
+    slot = (buf.count + pos_in_batch) % buf.capacity
+    # positions beyond n_live are dropped
+    slot = jnp.where(pos_in_batch < n_live, slot, jnp.int32(buf.capacity))
+    src = order
+    return WriteBuffer(
+        key_hi=buf.key_hi.at[slot].set(keys.hi[src], mode="drop"),
+        key_lo=buf.key_lo.at[slot].set(keys.lo[src], mode="drop"),
+        ts_ms=buf.ts_ms.at[slot].set(ts_vec[src], mode="drop"),
+        values=buf.values.at[slot].set(
+            values[src].astype(buf.values.dtype), mode="drop"),
+        count=buf.count + n_live,
+    )
+
+
+def flush(buf: WriteBuffer, state: cache_lib.CacheState, now_ms, ttl_ms
+          ) -> Tuple[cache_lib.CacheState, WriteBuffer]:
+    """Apply all buffered records to the cache; reset the buffer.
+
+    Records are applied in append order (ring order), so last-writer-wins
+    matches the true write stream. Slots beyond ``count`` are masked out.
+    """
+    cap = buf.capacity
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    n_live = jnp.minimum(buf.count, cap)
+    # Ring start: if count > cap the oldest surviving record is at count % cap.
+    start = jnp.where(buf.count > cap, buf.count % cap, 0)
+    ring = (start + idx) % cap
+    live = idx < n_live
+    keys = Key64(hi=buf.key_hi[ring], lo=buf.key_lo[ring])
+    new_state = cache_lib.insert(
+        state, keys, buf.values[ring], now_ms, ttl_ms,
+        write_mask=live, ts_ms=buf.ts_ms[ring])
+    return new_state, buf._replace(count=jnp.int32(0))

@@ -1,0 +1,2 @@
+"""Synthetic data substrates: request streams (Fig. 2 access patterns),
+clickstreams with user drift (Table 4), LM token batches, graphs."""

@@ -1,0 +1,156 @@
+"""Explicit-collective building blocks (shard_map) for the serving path.
+
+The jit/GSPMD path covers most programs; the places where manual collectives
+beat the partitioner are implemented here:
+
+  * ``seq_sharded_decode_attention`` — flash-decode with the KV cache
+    sequence-sharded across one or more mesh axes. Each shard computes a
+    partial online-softmax (max, sum, weighted-acc) over its local KV slice;
+    the combine is two cheap psums of (B, H) + (B, H, D) — bytes independent
+    of S — instead of all-gathering the KV cache (bytes ∝ S·D). This is the
+    long-context-decode enabler for ``decode_32k`` / ``long_500k``.
+
+  * ``sharded_topk_scores`` — candidate-sharded retrieval scoring where each
+    shard scores its local candidate rows; only (B, k) winners cross shards.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+NEG_INF = -1e30
+
+AxisNames = Union[str, Tuple[str, ...]]
+
+
+def _as_tuple(axis: AxisNames) -> Tuple[str, ...]:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def _combined_axis_index(axes: Tuple[str, ...]) -> jnp.ndarray:
+    """Row-major linear index over several mesh axes."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _local_decode_partials(q, k, v, *, kv_len_mask: Optional[jnp.ndarray]):
+    """One-token attention partials over a local KV slice.
+
+    q: (B, Hq, hd); k, v: (B, Sl, Hkv, hd). Returns (m, l, acc):
+    m, l: (B, Hq) float32; acc: (B, Hq, hd) float32.
+    """
+    B, Sl, Hkv, hd = k.shape
+    n_rep = q.shape[1] // Hkv
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    qg = qf.reshape(B, Hkv, n_rep, hd)
+    s = jnp.einsum("bknd,bskd->bkns", qg, kf).reshape(B, -1, Sl)
+    if kv_len_mask is not None:
+        s = jnp.where(kv_len_mask[:, None, :], s, NEG_INF)
+    m = s.max(axis=-1)                                    # (B, Hq)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    pg = p.reshape(B, Hkv, n_rep, Sl)
+    acc = jnp.einsum("bkns,bskd->bknd", pg, vf).reshape(B, -1, hd)
+    return m, l, acc
+
+
+def decode_attention_local(q, k, v, kv_valid_len=None):
+    """Single-device reference for the sharded decode (tests/smoke)."""
+    if kv_valid_len is not None:
+        mask = jnp.arange(k.shape[1])[None, :] < kv_valid_len[:, None]
+    else:
+        mask = None
+    m, l, acc = _local_decode_partials(q, k, v, kv_len_mask=mask)
+    return (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+
+
+def seq_sharded_decode_attention(q, k, v, mesh: Mesh,
+                                 seq_axes: AxisNames = "model",
+                                 batch_axes: Optional[AxisNames] = None,
+                                 kv_valid_len: Optional[jnp.ndarray] = None):
+    """Decode attention with KV sequence-sharded over ``seq_axes``.
+
+    q: (B, Hq, hd) replicated along ``seq_axes``; k, v: (B, S, Hkv, hd) with
+    S sharded. The merge is the standard online-softmax combine: pmax of the
+    partial maxima, psum of the rescaled sums/accumulators. Collective bytes
+    per step: (B·Hq) + (B·Hq·hd) floats — independent of S.
+    """
+    seq_axes = _as_tuple(seq_axes)
+    if batch_axes is None:
+        batch_axes = tuple(a for a in mesh.axis_names if a not in seq_axes)
+    else:
+        batch_axes = _as_tuple(batch_axes)
+    # only shard batch over axes whose cumulative size divides it
+    bsz = q.shape[0]
+    keep, prod = [], 1
+    for a in batch_axes:
+        if bsz % (prod * mesh.shape[a]) == 0:
+            keep.append(a)
+            prod *= mesh.shape[a]
+    batch_axes = tuple(keep)
+
+    def body(q_l, k_l, v_l, valid_l):
+        Sl = k_l.shape[1]
+        shard = _combined_axis_index(seq_axes)
+        if valid_l is not None:
+            pos = shard * Sl + jnp.arange(Sl)[None, :]
+            mask = pos < valid_l[:, None]
+        else:
+            mask = None
+        m, l, acc = _local_decode_partials(q_l, k_l, v_l, kv_len_mask=mask)
+        m_g = jax.lax.pmax(m, seq_axes)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, seq_axes)
+        acc_g = jax.lax.psum(acc * corr[..., None], seq_axes)
+        out = acc_g / jnp.maximum(l_g[..., None], 1e-30)
+        return out.astype(q_l.dtype)
+
+    bspec = batch_axes if batch_axes else None
+    qspec = P(bspec)
+    kvspec = P(bspec, seq_axes if len(seq_axes) > 1 else seq_axes[0])
+    vspec = P(bspec)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec, kvspec, kvspec, vspec),
+        out_specs=qspec,
+        check_vma=False,
+    )(q, k, v, kv_valid_len)
+
+
+def sharded_topk_scores(query, candidates, k_top: int, mesh: Mesh,
+                        cand_axes: AxisNames = ("data", "model")):
+    """Retrieval scoring: (B, D) query vs (N, D) candidates row-sharded over
+    ``cand_axes``. Local matmul + local top-k; only (B, k) winners per shard
+    cross the interconnect (all-gather), then a final re-top-k."""
+    cand_axes = _as_tuple(cand_axes)
+    cand_axes = tuple(a for a in cand_axes if a in mesh.axis_names)
+
+    def body(q_l, c_l):
+        shard = _combined_axis_index(cand_axes)
+        scores = jnp.einsum("bd,nd->bn", q_l.astype(jnp.float32),
+                            c_l.astype(jnp.float32))
+        vals, idx = jax.lax.top_k(scores, k_top)
+        idx = idx + shard * c_l.shape[0]
+        vals_g = vals
+        idx_g = idx
+        for a in cand_axes:
+            vals_g = jax.lax.all_gather(vals_g, a, axis=-1, tiled=True)
+            idx_g = jax.lax.all_gather(idx_g, a, axis=-1, tiled=True)
+        v2, pos = jax.lax.top_k(vals_g, k_top)
+        i2 = jnp.take_along_axis(idx_g, pos, axis=-1)
+        return v2, i2
+
+    spec = cand_axes if len(cand_axes) > 1 else cand_axes[0]
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(spec, None)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )(query, candidates)

@@ -1,0 +1,194 @@
+"""Sharded, atomic, resumable checkpoints (npz-per-shard + json manifest).
+
+Layout::
+
+    <dir>/step_000123/
+        manifest.json      # tree structure, leaf shapes/dtypes, shard map
+        shard_00000.npz    # flat leaves (or row-ranges of big leaves)
+        ...
+        COMMITTED          # written LAST — absence marks a torn checkpoint
+
+Atomicity: writes go to ``step_X.tmp-<nonce>`` and the directory is renamed
+into place only after the COMMITTED marker is fsync'd; ``latest_step`` skips
+uncommitted/torn directories, so a coordinator killed mid-save restarts from
+the previous complete checkpoint (crash-consistency test covers this).
+
+Large leaves are row-split into ``max_shard_bytes`` pieces — the multi-host
+pattern where each host writes its own shard range; here one process writes
+all of them, but restore-side reassembly is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import secrets
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_COMMITTED = "COMMITTED"
+
+
+def _leaf_paths(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save(directory: str, step: int, tree: PyTree,
+         max_shard_bytes: int = 256 << 20) -> str:
+    """Write one atomic checkpoint; returns the final path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp-" + secrets.token_hex(4)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = _leaf_paths(tree)
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}, "shards": []}
+    shard_idx = 0
+    buf: Dict[str, np.ndarray] = {}
+    buf_bytes = 0
+
+    def flush():
+        nonlocal shard_idx, buf, buf_bytes
+        if not buf:
+            return
+        name = f"shard_{shard_idx:05d}.npz"
+        np.savez(os.path.join(tmp, name), **buf)
+        manifest["shards"].append(name)
+        shard_idx += 1
+        buf, buf_bytes = {}, 0
+
+    for key, leaf in leaves:
+        arr = np.asarray(leaf)
+        entry = {"shape": list(arr.shape), "dtype": str(arr.dtype),
+                 "parts": []}
+        if arr.nbytes > max_shard_bytes and arr.ndim >= 1 and arr.shape[0] > 1:
+            rows_per = max(1, int(max_shard_bytes
+                                  // max(arr.nbytes // arr.shape[0], 1)))
+            for lo in range(0, arr.shape[0], rows_per):
+                hi = min(lo + rows_per, arr.shape[0])
+                pname = f"{key}::rows{lo}_{hi}"
+                flush()
+                buf[pname] = arr[lo:hi]
+                entry["parts"].append({"name": pname, "rows": [lo, hi],
+                                       "shard": shard_idx})
+                flush()
+        else:
+            if buf_bytes + arr.nbytes > max_shard_bytes:
+                flush()
+            buf[key] = arr
+            buf_bytes += arr.nbytes
+            entry["parts"].append({"name": key, "rows": None,
+                                   "shard": shard_idx})
+        manifest["leaves"][key] = entry
+    flush()
+
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    # commit marker, then atomic rename
+    with open(os.path.join(tmp, _COMMITTED), "w") as f:
+        f.write("ok")
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Highest committed step; torn checkpoints are skipped."""
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        if not name.startswith("step_") or ".tmp-" in name:
+            continue
+        if not os.path.exists(os.path.join(directory, name, _COMMITTED)):
+            continue
+        try:
+            s = int(name.split("_")[1])
+        except ValueError:
+            continue
+        best = s if best is None else max(best, s)
+    return best
+
+
+def restore(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    shard_data: Dict[int, Any] = {}
+
+    def shard(i: int):
+        if i not in shard_data:
+            shard_data[i] = np.load(
+                os.path.join(path, manifest["shards"][i]))
+        return shard_data[i]
+
+    out_by_key = {}
+    for key, entry in manifest["leaves"].items():
+        arr = np.empty(entry["shape"], dtype=entry["dtype"])
+        for part in entry["parts"]:
+            data = shard(part["shard"])[part["name"]]
+            if part["rows"] is None:
+                arr = data
+            else:
+                lo, hi = part["rows"]
+                arr[lo:hi] = data
+        out_by_key[key] = arr
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pth, leaf in flat:
+        key = jax.tree_util.keystr(pth)
+        arr = out_by_key[key]
+        assert list(arr.shape) == list(leaf.shape), (key, arr.shape,
+                                                     leaf.shape)
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def gc_old(directory: str, keep_last: int = 3) -> None:
+    """Delete all but the newest ``keep_last`` committed checkpoints and any
+    stale tmp directories."""
+    if not os.path.isdir(directory):
+        return
+    steps = []
+    for name in os.listdir(directory):
+        full = os.path.join(directory, name)
+        if ".tmp-" in name:
+            shutil.rmtree(full, ignore_errors=True)
+            continue
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(full, _COMMITTED)):
+            steps.append((int(name.split("_")[1]), full))
+    for _, full in sorted(steps)[:-keep_last]:
+        shutil.rmtree(full, ignore_errors=True)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Cadenced save + resume + retention, used by the train loop."""
+
+    directory: str
+    every_steps: int = 100
+    keep_last: int = 3
+
+    def maybe_save(self, step: int, tree: PyTree) -> Optional[str]:
+        if step % self.every_steps != 0:
+            return None
+        path = save(self.directory, step, tree)
+        gc_old(self.directory, self.keep_last)
+        return path
+
+    def restore_latest(self, like: PyTree) -> Tuple[Optional[int], PyTree]:
+        step = latest_step(self.directory)
+        if step is None:
+            return None, like
+        return step, restore(self.directory, step, like)

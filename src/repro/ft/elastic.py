@@ -1,0 +1,91 @@
+"""Elastic re-sharding: keep training/serving when the device count changes.
+
+On a real fleet, a pod losing a rack shrinks the usable mesh; the framework
+must (a) pick the best new mesh factorization, (b) re-shard the global batch
+and cache shards, and (c) restart from the latest checkpoint with identical
+global state. Checkpoints store GLOBAL arrays (ft/checkpoint.py), so (c) is
+mesh-independent by construction; this module provides (a)/(b): a
+deterministic plan from (n_devices, constraints) → mesh shape + per-axis
+re-partitioning of the standing state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    per_device_batch: int
+    notes: str = ""
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def _factor_pairs(n: int) -> List[Tuple[int, int]]:
+    out = []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            out.append((d, n // d))
+            out.append((n // d, d))
+        d += 1
+    return sorted(set(out))
+
+
+def plan_mesh(n_devices: int, global_batch: int,
+              model_parallel_min: int = 1,
+              prefer_model: int = 16) -> MeshPlan:
+    """Choose (data, model) maximizing data-parallel width subject to:
+    model ≥ model_parallel_min (HBM fit) and data | global_batch.
+
+    Among feasible factorizations prefer model size closest to
+    ``prefer_model`` (the TP width the kernels are blocked for), breaking
+    ties toward larger data.
+    """
+    candidates = []
+    for data, model in _factor_pairs(n_devices):
+        if model < model_parallel_min:
+            continue
+        if global_batch % data != 0:
+            continue
+        candidates.append((abs(model - prefer_model), -data, data, model))
+    if not candidates:
+        # degenerate: all devices on model axis
+        return MeshPlan(shape=(1, n_devices), axes=("data", "model"),
+                        per_device_batch=global_batch,
+                        notes="no data-parallel factorization fits")
+    _, _, data, model = sorted(candidates)[0]
+    return MeshPlan(shape=(data, model), axes=("data", "model"),
+                    per_device_batch=global_batch // data)
+
+
+def elastic_transition(old: MeshPlan, n_devices_now: int,
+                       global_batch: int,
+                       model_parallel_min: int = 1) -> Dict[str, object]:
+    """The coordinator's failover recipe when the device count changes.
+
+    Returns the new plan plus the re-partition summary: which state is
+    re-split (optimizer/cache shards move between devices; checkpointed
+    global arrays simply re-load under the new sharding).
+    """
+    new = plan_mesh(n_devices_now, global_batch,
+                    model_parallel_min=model_parallel_min,
+                    prefer_model=old.shape[-1])
+    old_data, old_model = old.shape[-2], old.shape[-1]
+    new_data, new_model = new.shape[-2], new.shape[-1]
+    return {
+        "new_plan": new,
+        "batch_resplit": old_data != new_data,
+        "weight_reshard": old_model != new_model,
+        "cache_resplit": old_data != new_data,   # cache slots follow data
+        "restart_from_checkpoint": True,
+        "per_device_batch": new.per_device_batch,
+    }

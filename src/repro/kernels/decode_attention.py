@@ -1,0 +1,97 @@
+"""Flash-decode GQA: one query token vs a long KV cache.
+
+The decode hot loop for ``decode_32k`` / ``long_500k``: grid (B, Hkv, nS)
+streams KV blocks of the cache through VMEM while the n_rep query heads of
+each KV head accumulate online-softmax state in fp32 scratch. The output
+block is tiny ((1, n_rep, hd)) and revisited across the S axis.
+
+``valid_len`` (scalar-prefetched, SMEM) masks cache slots at/after the write
+frontier, so one compiled kernel serves every step of an incremental decode.
+Sequence-sharded operation (KV split across chips) wraps this kernel with
+the psum combine in distributed/collectives.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(vlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, bs: int, n_sblocks: int, scale: float):
+    b = pl.program_id(0)
+    isb = pl.program_id(2)
+
+    @pl.when(isb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = vlen_ref[b]
+    pos = isb * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+
+    @pl.when(isb * bs < valid)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale              # (n_rep, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (bs, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (n_rep, bs)
+        s = jnp.where((pos < valid)[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(isb == n_sblocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention(q, k, v, valid_len=None, *, bs: int = 512,
+                     interpret: bool = True):
+    """q (B, Hq, hd); k, v (B, S, Hkv, hd); valid_len (B,) → (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    n_rep = Hq // Hkv
+    bs = min(bs, S)
+    assert S % bs == 0, (S, bs)
+    ns = S // bs
+    if valid_len is None:
+        valid_len = jnp.full((B,), S, jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, bs=bs, n_sblocks=ns,
+                               scale=hd ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, ns),
+        in_specs=[
+            pl.BlockSpec((1, n_rep, hd), lambda b, h, s, vl: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s, vl: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s, vl: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_rep, hd), lambda b, h, s, vl: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_rep,), jnp.float32),
+            pltpu.VMEM((n_rep,), jnp.float32),
+            pltpu.VMEM((n_rep, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
+        interpret=interpret,
+    )(valid_len.astype(jnp.int32), q, k, v)
+    return out

@@ -1,0 +1,62 @@
+"""EmbeddingBag gather-reduce — the recsys tower's hot path as a TPU kernel.
+
+JAX has no native EmbeddingBag; the jnp formulation (take → mask → sum)
+materializes a (B, nnz, D) intermediate in HBM. This kernel streams one
+table row per (batch, slot) grid step directly into a VMEM accumulator:
+
+  grid = (B, nnz); the ids are scalar-prefetched and drive the table
+  BlockSpec's index_map (row gather); the output block (1, D) is revisited
+  across the nnz axis — initialized at slot 0, accumulated, no intermediate.
+
+Padding ids (< 0) are clamped to row 0 for the prefetched index_map (the
+load must be in-bounds) and their contribution skipped with @pl.when.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(ids_ref, table_ref, out_ref):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(ids_ref[b, j] >= 0)
+    def _acc():
+        out_ref[...] += table_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def embedding_bag(table, ids, *, mode: str = "sum", interpret: bool = True):
+    """table (V, D); ids (B, nnz) int32 (-1 pads) → (B, D)."""
+    B, nnz = ids.shape
+    V, D = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nnz),
+        in_specs=[
+            pl.BlockSpec((1, D),
+                         lambda b, j, ids: (jnp.maximum(ids[b, j], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda b, j, ids: (b, 0)),
+    )
+    # fp32 accumulator regardless of table dtype (bf16 sums lose bits)
+    out = pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(ids, table)
+    if mode == "mean":
+        count = jnp.maximum((ids >= 0).sum(axis=1, keepdims=True), 1)
+        out = out / count.astype(out.dtype)
+    return out.astype(table.dtype)

@@ -1,0 +1,105 @@
+"""Causal GQA flash attention (FA-2 schedule) for train / prefill.
+
+TPU mapping: grid (B, Hq, nQ, nK) with the KV axis innermost; the output
+block (1, bq, 1, hd) is revisited across nK while running max / sum /
+accumulator live in fp32 VMEM scratch — the online-softmax state never
+touches HBM. Block sizes default to 128 (MXU-aligned); GQA is handled in
+the K/V index_map (kv head = q head // n_rep) so KV blocks are shared by
+the head group without replication in HBM.
+
+Causal masking is positional per block; fully-masked blocks are skipped via
+a cheap block-level bound check before the matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+               *, bq: int, bk: int, n_kblocks: int, causal: bool,
+               q_offset: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + q_offset
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    if causal:   # skip blocks fully above the causal diagonal
+        block_live = ik * bk <= (iq + 1) * bq - 1 + q_offset
+    else:
+        block_live = ik >= 0
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale     # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if causal:
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kblocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "q_offset", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """q (B, Sq, Hq, hd); k, v (B, Sk, Hkv, hd) → (B, Sq, Hq, hd)."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    n_rep = Hq // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+
+    kernel = functools.partial(
+        _fa_kernel, bq=bq, bk=bk, n_kblocks=nk, causal=causal,
+        q_offset=q_offset, scale=hd ** -0.5)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, iq, ik: (b, ik, h // n_rep, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, iq, ik: (b, ik, h // n_rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,37 @@
+"""Production mesh factory (DESIGN.md §7).
+
+Defined as a FUNCTION so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before any jax import; smoke tests and
+benches see the real single CPU device.
+
+Hardware model (TPU v5e targets, used by the roofline):
+  * 197 TFLOP/s bf16 per chip
+  * 819 GB/s HBM bandwidth per chip
+  * ~50 GB/s/link ICI (per direction)
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e constants for the §Roofline terms
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """All local devices on a (data, model) mesh — tests / examples. On the
+    1-CPU container this is a (1, 1) mesh exercising the same code path."""
+    n = len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

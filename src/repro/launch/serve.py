@@ -1,0 +1,139 @@
+"""Serving launcher: request stream → ERCache → tower, end to end.
+
+This is the paper's system running for real (CPU-scale): the access-pattern
+generator (Fig. 2 calibrated) drives per-region CachedEmbeddingServer
+instances fronting a configurable user tower; counters reproduce the
+Table 2/3 accounting; results print as a report.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch sasrec \
+        --minutes 120 --users 5000 --ttl-min 5 [--no-cache]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import server as srv_lib
+from repro.core.config import CacheConfig, MINUTE_MS, HOUR_MS
+from repro.core.hashing import Key64
+from repro.core.metrics import ServingCounters, power_savings
+from repro.data.access_patterns import (FIG6_KNOTS, InterArrivalDist,
+                                        StreamConfig, generate_stream_fast)
+from repro.ft.failure import FailureInjector
+from repro.models import recsys as rec_lib
+
+
+def build_tower(arch: str):
+    """A reduced-config tower (smoke) + feature synthesizer for serving."""
+    cfg = get_config(arch, smoke=True)
+    params = rec_lib.init_params(jax.random.PRNGKey(0), cfg)
+
+    def features_of(user_ids: np.ndarray, now_ms: int):
+        rng = np.random.default_rng(now_ms % (2 ** 31))
+        if cfg.arch_id.startswith("wide-deep"):
+            ids = rng.integers(0, cfg.vocab,
+                               (user_ids.size, cfg.n_sparse,
+                                cfg.nnz_per_field))
+            return {"sparse_ids": jnp.asarray(ids, jnp.int32)}
+        seq = rng.integers(0, cfg.vocab, (user_ids.size, cfg.seq_len))
+        return {"seq": jnp.asarray(seq, jnp.int32)}
+
+    def tower_fn(p, feats):
+        return rec_lib.tower_step(p, feats, cfg)
+
+    return cfg, params, tower_fn, features_of
+
+
+def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
+                ttl_min: float = 5.0, failover_ttl_h: float = 1.0,
+                batch: int = 256, miss_budget_frac: float = 0.75,
+                failure_rate: float = 0.0, use_cache: bool = True,
+                seed: int = 0, log=print):
+    tower_cfg, params, tower_fn, features_of = build_tower(arch)
+    cache_cfg = CacheConfig(
+        model_id=1, model_type="ctr",
+        cache_ttl_ms=int(ttl_min * MINUTE_MS),
+        failover_ttl_ms=int(failover_ttl_h * HOUR_MS),
+        n_buckets=1 << 14, ways=8,
+        value_dim=tower_cfg.user_embed_dim,
+        miss_budget_frac=miss_budget_frac)
+    server = srv_lib.CachedEmbeddingServer(
+        cfg=cache_cfg, tower_fn=tower_fn,
+        miss_budget=max(int(batch * miss_budget_frac), 1))
+    state = srv_lib.init_server_state(cache_cfg, writebuf_capacity=batch * 4)
+
+    stream_cfg = StreamConfig(n_users=users, horizon_s=minutes * 60.0,
+                              seed=seed)
+    times_ms, uids = generate_stream_fast(
+        stream_cfg, InterArrivalDist(FIG6_KNOTS))
+    injector = FailureInjector(base_rate=failure_rate, seed=seed)
+
+    counters = ServingCounters()
+    t0 = time.perf_counter()
+    n_batches = 0
+    for lo in range(0, len(uids) - batch + 1, batch):
+        ids = uids[lo:lo + batch]
+        now = int(times_ms[lo + batch - 1])
+        keys = Key64.from_int(ids)
+        feats = features_of(ids, now)
+        fail = jnp.asarray(injector.mask(batch, now))
+        if use_cache:
+            res = server.jit_serve_step(params, state, keys, feats, now,
+                                        fail)
+            state = res.state
+            s = {k: int(v) for k, v in res.stats.items()
+                 if k != "mean_age_ms"}
+            counters.merge(ServingCounters(
+                requests=s["requests"], direct_hits=s["direct_hits"],
+                tower_inferences=s["tower_inferences"],
+                tower_failures=s["tower_failures"],
+                overflow=s["overflow"], failover_hits=s["failover_hits"],
+                fallbacks=s["fallbacks"], combined_writes=1))
+            state = server.jit_flush(state, now)
+        else:
+            emb, src = srv_lib.serve_step_no_cache(tower_fn, params, keys,
+                                                   feats, fail)
+            nf = int((np.asarray(src) == srv_lib.SRC_FALLBACK).sum())
+            counters.merge(ServingCounters(
+                requests=batch, tower_inferences=batch,
+                tower_failures=nf, fallbacks=nf))
+        n_batches += 1
+    wall = time.perf_counter() - t0
+
+    d = counters.as_dict()
+    d["wall_s"] = round(wall, 2)
+    d["batches"] = n_batches
+    d["power_savings_at_0.8_tower_share"] = round(
+        power_savings(counters.hit_rate, 0.8), 4)
+    log(f"[serve {arch}] ttl={ttl_min}min cache={'on' if use_cache else 'off'}"
+        f" requests={d['requests']} hit_rate={d['hit_rate']:.3f}"
+        f" fallback_rate={d['fallback_rate']:.4f}"
+        f" tower_inferences={d['tower_inferences']}"
+        f" ({wall:.1f}s)")
+    return d
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="sasrec")
+    ap.add_argument("--minutes", type=int, default=60)
+    ap.add_argument("--users", type=int, default=2000)
+    ap.add_argument("--ttl-min", type=float, default=5.0)
+    ap.add_argument("--failure-rate", type=float, default=0.0)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--no-cache", action="store_true")
+    args = ap.parse_args()
+    run_serving(arch=args.arch, minutes=args.minutes, users=args.users,
+                ttl_min=args.ttl_min, failure_rate=args.failure_rate,
+                batch=args.batch, use_cache=not args.no_cache)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Model building blocks (pure JAX, no flax): norms, RoPE, GQA attention.
+
+Attention ships in three interchangeable implementations:
+  * ``naive``   — materializes (S, S) scores; smoke tests / tiny shapes only.
+  * ``chunked`` — flash-style online-softmax over KV chunks via lax.scan;
+                  memory-safe at 32k+ and lowers on every backend. This is
+                  the default production path for the dry-run.
+  * Pallas kernels (kernels/flash_attention.py, kernels/decode_attention.py)
+    are the TPU-target implementations of the same contract; tests assert
+    they match these references.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_tables(positions: jnp.ndarray, head_dim: int, theta: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for integer positions; shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x: (..., S, H, hd); cos/sin: (..., S, hd/2) broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+# -------------------------------------------------------------------- init
+def dense_init(rng, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(rng, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+# --------------------------------------------------------------- attention
+def repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, Hkv, hd) → (B, S, Hkv*n_rep, hd)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset=0) -> jnp.ndarray:
+    """q: (B, Sq, Hq, hd); k,v: (B, Sk, Hkv, hd). Materializes scores."""
+    n_rep = q.shape[2] // k.shape[2]
+    k, v = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(q.shape[1])[:, None] + q_offset
+        ki = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where((ki <= qi)[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      kv_chunk: int = 1024) -> jnp.ndarray:
+    """Flash-style attention: scan over KV chunks with online softmax.
+
+    Never materializes (Sq, Sk); peak extra memory is (B, Hq, Sq, kv_chunk).
+    q: (B, Sq, Hq, hd); k,v: (B, Sk, Hkv, hd); q_offset: absolute position of
+    q[0] (for causal masking during decode/chunked prefill).
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    n_rep = Hq // Hkv
+    if Sk % kv_chunk != 0:
+        kv_chunk = Sk  # fall back to a single chunk for ragged sizes
+    n_chunks = Sk // kv_chunk
+    scale = hd ** -0.5
+
+    qf = q.astype(jnp.float32)
+    q_pos = jnp.arange(Sq) + q_offset
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kc, vc, k0 = inputs                       # (B, C, Hkv, hd), chunk start
+        kc = repeat_kv(kc, n_rep).astype(jnp.float32)
+        vc = repeat_kv(vc, n_rep).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kc) * scale
+        if causal:
+            kpos = k0 + jnp.arange(kv_chunk)
+            mask = kpos[None, :] <= q_pos[:, None]          # (Sq, C)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vc)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hq, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hq, Sq, hd), jnp.float32)
+    ks = k.reshape(B, n_chunks, kv_chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n_chunks, kv_chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(n_chunks) * kv_chunk
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, starts))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B, Sq, Hq, hd)
+
+
+def attention(q, k, v, *, causal: bool, q_offset=0, impl: str = "chunked",
+              kv_chunk: int = 1024) -> jnp.ndarray:
+    if impl == "naive" or q.shape[1] * k.shape[1] <= 1 << 20:
+        return naive_attention(q, k, v, causal=causal, q_offset=q_offset)
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                 kv_chunk=kv_chunk)
+    if impl == "flash_kernel":                      # TPU Pallas path
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal,
+                                    q_offset=q_offset)
+    raise ValueError(impl)
+
+
+# -------------------------------------------------------------------- FFN
+def swiglu(x, w_gate, w_up, w_down):
+    """LLaMA-style gated FFN: silu(x Wg) ⊙ (x Wu) Wd."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def mlp(x, ws, bs, act=jax.nn.relu):
+    """Plain MLP stack for recsys towers: ws/bs lists."""
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        x = jnp.einsum("...d,df->...f", x, w) + b
+        if i < len(ws) - 1:
+            x = act(x)
+    return x

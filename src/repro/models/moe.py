@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN: grouped GShard-style top-k dispatch/combine.
+
+Shapes follow the grouped formulation that shards cleanly under GSPMD:
+tokens are reshaped to (G groups, T_g tokens, D); the dispatch one-hot is
+(G, T_g, E, C) with per-group capacity C ≈ cf·k·T_g/E, so its footprint is
+T_g²·k·cf per group — kept small by choosing T_g ≤ 512. The groups axis
+shards over (pod, data); the experts axis shards over model (EP): the
+dispatch einsum then lowers to an all_to_all, which is the collective the
+§Perf MoE hillclimb works on.
+
+Routing: softmax router in fp32, top-k, renormalized gates, GShard
+load-balance auxiliary loss, capacity dropping (dropped tokens pass through
+the residual only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+
+def pick_group_size(n_tokens: int, max_group: int = 512) -> int:
+    """Largest divisor of n_tokens that is ≤ max_group."""
+    g = min(max_group, n_tokens)
+    while n_tokens % g:
+        g -= 1
+    return g
+
+
+def capacity_for(group_size: int, cfg: MoEConfig) -> int:
+    """Per-group expert capacity. Tiny groups (serving) run dropless."""
+    if group_size <= 64:
+        return group_size
+    c = int(cfg.capacity_factor * cfg.top_k * group_size / cfg.n_experts
+            + 0.999)
+    return max(c, cfg.top_k)
+
+
+def top_k_gating(logits: jnp.ndarray, k: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """logits (G, T, E) → (gate values (G,T,k), expert ids (G,T,k), probs)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    return vals, idx, probs
+
+
+def dispatch_combine_tensors(idx: jnp.ndarray, gates: jnp.ndarray,
+                             n_experts: int, capacity: int
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Build (G, T, E, C) dispatch (bool→dtype) and combine (gated) tensors.
+
+    Slot priority is GShard's: expert-choice position = running count of
+    earlier (token, slot) assignments to the same expert, slot-0 assignments
+    of all tokens counted before slot-1.
+    """
+    G, T, K = idx.shape
+    oh = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32)  # (G, T, K, E)
+    # count slot-by-slot so low slots get priority
+    pos = jnp.zeros((G, T, K, n_experts), jnp.float32)
+    prev = jnp.zeros((G, 1, n_experts), jnp.float32)
+    slots = []
+    for s in range(K):
+        m = oh[:, :, s]                                   # (G, T, E)
+        within = jnp.cumsum(m, axis=1) - m                # tokens before me
+        slots.append(within + prev)
+        prev = prev + m.sum(axis=1, keepdims=True)
+    pos = jnp.stack(slots, axis=2)                        # (G, T, K, E)
+    keep = (pos < capacity) * oh                          # dropped → 0
+    pos_c = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)   # (G,T,K,E,C)
+    disp = (keep[..., None] * pos_c).sum(axis=2)          # (G, T, E, C)
+    comb = (gates[..., None, None] * keep[..., None] * pos_c).sum(axis=2)
+    return disp, comb
+
+
+def moe_ffn(x: jnp.ndarray, params: dict, cfg: MoEConfig,
+            group_size: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) → (same, aux_loss scalar).
+
+    params: router (D, E); wg/wu (E, D, F); wd (E, F, D).
+    """
+    B, S, D = x.shape
+    T_all = B * S
+    g = pick_group_size(T_all, group_size)
+    G = T_all // g
+    C = capacity_for(g, cfg)
+    xg = x.reshape(G, g, D)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    gates, idx, probs = top_k_gating(logits, cfg.top_k)
+    disp, comb = dispatch_combine_tensors(idx, gates, cfg.n_experts, C)
+    disp = disp.astype(x.dtype)
+    comb = comb.astype(x.dtype)
+
+    # dispatch → (G, E, C, D); shards: G on data, E on model → all_to_all
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xg)
+    gproj = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["wg"]))
+    uproj = jnp.einsum("gecd,edf->gecf", xe, params["wu"])
+    ye = jnp.einsum("gecf,efd->gecd", gproj * uproj, params["wd"])
+    y = jnp.einsum("gtec,gecd->gtd", comb, ye)
+
+    # GShard load-balance loss: E · Σ_e f_e · P_e
+    me = probs.mean(axis=(0, 1))                              # (E,)
+    fe = (jax.nn.one_hot(idx[..., 0], cfg.n_experts, dtype=jnp.float32)
+          .mean(axis=(0, 1)))                                 # top-1 fraction
+    aux = cfg.n_experts * jnp.sum(me * fe)
+    return y.reshape(B, S, D), aux
+
+
+def init_moe_params(rng, d_model: int, d_ff: int, cfg: MoEConfig, dtype):
+    ks = jax.random.split(rng, 4)
+    E = cfg.n_experts
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    return {
+        "router": (jax.random.normal(ks[0], (d_model, E)) * scale_in
+                   ).astype(jnp.float32),
+        "wg": (jax.random.normal(ks[1], (E, d_model, d_ff)) * scale_in
+               ).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (E, d_model, d_ff)) * scale_in
+               ).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (E, d_ff, d_model)) * scale_out
+               ).astype(dtype),
+    }

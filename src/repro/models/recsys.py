@@ -1,0 +1,434 @@
+"""RecSys towers: Wide&Deep, SASRec, BST, MIND — the ERCache-native family.
+
+The hot path is the sparse **embedding lookup**: JAX has no EmbeddingBag, so
+it is built from ``jnp.take`` + reduction (and a Pallas gather-reduce kernel,
+kernels/embedding_bag.py, as the TPU-target implementation). Tables are
+row-sharded over the ``model`` axis; the deep MLP is tensor-parallel on its
+inner dim; batch on (pod, data).
+
+Every arch exposes the ERCache tower contract:
+    ``tower_step(params, inputs, cfg) -> (B, cfg.user_embed_dim)``
+plus a training loss and a serving ``score_step``; ``retrieval_step`` scores
+one query against the 1M-candidate matrix (batched dot, not a loop).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.distributed import collectives, sharding
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------- embedding
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  mode: str = "sum", impl: str = "jnp") -> jnp.ndarray:
+    """table (V, D); ids (..., nnz) int32, -1 = padding → (..., D).
+
+    ``impl="pallas"`` routes to the kernel (kernels/ops.py); the jnp path is
+    the oracle and the GSPMD path for sharded tables.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.embedding_bag(table, ids, mode=mode)
+    mask = (ids >= 0)
+    rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)
+    rows = jnp.where(mask[..., None], rows, 0.0)
+    out = rows.sum(axis=-2)
+    if mode == "mean":
+        out = out / jnp.maximum(mask.sum(axis=-1, keepdims=True), 1)
+    return out
+
+
+def field_embedding_bag(tables: jnp.ndarray, ids: jnp.ndarray,
+                        mode: str = "sum") -> jnp.ndarray:
+    """tables (F, V, D); ids (B, F, nnz) → (B, F, D): per-field bags."""
+    def per_field(table, fid):
+        return embedding_bag(table, fid, mode)
+    return jax.vmap(per_field, in_axes=(0, 1), out_axes=1)(tables, ids)
+
+
+def sharded_field_embedding_bag(tables: jnp.ndarray, ids: jnp.ndarray,
+                                mesh, rows_axis: str = "model",
+                                batch_axes=("pod", "data"),
+                                scatter_batch: bool = False) -> jnp.ndarray:
+    """Explicit-collective EmbeddingBag: tables (F, V, D) row-sharded over
+    ``rows_axis``; ids (B, F, nnz) batch-sharded. Each shard reduces its
+    owned rows to a LOCAL partial bag and one table-dtype psum of
+    (B, F, D) crosses the wire — GSPMD's gather partitioning instead
+    all-reduces the un-reduced (B, F, nnz, D) rows in fp32, nnz·2× more
+    bytes (§Perf wide-deep hillclimb iteration 3)."""
+    from jax.sharding import PartitionSpec as P
+    F, V, D = tables.shape
+    n = mesh.shape[rows_axis]
+    Vl = V // n
+    baxes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    bspec = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    def body(tab_l, ids_l):
+        shard = jax.lax.axis_index(rows_axis)
+        loc = ids_l - shard * Vl                      # (B, F, nnz) local ids
+        ok = (ids_l >= 0) & (loc >= 0) & (loc < Vl)
+
+        def per_field(t, i, m):                       # t (Vl, D)
+            r = t[jnp.clip(i, 0, Vl - 1)]             # (B, nnz, D)
+            r = jnp.where(m[..., None], r, 0)
+            return r.sum(axis=-2)                     # (B, D)
+        bags = jax.vmap(per_field, in_axes=(0, 1, 1), out_axes=1)(
+            tab_l, loc, ok)                           # (B, F, D)
+        bags = bags.astype(tab_l.dtype)
+        if scatter_batch:
+            # reduce AND shard the batch over rows_axis in one collective —
+            # half the wire bytes of a psum, and downstream stays sharded
+            return jax.lax.psum_scatter(bags, rows_axis,
+                                        scatter_dimension=0, tiled=True)
+        return jax.lax.psum(bags, rows_axis)
+
+    out_spec = (P(baxes + (rows_axis,), None, None) if scatter_batch
+                else P(bspec, None, None))
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, rows_axis, None), P(bspec, None, None)),
+        out_specs=out_spec,
+        check_vma=False,
+    )(tables, ids)
+
+
+def _bce(logits, labels):
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def _sampled_softmax(user_vec, item_table, pos_ids, neg_ids):
+    """log-softmax over {pos} ∪ negs item embeddings (B,) loss."""
+    pos_e = jnp.take(item_table, pos_ids, axis=0)            # (B, D)
+    neg_e = jnp.take(item_table, neg_ids, axis=0)            # (B, K, D)
+    pos_s = jnp.einsum("bd,bd->b", user_vec, pos_e)
+    neg_s = jnp.einsum("bd,bkd->bk", user_vec, neg_e)
+    all_s = jnp.concatenate([pos_s[:, None], neg_s], axis=1).astype(jnp.float32)
+    return jnp.mean(jax.nn.logsumexp(all_s, axis=1) - all_s[:, 0])
+
+
+# ============================================================== wide & deep
+def init_wide_deep(rng, cfg: RecsysConfig) -> Dict:
+    ks = iter(jax.random.split(rng, 8 + 2 * len(cfg.mlp)))
+    F, V, D = cfg.n_sparse, cfg.vocab, cfg.embed_dim
+    dt = jnp.dtype(cfg.dtype)          # bf16 tables halve HBM + wire bytes
+    params = {
+        "tables": (jax.random.normal(next(ks), (F, V, D)) * 0.01
+                   ).astype(dt),
+        "wide": (jax.random.normal(next(ks), (F, V)) * 0.01
+                 ).astype(dt),
+        "mlp_w": [], "mlp_b": [],
+    }
+    d_in = F * D
+    for d_out in cfg.mlp:
+        params["mlp_w"].append((jax.random.normal(next(ks), (d_in, d_out))
+                                * d_in ** -0.5).astype(jnp.float32))
+        params["mlp_b"].append(jnp.zeros((d_out,)))
+        d_in = d_out
+    params["head"] = (jax.random.normal(next(ks), (d_in, 1)) * d_in ** -0.5
+                      ).astype(jnp.float32)
+    return params
+
+
+def wide_deep_tower(params, inputs, cfg: RecsysConfig, mesh=None):
+    """sparse_ids (B, F, nnz) → deep-tower top (B, mlp[-1])."""
+    ids = inputs["sparse_ids"]
+    shardable = (cfg.sharded_bag and mesh is not None
+                 and "model" in mesh.axis_names
+                 and params["tables"].shape[1] % mesh.shape["model"] == 0)
+    scatter = (shardable and cfg.serve_scatter
+               and ids.shape[0] % mesh.size == 0)
+    if shardable:
+        bags = sharded_field_embedding_bag(params["tables"], ids, mesh,
+                                           scatter_batch=scatter)
+    else:
+        bags = field_embedding_bag(params["tables"], ids)    # (B, F, D)
+    x = bags.reshape(bags.shape[0], -1).astype(jnp.float32)
+    if not scatter:
+        x = sharding.constrain(x, ("batch", None), "recsys", mesh)
+    for i, (w, b) in enumerate(zip(params["mlp_w"], params["mlp_b"])):
+        x = x @ w + b
+        x = jax.nn.relu(x)
+        if not scatter:   # scatter mode: batch-parallel, replicated weights
+            x = sharding.constrain(x, ("batch", "ffn"), "recsys", mesh)
+    return x
+
+
+def wide_deep_score(params, inputs, cfg: RecsysConfig, mesh=None):
+    deep = wide_deep_tower(params, inputs, cfg, mesh) @ params["head"]
+    ids = inputs["sparse_ids"]
+    if cfg.sharded_bag and mesh is not None \
+            and "model" in mesh.axis_names \
+            and params["wide"].shape[1] % mesh.shape["model"] == 0:
+        scatter = cfg.serve_scatter and ids.shape[0] % mesh.size == 0
+        wide_rows = sharded_field_embedding_bag(
+            params["wide"][..., None], ids, mesh,
+            scatter_batch=scatter)[..., 0]                    # (B, F)
+    else:
+        wide_rows = jax.vmap(
+            lambda t, i: embedding_bag(t[:, None], i)[..., 0],
+            in_axes=(0, 1), out_axes=1)(params["wide"], ids)
+    wide = wide_rows.sum(axis=1).astype(jnp.float32)          # (B,)
+    return deep[:, 0] + wide
+
+
+def wide_deep_loss(params, batch, cfg: RecsysConfig, mesh=None):
+    return _bce(wide_deep_score(params, batch, cfg, mesh), batch["labels"])
+
+
+# ==================================================================== sasrec
+def _self_attn_block(x, bp, n_heads: int, causal: bool):
+    """Pre-LN block: MHA + pointwise FFN. x (B, S, D)."""
+    B, S, D = x.shape
+    hd = D // n_heads
+    h = L.layer_norm(x, bp["ln1_w"], bp["ln1_b"])
+    q = (h @ bp["wq"]).reshape(B, S, n_heads, hd)
+    k = (h @ bp["wk"]).reshape(B, S, n_heads, hd)
+    v = (h @ bp["wv"]).reshape(B, S, n_heads, hd)
+    o = L.attention(q, k, v, causal=causal, impl="naive")
+    x = x + o.reshape(B, S, D) @ bp["wo"]
+    h2 = L.layer_norm(x, bp["ln2_w"], bp["ln2_b"])
+    return x + jax.nn.relu(h2 @ bp["w1"] + bp["b1"]) @ bp["w2"] + bp["b2"]
+
+
+def _init_block(ks, D: int, d_ff: Optional[int] = None) -> Dict:
+    d_ff = d_ff or D
+    nrm = lambda k, s: (jax.random.normal(k, s) * s[0] ** -0.5
+                        ).astype(jnp.float32)
+    keys = jax.random.split(ks, 6)
+    return {
+        "wq": nrm(keys[0], (D, D)), "wk": nrm(keys[1], (D, D)),
+        "wv": nrm(keys[2], (D, D)), "wo": nrm(keys[3], (D, D)),
+        "w1": nrm(keys[4], (D, d_ff)), "b1": jnp.zeros((d_ff,)),
+        "w2": nrm(keys[5], (d_ff, D)), "b2": jnp.zeros((D,)),
+        "ln1_w": jnp.ones((D,)), "ln1_b": jnp.zeros((D,)),
+        "ln2_w": jnp.ones((D,)), "ln2_b": jnp.zeros((D,)),
+    }
+
+
+def init_sasrec(rng, cfg: RecsysConfig) -> Dict:
+    ks = jax.random.split(rng, cfg.n_blocks + 2)
+    D = cfg.embed_dim
+    return {
+        "item_emb": (jax.random.normal(ks[0], (cfg.vocab, D)) * 0.01
+                     ).astype(jnp.float32),
+        "pos_emb": (jax.random.normal(ks[1], (cfg.seq_len, D)) * 0.01
+                    ).astype(jnp.float32),
+        "blocks": [_init_block(ks[2 + i], D) for i in range(cfg.n_blocks)],
+        "ln_w": jnp.ones((D,)), "ln_b": jnp.zeros((D,)),
+    }
+
+
+def sasrec_tower(params, inputs, cfg: RecsysConfig, mesh=None):
+    """seq (B, S) item ids (-1 pad) → last-position user embedding (B, D)."""
+    seq = inputs["seq"]
+    x = embedding_bag(params["item_emb"], seq[..., None])     # take w/ pad
+    x = x + params["pos_emb"][None, :seq.shape[1]]
+    x = jnp.where((seq >= 0)[..., None], x, 0.0)
+    x = sharding.constrain(x, ("batch", "seq", None), "recsys", mesh)
+    for bp in params["blocks"]:
+        x = _self_attn_block(x, bp, cfg.n_heads, causal=True)
+    x = L.layer_norm(x, params["ln_w"], params["ln_b"])
+    return x[:, -1]
+
+
+def sasrec_loss(params, batch, cfg: RecsysConfig, mesh=None):
+    """Standard SASRec BCE: positive next item vs one sampled negative."""
+    h = sasrec_tower(params, batch, cfg, mesh)                # (B, D)
+    pos = jnp.take(params["item_emb"], batch["pos"], axis=0)
+    neg = jnp.take(params["item_emb"], batch["neg"], axis=0)
+    s_pos = jnp.einsum("bd,bd->b", h, pos)
+    s_neg = jnp.einsum("bd,bd->b", h, neg)
+    ones = jnp.ones_like(s_pos)
+    return _bce(s_pos, ones) + _bce(s_neg, 1.0 - ones)
+
+
+# ======================================================================= bst
+def init_bst(rng, cfg: RecsysConfig) -> Dict:
+    ks = jax.random.split(rng, cfg.n_blocks + 3 + len(cfg.mlp))
+    D = cfg.embed_dim
+    S1 = cfg.seq_len + 1                    # behaviors + target item
+    p = {
+        "item_emb": (jax.random.normal(ks[0], (cfg.vocab, D)) * 0.01
+                     ).astype(jnp.float32),
+        "pos_emb": (jax.random.normal(ks[1], (S1, D)) * 0.01
+                    ).astype(jnp.float32),
+        "blocks": [_init_block(ks[2 + i], D, 4 * D)
+                   for i in range(cfg.n_blocks)],
+        "mlp_w": [], "mlp_b": [],
+    }
+    d_in = S1 * D
+    for j, d_out in enumerate(cfg.mlp):
+        k = ks[2 + cfg.n_blocks + j]
+        p["mlp_w"].append((jax.random.normal(k, (d_in, d_out))
+                           * d_in ** -0.5).astype(jnp.float32))
+        p["mlp_b"].append(jnp.zeros((d_out,)))
+        d_in = d_out
+    p["head"] = (jax.random.normal(ks[-1], (d_in, 1)) * d_in ** -0.5
+                 ).astype(jnp.float32)
+    return p
+
+
+def _bst_encode(params, seq, target, cfg: RecsysConfig, mesh=None):
+    """Transformer over [behaviors ; target] → (B, S+1, D)."""
+    full = jnp.concatenate([seq, target[:, None]], axis=1)
+    x = embedding_bag(params["item_emb"], full[..., None])
+    x = x + params["pos_emb"][None]
+    x = jnp.where((full >= 0)[..., None], x, 0.0)
+    x = sharding.constrain(x, ("batch", "seq", None), "recsys", mesh)
+    for bp in params["blocks"]:
+        x = _self_attn_block(x, bp, cfg.n_heads, causal=False)
+    return x
+
+
+def bst_tower(params, inputs, cfg: RecsysConfig, mesh=None):
+    """User-side repr: mean-pooled transformer output over behaviors only
+    (target-independent → cacheable by ERCache)."""
+    seq = inputs["seq"]
+    pad_target = jnp.zeros((seq.shape[0],), jnp.int32)
+    x = _bst_encode(params, seq, pad_target, cfg, mesh)
+    return x[:, :-1].mean(axis=1)
+
+
+def bst_score(params, inputs, cfg: RecsysConfig, mesh=None):
+    x = _bst_encode(params, inputs["seq"], inputs["target"], cfg, mesh)
+    flat = x.reshape(x.shape[0], -1)
+    for w, b in zip(params["mlp_w"], params["mlp_b"]):
+        flat = jax.nn.leaky_relu(flat @ w + b)
+        flat = sharding.constrain(flat, ("batch", "ffn"), "recsys", mesh)
+    return (flat @ params["head"])[:, 0]
+
+
+def bst_loss(params, batch, cfg: RecsysConfig, mesh=None):
+    return _bce(bst_score(params, batch, cfg, mesh), batch["labels"])
+
+
+# ====================================================================== mind
+def init_mind(rng, cfg: RecsysConfig) -> Dict:
+    ks = jax.random.split(rng, 3)
+    D = cfg.embed_dim
+    return {
+        "item_emb": (jax.random.normal(ks[0], (cfg.vocab, D)) * 0.01
+                     ).astype(jnp.float32),
+        # shared bilinear routing map (MIND's S matrix)
+        "S": (jax.random.normal(ks[1], (D, D)) * D ** -0.5
+              ).astype(jnp.float32),
+        # per-interest routing-logit init (fixed random per capsule)
+        "b_init": (jax.random.normal(ks[2], (cfg.n_interests,)) * 0.1
+                   ).astype(jnp.float32),
+    }
+
+
+def _squash(z, axis=-1):
+    n2 = jnp.sum(jnp.square(z), axis=axis, keepdims=True)
+    return z * (n2 / (1.0 + n2)) / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params, inputs, cfg: RecsysConfig, mesh=None):
+    """Dynamic-routing capsules: seq (B, S) → interests (B, K, D)."""
+    seq = inputs["seq"]
+    B, S = seq.shape
+    K = cfg.n_interests
+    e = embedding_bag(params["item_emb"], seq[..., None])     # (B, S, D)
+    mask = (seq >= 0)
+    e = jnp.where(mask[..., None], e, 0.0)
+    low = jnp.einsum("bsd,de->bse", e, params["S"])           # mapped caps
+    logits = jnp.broadcast_to(params["b_init"][None, :, None], (B, K, S))
+
+    def routing_iter(b, _):
+        c = jax.nn.softmax(b, axis=1)                          # over K
+        c = jnp.where(mask[:, None, :], c, 0.0)
+        z = jnp.einsum("bks,bse->bke", c, low)
+        u = _squash(z)
+        b_new = b + jnp.einsum("bke,bse->bks", u, low)
+        return b_new, u
+
+    for _ in range(cfg.capsule_iters):
+        logits, interests = routing_iter(logits, None)
+    return interests                                           # (B, K, D)
+
+
+def mind_tower(params, inputs, cfg: RecsysConfig, mesh=None):
+    """Flattened (B, K·D) multi-interest repr (the ERCache-cached value)."""
+    ints = mind_interests(params, inputs, cfg, mesh)
+    return ints.reshape(ints.shape[0], -1)
+
+
+def mind_loss(params, batch, cfg: RecsysConfig, mesh=None, pow_p: float = 2.0):
+    """Label-aware attention over interests + sampled softmax."""
+    ints = mind_interests(params, batch, cfg, mesh)           # (B, K, D)
+    tgt = jnp.take(params["item_emb"], batch["target"], axis=0)
+    att = jax.nn.softmax(
+        jnp.einsum("bkd,bd->bk", ints, tgt) ** 1 * pow_p, axis=1)
+    user = jnp.einsum("bk,bkd->bd", att, ints)
+    return _sampled_softmax(user, params["item_emb"], batch["target"],
+                            batch["neg"])
+
+
+# ================================================================= retrieval
+def retrieval_step(user_repr, candidates, cfg: RecsysConfig, mesh=None,
+                   k_top: int = 100):
+    """(B, D') query vs (N, D') candidate matrix → (scores, ids) top-k.
+
+    MIND queries are (B, K·D): scores are max over the K interests.
+    """
+    if cfg.interaction == "multi-interest":
+        B = user_repr.shape[0]
+        q = user_repr.reshape(B, cfg.n_interests, cfg.embed_dim)
+        scores = jnp.einsum("bkd,nd->bkn", q.astype(jnp.float32),
+                            candidates.astype(jnp.float32)).max(axis=1)
+        return jax.lax.top_k(scores, k_top)
+    if mesh is not None:
+        return collectives.sharded_topk_scores(user_repr, candidates,
+                                               k_top, mesh)
+    scores = jnp.einsum("bd,nd->bn", user_repr.astype(jnp.float32),
+                        candidates.astype(jnp.float32))
+    return jax.lax.top_k(scores, k_top)
+
+
+# ================================================================== registry
+TOWERS = {
+    "wide-deep": (init_wide_deep, wide_deep_tower, wide_deep_loss,
+                  wide_deep_score),
+    "sasrec": (init_sasrec, sasrec_tower, sasrec_loss, None),
+    "bst": (init_bst, bst_tower, bst_loss, bst_score),
+    "mind": (init_mind, mind_tower, mind_loss, None),
+}
+
+
+def get_arch_fns(arch_id: str):
+    base = arch_id.replace("-smoke", "")
+    return TOWERS[base]
+
+
+def init_params(rng, cfg: RecsysConfig) -> Dict:
+    return get_arch_fns(cfg.arch_id)[0](rng, cfg)
+
+
+def abstract_params(cfg: RecsysConfig) -> Dict:
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def tower_step(params, inputs, cfg: RecsysConfig, mesh=None):
+    return get_arch_fns(cfg.arch_id)[1](params, inputs, cfg, mesh)
+
+
+def loss_fn(params, batch, cfg: RecsysConfig, mesh=None):
+    return get_arch_fns(cfg.arch_id)[2](params, batch, cfg, mesh)
+
+
+def make_train_step(cfg: RecsysConfig, optimizer, mesh=None):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, mesh))(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(jnp.add, params, updates)
+        return params, opt_state, {"loss": loss}
+    return step

@@ -1,0 +1,55 @@
+"""Normalized (cross-)Entropy — the paper's model-performance metric.
+
+NE = CE(labels, preds) / CE(labels, base_rate). 1.0 == predicting the empty
+model (the prior); lower is better. Table 4 reports the *NE difference*
+between cache-enabled and cache-disabled serving arms; ``NEAccumulator``
+supports exactly that A/B accounting over a streamed evaluation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ne_jnp(labels: jnp.ndarray, preds: jnp.ndarray,
+           eps: float = 1e-12) -> jnp.ndarray:
+    labels = labels.astype(jnp.float32)
+    preds = jnp.clip(preds.astype(jnp.float32), eps, 1 - eps)
+    ce = -(labels * jnp.log(preds)
+           + (1 - labels) * jnp.log1p(-preds)).mean()
+    p = jnp.clip(labels.mean(), eps, 1 - eps)
+    ce_base = -(p * jnp.log(p) + (1 - p) * jnp.log1p(-p))
+    return ce / jnp.maximum(ce_base, eps)
+
+
+@dataclasses.dataclass
+class NEAccumulator:
+    """Streaming NE: accumulate (sum CE terms, sum labels, count)."""
+
+    ce_sum: float = 0.0
+    label_sum: float = 0.0
+    count: int = 0
+    eps: float = 1e-12
+
+    def add(self, labels: np.ndarray, preds: np.ndarray) -> None:
+        labels = np.asarray(labels, np.float64)
+        preds = np.clip(np.asarray(preds, np.float64), self.eps, 1 - self.eps)
+        self.ce_sum += float(-(labels * np.log(preds)
+                               + (1 - labels) * np.log1p(-preds)).sum())
+        self.label_sum += float(labels.sum())
+        self.count += labels.size
+
+    @property
+    def ne(self) -> float:
+        if self.count == 0:
+            return float("nan")
+        p = np.clip(self.label_sum / self.count, self.eps, 1 - self.eps)
+        ce_base = -(p * np.log(p) + (1 - p) * np.log1p(-p))
+        return (self.ce_sum / self.count) / max(ce_base, self.eps)
+
+
+def ne_diff_pct(ne_cached: float, ne_fresh: float) -> float:
+    """Table 4's quantity: (NE_cached − NE_fresh) / NE_fresh × 100."""
+    return 100.0 * (ne_cached - ne_fresh) / ne_fresh

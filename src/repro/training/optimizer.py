@@ -1,0 +1,184 @@
+"""Optimizers in pure JAX (no optax): AdamW, Adafactor, SGD + schedules.
+
+Adafactor (factored second moments) is the default for the MoE giants:
+its optimizer state for an (…, R, C) weight is R + C floats instead of R·C,
+which is what lets arctic-480b train within v5e HBM (DESIGN.md §7).
+
+All updates are computed in fp32 regardless of param dtype and cast back —
+combined with bf16 gradient all-reduce (the grads arrive in param dtype)
+this is the gradient-compression configuration from DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+    # update(grads, state, params) -> (updates, new_state); params_new = params + updates
+
+
+# ------------------------------------------------------------------ common
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree)
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+# --------------------------------------------------------------- schedules
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(base_lr: float):
+    return lambda step: jnp.float32(base_lr)
+
+
+# -------------------------------------------------------------------- sgd
+def sgd(lr: float = 1e-2, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.int32(0)}
+        return {"step": jnp.int32(0),
+                "mom": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)}
+
+    def update(grads, state, params):
+        if momentum == 0.0:
+            ups = _tmap(lambda g: (-lr * g.astype(jnp.float32)), grads)
+            new_state = {"step": state["step"] + 1}
+        else:
+            mom = _tmap(lambda m, g: momentum * m + g.astype(jnp.float32),
+                        state["mom"], grads)
+            ups = _tmap(lambda m: -lr * m, mom)
+            new_state = {"step": state["step"] + 1, "mom": mom}
+        ups = _tmap(lambda u, p: u.astype(p.dtype), ups, params)
+        return ups, new_state
+
+    return Optimizer(init, update)
+
+
+# ------------------------------------------------------------------- adamw
+def adamw(lr: Any = 1e-3, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.int32(0), "m": _tmap(zeros, params),
+                "v": _tmap(zeros, params)}
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        m = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v, g: b2 * v + (1 - b2)
+                  * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        def upd(m_, v_, p):
+            u = -(lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps))
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+        ups = _tmap(upd, m, v, params)
+        return ups, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------- adafactor
+def adafactor(lr: Any = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, min_dim_factored: int = 128
+              ) -> Optimizer:
+    """Factored AdaFactor (Shazeer & Stern 2018): tensors with ≥2 trailing
+    dims ≥ min_dim_factored keep row/col second-moment vectors only."""
+    lr_fn = lr if callable(lr) else constant_schedule(lr)
+
+    def factored(p) -> bool:
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_factored
+                and p.shape[-2] >= min_dim_factored)
+
+    def init(params):
+        def state_of(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.int32(0),
+                "v": jax.tree_util.tree_map(state_of, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                r_factor = (vr / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True), eps))[..., None]
+                u = g * jax.lax.rsqrt(r_factor * vc[..., None, :] + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS ≤ clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr_t * u).astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["v"])
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        ups = treedef.unflatten([o[0] for o in outs])
+        new_v = treedef.unflatten([o[1] for o in outs])
+        return ups, {"step": step, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def for_config(cfg, total_steps: int = 10_000) -> Optimizer:
+    """Default optimizer choice per family/size (DESIGN.md §7)."""
+    family = getattr(cfg, "family", "lm")
+    if family == "lm" and getattr(cfg, "moe", None) is not None:
+        return adafactor(lr=cosine_schedule(1e-2, 100, total_steps))
+    if family == "lm":
+        return adamw(lr=cosine_schedule(3e-4, 100, total_steps),
+                     weight_decay=0.1)
+    return adamw(lr=1e-3)

@@ -1,0 +1,75 @@
+"""Generic jitted train loop: step fn × data iterator × checkpoint cadence.
+
+Restart/resume: the loop always begins by asking the CheckpointManager for
+the latest committed step — a crash-restart (or elastic re-mesh, ft/
+elastic.py) re-enters here and continues from durable state. The loop body
+is model-agnostic; per-family step functions come from models/*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.ft.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_last: int = 3
+
+
+def run_train_loop(step_fn: Callable, state: Any,
+                   batches: Iterable[Dict[str, Any]],
+                   cfg: LoopConfig,
+                   eval_fn: Optional[Callable] = None,
+                   log_fn: Callable = print) -> Any:
+    """``step_fn(state, batch) -> (state, metrics)`` already jitted.
+
+    Returns the final state. Resumes from the newest committed checkpoint
+    when ``cfg.ckpt_dir`` holds one.
+    """
+    mgr = None
+    start_step = 0
+    if cfg.ckpt_dir:
+        mgr = CheckpointManager(cfg.ckpt_dir, every_steps=cfg.ckpt_every,
+                                keep_last=cfg.keep_last)
+        step, state = mgr.restore_latest(state)
+        if step is not None:
+            start_step = step
+            log_fn(f"[resume] from checkpoint step {step}")
+
+    it = iter(batches)
+    history = []
+    t0 = time.perf_counter()
+    for step in range(start_step + 1, cfg.total_steps + 1):
+        try:
+            batch = next(it)
+        except StopIteration:
+            log_fn(f"[done] data exhausted at step {step - 1}")
+            break
+        state, metrics = step_fn(state, batch)
+        if step % cfg.log_every == 0 or step == cfg.total_steps:
+            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            dt = (time.perf_counter() - t0) / max(step - start_step, 1)
+            history.append({"step": step, **m})
+            log_fn(f"[step {step}] " + " ".join(
+                f"{k}={v:.4f}" for k, v in m.items())
+                + f" ({dt*1e3:.1f} ms/step avg)")
+        if mgr is not None:
+            mgr.maybe_save(step, state)
+        if eval_fn is not None and step % cfg.log_every == 0:
+            eval_fn(step, state)
+    if mgr is not None:
+        # final durable state regardless of cadence
+        from repro.ft import checkpoint as ckpt_lib
+        ckpt_lib.save(cfg.ckpt_dir, cfg.total_steps, state)
+        ckpt_lib.gc_old(cfg.ckpt_dir, cfg.keep_last)
+    return state

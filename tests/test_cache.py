@@ -1,0 +1,156 @@
+"""ERCache core semantics: TTL lookup/insert/eviction (paper §3.2–3.3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cache as C
+from repro.core.hashing import Key64, bucket_index, hash_u32
+
+MIN = 60_000
+
+
+def keys_of(ids):
+    return Key64.from_int(np.asarray(ids, np.int64))
+
+
+def test_insert_then_lookup_hit():
+    state = C.init_cache(n_buckets=64, ways=4, dim=8)
+    k = keys_of([1, 2, 3])
+    vals = jnp.arange(24, dtype=jnp.float32).reshape(3, 8)
+    state = C.insert(state, k, vals, now_ms=1000, ttl_ms=MIN)
+    res = C.lookup(state, k, now_ms=2000, ttl_ms=MIN)
+    assert bool(res.hit.all())
+    np.testing.assert_allclose(res.values, vals)
+    np.testing.assert_array_equal(res.age_ms, [1000, 1000, 1000])
+
+
+def test_ttl_expiry_boundary():
+    state = C.init_cache(16, 4, 4)
+    k = keys_of([42])
+    state = C.insert(state, k, jnp.ones((1, 4)), now_ms=0, ttl_ms=MIN)
+    # exactly at TTL: still valid (<=)
+    assert bool(C.lookup(state, k, now_ms=MIN, ttl_ms=MIN).hit[0])
+    assert not bool(C.lookup(state, k, now_ms=MIN + 1, ttl_ms=MIN).hit[0])
+
+
+def test_miss_returns_zeros():
+    state = C.init_cache(16, 4, 4)
+    res = C.lookup(state, keys_of([7]), now_ms=0, ttl_ms=MIN)
+    assert not bool(res.hit[0])
+    np.testing.assert_allclose(res.values, 0.0)
+    assert int(res.age_ms[0]) == -1
+
+
+def test_overwrite_same_key_updates_value_and_ts():
+    state = C.init_cache(16, 2, 4)
+    k = keys_of([5])
+    state = C.insert(state, k, jnp.full((1, 4), 1.0), now_ms=0, ttl_ms=MIN)
+    state = C.insert(state, k, jnp.full((1, 4), 2.0), now_ms=500, ttl_ms=MIN)
+    res = C.lookup(state, k, now_ms=600, ttl_ms=MIN)
+    np.testing.assert_allclose(res.values, 2.0)
+    assert int(res.age_ms[0]) == 100
+    # only one way occupied (match > empty priority)
+    assert float(state.occupancy()) * state.capacity == 1.0
+
+
+def test_eviction_priority_expired_before_oldest():
+    """Within a full bucket: expired slots are evicted before live-oldest."""
+    state = C.init_cache(1, 2, 2)       # one bucket, two ways
+    a, b, c = keys_of([1]), keys_of([2]), keys_of([3])
+    one = jnp.ones((1, 2))
+    state = C.insert(state, a, one * 1, now_ms=0, ttl_ms=MIN)
+    state = C.insert(state, b, one * 2, now_ms=30_000, ttl_ms=MIN)
+    # at t=70_000: a (age 70s) is expired (ttl 60s), b is live
+    state = C.insert(state, c, one * 3, now_ms=70_000, ttl_ms=MIN)
+    assert not bool(C.lookup(state, a, 70_000, MIN).hit[0])     # evicted
+    assert bool(C.lookup(state, b, 70_000, MIN).hit[0])         # kept
+    assert bool(C.lookup(state, c, 70_000, MIN).hit[0])
+
+
+def test_eviction_oldest_when_all_live():
+    state = C.init_cache(1, 2, 2)
+    a, b, c = keys_of([1]), keys_of([2]), keys_of([3])
+    one = jnp.ones((1, 2))
+    state = C.insert(state, a, one, now_ms=0, ttl_ms=10 * MIN)
+    state = C.insert(state, b, one, now_ms=1000, ttl_ms=10 * MIN)
+    state = C.insert(state, c, one, now_ms=2000, ttl_ms=10 * MIN)
+    assert not bool(C.lookup(state, a, 2000, 10 * MIN).hit[0])  # oldest out
+    assert bool(C.lookup(state, b, 2000, 10 * MIN).hit[0])
+    assert bool(C.lookup(state, c, 2000, 10 * MIN).hit[0])
+
+
+def test_duplicate_keys_in_batch_last_writer_wins():
+    state = C.init_cache(16, 4, 2)
+    k = keys_of([9, 9, 9])
+    vals = jnp.asarray([[1., 1.], [2., 2.], [3., 3.]])
+    state = C.insert(state, k, vals, now_ms=0, ttl_ms=MIN)
+    res = C.lookup(state, keys_of([9]), now_ms=0, ttl_ms=MIN)
+    np.testing.assert_allclose(res.values[0], [3., 3.])
+    assert float(state.occupancy()) * state.capacity == 1.0
+
+
+def test_write_mask_skips_rows():
+    state = C.init_cache(16, 4, 2)
+    k = keys_of([1, 2])
+    state = C.insert(state, k, jnp.ones((2, 2)), now_ms=0, ttl_ms=MIN,
+                     write_mask=jnp.asarray([True, False]))
+    assert bool(C.lookup(state, keys_of([1]), 0, MIN).hit[0])
+    assert not bool(C.lookup(state, keys_of([2]), 0, MIN).hit[0])
+
+
+def test_backdated_ts_ages_from_compute_time():
+    state = C.init_cache(16, 4, 2)
+    k = keys_of([1])
+    state = C.insert(state, k, jnp.ones((1, 2)), now_ms=50_000, ttl_ms=MIN,
+                     ts_ms=jnp.asarray([10_000], jnp.int32))
+    res = C.lookup(state, k, now_ms=60_000, ttl_ms=MIN)
+    assert bool(res.hit[0]) and int(res.age_ms[0]) == 50_000
+    assert not bool(C.lookup(state, k, now_ms=70_001, ttl_ms=MIN).hit[0])
+
+
+def test_hash_determinism_and_spread():
+    ids = np.arange(10_000, dtype=np.int64) * 7919
+    k = keys_of(ids)
+    h1 = hash_u32(k)
+    h2 = hash_u32(k)
+    np.testing.assert_array_equal(h1, h2)
+    buckets = bucket_index(k, 256)
+    counts = np.bincount(np.asarray(buckets), minlength=256)
+    # roughly uniform: no bucket > 3x the mean
+    assert counts.max() < 3 * counts.mean()
+
+
+@settings(max_examples=25, deadline=None)
+@given(ids=st.lists(st.integers(0, 2**62), min_size=1, max_size=32),
+       ttl_s=st.integers(1, 3600))
+def test_property_insert_lookup_roundtrip(ids, ttl_s):
+    """Anything inserted is immediately readable within TTL, with the value
+    of the LAST write for duplicate ids."""
+    state = C.init_cache(64, 8, 4)
+    k = keys_of(ids)
+    vals = jnp.arange(len(ids) * 4, dtype=jnp.float32).reshape(-1, 4)
+    state = C.insert(state, k, vals, now_ms=0, ttl_ms=ttl_s * 1000)
+    res = C.lookup(state, k, now_ms=ttl_s * 1000, ttl_ms=ttl_s * 1000)
+    assert bool(res.hit.all())
+    last = {i: vals[j] for j, i in enumerate(ids)}
+    for j, i in enumerate(ids):
+        np.testing.assert_allclose(res.values[j], last[i])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_property_capacity_never_exceeded(data):
+    """Occupied slot count ≤ min(#distinct keys, capacity) after any
+    sequence of inserts."""
+    state = C.init_cache(4, 2, 2)
+    seen = set()
+    for _ in range(data.draw(st.integers(1, 6))):
+        ids = data.draw(st.lists(st.integers(0, 40), min_size=1,
+                                 max_size=16))
+        seen.update(ids)
+        t = data.draw(st.integers(0, 10_000))
+        state = C.insert(state, keys_of(ids),
+                         jnp.ones((len(ids), 2)), now_ms=t, ttl_ms=MIN)
+        occupied = int(float(state.occupancy()) * state.capacity + 0.5)
+        assert occupied <= min(len(seen), state.capacity)

@@ -1,0 +1,96 @@
+"""Update combination (paper §3.4, Fig. 5): one grouped write, per-member
+TTL validity, write-QPS accounting."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import combiner as G
+from repro.core.hashing import Key64
+
+MIN = 60_000
+
+SPEC = G.GroupSpec(members=(
+    G.GroupMember("ctr_first", dim=4, ttl_ms=5 * MIN),
+    G.GroupMember("cvr_first", dim=8, ttl_ms=1 * MIN),
+    G.GroupMember("ctr_second", dim=4, ttl_ms=10 * MIN),
+))
+
+
+def keys_of(ids):
+    return Key64.from_int(np.asarray(ids, np.int64))
+
+
+def vals(b, d, fill):
+    return jnp.full((b, d), float(fill))
+
+
+def test_one_write_many_reads():
+    state = G.init_grouped(SPEC, n_buckets=64, ways=4)
+    k = keys_of([1, 2])
+    state = G.insert_group(SPEC, state, k, {
+        "ctr_first": vals(2, 4, 1.0),
+        "cvr_first": vals(2, 8, 2.0),
+        "ctr_second": vals(2, 4, 3.0),
+    }, now_ms=0)
+    for name, d, fill in (("ctr_first", 4, 1.0), ("cvr_first", 8, 2.0),
+                          ("ctr_second", 4, 3.0)):
+        res = G.lookup_member(SPEC, state, name, k, now_ms=1000)
+        assert bool(res.hit.all()), name
+        np.testing.assert_allclose(res.values, fill)
+
+
+def test_per_member_ttl():
+    state = G.init_grouped(SPEC, n_buckets=64, ways=4)
+    k = keys_of([7])
+    state = G.insert_group(SPEC, state, k, {
+        "ctr_first": vals(1, 4, 1.0), "cvr_first": vals(1, 8, 2.0),
+        "ctr_second": vals(1, 4, 3.0)}, now_ms=0)
+    t = 2 * MIN      # cvr_first (1 min TTL) stale; others fresh
+    assert bool(G.lookup_member(SPEC, state, "ctr_first", k, t).hit[0])
+    assert not bool(G.lookup_member(SPEC, state, "cvr_first", k, t).hit[0])
+    assert bool(G.lookup_member(SPEC, state, "ctr_second", k, t).hit[0])
+
+
+def test_partial_failure_bitmap():
+    """A member whose inference failed contributes nothing — its bit stays 0
+    while siblings stay valid (paper: per-model validity in one record)."""
+    state = G.init_grouped(SPEC, n_buckets=64, ways=4)
+    k = keys_of([3])
+    state = G.insert_group(SPEC, state, k, {
+        "ctr_first": vals(1, 4, 1.0),
+        "cvr_first": vals(1, 8, 2.0),
+        "ctr_second": vals(1, 4, 3.0),
+    }, now_ms=0, member_mask={
+        "cvr_first": jnp.asarray([False]),
+    })
+    assert bool(G.lookup_member(SPEC, state, "ctr_first", k, 0).hit[0])
+    assert not bool(G.lookup_member(SPEC, state, "cvr_first", k, 0).hit[0])
+    assert bool(G.lookup_member(SPEC, state, "ctr_second", k, 0).hit[0])
+
+
+def test_missing_member_value_not_valid():
+    state = G.init_grouped(SPEC, n_buckets=64, ways=4)
+    k = keys_of([4])
+    state = G.insert_group(SPEC, state, k, {
+        "ctr_first": vals(1, 4, 1.0)}, now_ms=0)
+    assert bool(G.lookup_member(SPEC, state, "ctr_first", k, 0).hit[0])
+    assert not bool(G.lookup_member(SPEC, state, "cvr_first", k, 0).hit[0])
+
+
+def test_write_amplification_30x():
+    """Paper: ≥30× write-QPS reduction for 30 models (one stage each)."""
+    assert G.write_amplification(n_models=30, n_stages=1) >= 30.0
+    assert G.write_amplification(n_models=10, n_stages=3) == 30.0
+
+
+def test_group_update_refreshes_all_members():
+    state = G.init_grouped(SPEC, n_buckets=64, ways=4)
+    k = keys_of([5])
+    state = G.insert_group(SPEC, state, k, {
+        "ctr_first": vals(1, 4, 1.0), "cvr_first": vals(1, 8, 2.0),
+        "ctr_second": vals(1, 4, 3.0)}, now_ms=0)
+    state = G.insert_group(SPEC, state, k, {
+        "ctr_first": vals(1, 4, 9.0), "cvr_first": vals(1, 8, 8.0),
+        "ctr_second": vals(1, 4, 7.0)}, now_ms=MIN)
+    res = G.lookup_member(SPEC, state, "ctr_first", k, MIN + 1000)
+    np.testing.assert_allclose(res.values, 9.0)
+    assert int(res.age_ms[0]) == 1000

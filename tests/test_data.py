@@ -1,0 +1,76 @@
+"""Data layer: access-pattern generator calibration + click world."""
+import numpy as np
+import pytest
+
+from repro.data.access_patterns import (FIG2_KNOTS, FIG6_KNOTS,
+                                        InterArrivalDist, StreamConfig,
+                                        consecutive_interval_cdf,
+                                        generate_stream_fast,
+                                        simulate_hit_rate)
+from repro.data.clickstream import ClickSimulator, ClickWorld
+
+
+def test_interarrival_cdf_monotone_and_anchored():
+    d = InterArrivalDist(FIG2_KNOTS)
+    probes = np.asarray([60.0, 600.0, 3600.0])
+    cdf = d.cdf(probes)
+    assert (np.diff(cdf) > 0).all()
+    np.testing.assert_allclose(cdf, [0.52, 0.76, 0.88], atol=1e-6)
+
+
+def test_sampling_matches_cdf():
+    d = InterArrivalDist(FIG2_KNOTS)
+    rng = np.random.default_rng(0)
+    xs = d.sample(rng, 200_000)
+    emp = (xs <= 600.0).mean()
+    assert abs(emp - 0.76) < 0.01
+
+
+def test_stream_is_sorted_and_deterministic():
+    cfg = StreamConfig(n_users=200, horizon_s=3600.0, seed=5)
+    t1, u1 = generate_stream_fast(cfg)
+    t2, u2 = generate_stream_fast(cfg)
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(u1, u2)
+    assert (np.diff(t1) >= 0).all()
+
+
+def test_hit_rate_increases_with_ttl():
+    cfg = StreamConfig(n_users=500, horizon_s=24 * 3600.0, seed=1)
+    t, u = generate_stream_fast(cfg, InterArrivalDist(FIG6_KNOTS))
+    rates = [simulate_hit_rate(t, u, ttl_min * 60_000)
+             for ttl_min in (1, 5, 60)]
+    assert rates[0] < rates[1] < rates[2]
+    assert rates[2] > 0.75
+
+
+def test_hit_rate_fig6_calibration_small():
+    """Scaled-down version of the Fig. 6 anchor (full run in benchmarks)."""
+    cfg = StreamConfig(n_users=800, horizon_s=48 * 3600.0, seed=3)
+    t, u = generate_stream_fast(cfg, InterArrivalDist(FIG6_KNOTS))
+    got = simulate_hit_rate(t, u, 5 * 60_000,
+                            measure_from_ms=int(12 * 3.6e6))
+    assert abs(got - 0.687) < 0.03
+
+
+def test_click_world_ou_drift_decorrelates():
+    world = ClickWorld(n_users=100, dim=8, tau_s=3600.0, seed=0)
+    sim = ClickSimulator(world)
+    uid = np.arange(100)
+    th0 = sim.theta[uid].copy()
+    sim.advance_to(uid, now_ms=int(0.1 * 3600e3))     # 0.1 τ
+    c_small = np.mean([np.corrcoef(th0[i], sim.theta[i])[0, 1]
+                       for i in range(100)])
+    sim.advance_to(uid, now_ms=int(5 * 3600e3))       # 5 τ total
+    c_large = np.mean([np.corrcoef(th0[i], sim.theta[i])[0, 1]
+                       for i in range(100)])
+    assert c_small > 0.85
+    assert abs(c_large) < 0.25
+
+
+def test_impressions_base_rate():
+    world = ClickWorld(n_users=2000, dim=16, seed=1)
+    sim = ClickSimulator(world)
+    uid = np.arange(2000)
+    _, y = sim.impressions(uid)
+    assert 0.002 < y.mean() < 0.15            # low-CTR regime

@@ -1,0 +1,129 @@
+"""Fault-tolerance layer: checkpoint atomicity/resume, failure injection,
+elastic re-mesh, write buffer, rate limiter, NE metric."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as C
+from repro.core import writebuf as WB
+from repro.core.hashing import Key64
+from repro.core.ratelimit import TokenBucket
+from repro.ft import checkpoint as ckpt
+from repro.ft.elastic import elastic_transition, plan_mesh
+from repro.ft.failure import FailureInjector, StragglerHedger
+from repro.training.ne import NEAccumulator, ne_jnp
+
+
+def tree():
+    return {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": {"c": np.ones(5, np.int32), "d": np.float32(2.5)}}
+
+
+def like(t):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype), t)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 5, tree())
+    out = ckpt.restore(d, 5, like(tree()))
+    np.testing.assert_array_equal(out["a"], tree()["a"])
+    assert float(out["b"]["d"]) == 2.5
+
+
+def test_torn_checkpoint_skipped(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 5, tree())
+    # simulate a crash mid-save: directory without COMMITTED marker
+    os.makedirs(os.path.join(d, "step_00000009"))
+    with open(os.path.join(d, "step_00000009", "manifest.json"), "w") as f:
+        f.write("{}")
+    assert ckpt.latest_step(d) == 5
+
+
+def test_gc_keeps_last_k(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        ckpt.save(d, s, tree())
+    ckpt.gc_old(d, keep_last=2)
+    assert ckpt.latest_step(d) == 4
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(d))
+    assert steps == [3, 4]
+
+
+def test_row_split_large_leaf(tmp_path):
+    d = str(tmp_path)
+    big = {"t": np.arange(300_000, dtype=np.float32).reshape(300, 1000)}
+    ckpt.save(d, 1, big, max_shard_bytes=100_000)
+    out = ckpt.restore(d, 1, like(big))
+    np.testing.assert_array_equal(out["t"], big["t"])
+
+
+def test_failure_injector_burst_windows():
+    inj = FailureInjector(base_rate=0.01, burst_rate=0.9,
+                          burst_windows_ms=((100, 200),), seed=0)
+    base = inj.mask(20_000, now_ms=50).mean()
+    burst = inj.mask(20_000, now_ms=150).mean()
+    assert 0.005 < base < 0.02
+    assert 0.85 < burst < 0.95
+
+
+def test_straggler_hedging_cuts_p99():
+    plain = StragglerHedger(hedge_after_ms=None, seed=1).latencies(50_000)
+    hedged = StragglerHedger(hedge_after_ms=20.0, seed=1).latencies(50_000)
+    p99_plain = np.percentile(plain["latency_ms"], 99)
+    p99_hedged = np.percentile(hedged["latency_ms"], 99)
+    assert p99_hedged < p99_plain * 0.8
+    assert hedged["extra_compute_frac"] < 0.1
+
+
+def test_elastic_plan_divisibility():
+    plan = plan_mesh(256, global_batch=512, model_parallel_min=8)
+    assert plan.n_devices == 256
+    assert 512 % plan.shape[0] == 0
+    tr = elastic_transition(plan, 240, 512, model_parallel_min=8)
+    newp = tr["new_plan"]
+    assert newp.n_devices == 240
+    assert newp.shape[-1] >= 8
+    assert tr["restart_from_checkpoint"]
+
+
+def test_writebuf_roundtrip_with_ring_overflow():
+    buf = WB.init_writebuf(8, 4)
+    state = C.init_cache(64, 4, 4)
+    # append 12 records into an 8-slot ring: oldest 4 overwritten
+    for i in range(3):
+        ids = np.arange(i * 4, i * 4 + 4, dtype=np.int64)
+        buf = WB.append(buf, Key64.from_int(ids),
+                        jnp.full((4, 4), float(i)), ts_ms=i * 100,
+                        mask=jnp.ones(4, bool))
+    state, buf = WB.flush(buf, state, now_ms=300, ttl_ms=60_000)
+    assert int(buf.count) == 0
+    # newest 8 ids (4..11) survive; 0..3 overwritten
+    res = C.lookup(state, Key64.from_int(np.arange(12, dtype=np.int64)),
+                   300, 60_000)
+    hits = np.asarray(res.hit)
+    assert not hits[:4].any()
+    assert hits[4:].all()
+
+
+def test_token_bucket_sheds_spike():
+    tb = TokenBucket(rate_per_s=100.0, burst=100.0)
+    assert tb.admit(0, 100) == 100          # burst drained
+    assert tb.admit(1, 100) == 0            # 1 ms later: nothing refilled
+    assert tb.admit(1001, 150) == 100       # 1 s later: rate×1s refilled
+    assert tb.rejected == 150
+
+
+def test_ne_metric_base_rate_is_one():
+    rng = np.random.default_rng(0)
+    y = (rng.uniform(size=100_000) < 0.02).astype(np.float32)
+    p = np.full_like(y, y.mean())
+    acc = NEAccumulator()
+    acc.add(y, p)
+    assert abs(acc.ne - 1.0) < 1e-6
+    assert abs(float(ne_jnp(jnp.asarray(y), jnp.asarray(p))) - 1.0) < 1e-4

@@ -1,0 +1,105 @@
+"""Launch-layer units: sharding rules, opt-state spec matching, cell
+registry, HLO collective parser + wire-byte model."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import all_cells, get_config, list_archs
+from repro.distributed import sharding as shd
+from repro.launch import dryrun
+from repro.launch import specs as specs_lib
+
+
+def test_all_cells_is_40():
+    cells = all_cells()
+    assert len(cells) == 40
+    assert len({a for a, _ in cells}) == 10
+
+
+def test_logical_to_spec_respects_mesh_axes():
+    spec = shd.logical_to_spec(("batch", "seq", "heads"), shd.LM_RULES,
+                               ("data", "model"))
+    assert spec == P("data", None, "model")     # pod dropped, heads→model
+    spec3 = shd.logical_to_spec(("batch", "seq", "heads"), shd.LM_RULES,
+                                ("pod", "data", "model"))
+    assert spec3 == P(("pod", "data"), None, "model")
+
+
+def test_logical_to_spec_never_reuses_axis():
+    # expert and ffn both map to model; second one must drop
+    spec = shd.logical_to_spec(("expert", "ffn"), shd.LM_RULES,
+                               ("data", "model"))
+    assert spec == P("model", None)
+
+
+def test_divisible_or_replicate():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # 56 heads over a 16-wide model axis on a REAL mesh
+    import numpy as np
+    fake = type("M", (), {"shape": {"data": 16, "model": 16}})()
+    spec = shd.divisible_or_replicate(P(None, "model"), (100, 56), fake)
+    assert spec == P(None, None)
+    spec = shd.divisible_or_replicate(P(None, "model"), (100, 64), fake)
+    assert spec == P(None, "model")
+
+
+def test_opt_state_specs_shape_matching():
+    params = {"w": jax.ShapeDtypeStruct((256, 512), jnp.float32)}
+    pspecs = {"w": P("model", "data")}
+    opt_state = {"step": jax.ShapeDtypeStruct((), jnp.int32),
+                 "v": {"w": {"vr": jax.ShapeDtypeStruct((256,), jnp.float32),
+                             "vc": jax.ShapeDtypeStruct((512,),
+                                                        jnp.float32)}},
+                 "m": {"w": jax.ShapeDtypeStruct((256, 512), jnp.float32)}}
+    specs = specs_lib._opt_state_specs(opt_state, params, pspecs)
+    assert specs["m"]["w"] == P("model", "data")
+    assert specs["v"]["w"]["vr"] == P("model")     # row factor drops last
+    assert specs["v"]["w"]["vc"] == P("data")      # col factor drops -2
+    assert specs["step"] == P()
+
+
+HLO = """
+HloModule test
+ENTRY %main {
+  %p0 = f32[1024,64]{1,0} parameter(0)
+  %ar = f32[1024,64]{1,0} all-reduce(%p0), replica_groups=[16,16]<=[256]
+  %ag = f32[64,64]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[64,64]{1,0} reduce-scatter(%ar), replica_groups=[32,8]<=[256]
+  ROOT %t = (f32[64,64]{1,0}) tuple(%rs)
+}
+"""
+
+
+def test_collective_parser_wire_bytes():
+    out = dryrun.collective_bytes(HLO, n_devices=256)
+    ar_op = 1024 * 64 * 4
+    assert out["counts"]["all-reduce"] == 1
+    assert abs(out["all-reduce"] - ar_op * 2 * 15 / 16) < 1
+    assert abs(out["all-gather"] - ar_op * 3) < 1        # (n-1)=3 × operand
+    assert abs(out["reduce-scatter"] - ar_op * 7 / 8) < 1
+    assert out["total"] == out["all-reduce"] + out["all-gather"] \
+        + out["reduce-scatter"]
+
+
+def test_wire_factors():
+    assert dryrun._wire_factor("all-gather", 4) == 3.0
+    assert dryrun._wire_factor("all-reduce", 16) == 2 * 15 / 16
+    assert dryrun._wire_factor("all-gather", 1) == 0.0
+
+
+def test_group_size_parsing():
+    assert dryrun._group_size("replica_groups=[8,64]<=[512]", 512) == 64
+    assert dryrun._group_size("replica_groups={{0,1,2}}", 512) == 3
+    assert dryrun._group_size("no groups here", 512) == 512
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_lm_flops_positive_and_scaled(arch):
+    cfg = get_config(arch)
+    if cfg.family != "lm":
+        pytest.skip("lm only")
+    f_train = specs_lib._lm_flops(cfg, 1024, True, 2048)
+    f_inf = specs_lib._lm_flops(cfg, 1024, False, 2048)
+    assert f_train > f_inf > 0
+    assert f_train / f_inf == pytest.approx(3.0, rel=0.01)

@@ -1,0 +1,144 @@
+"""CachedEmbeddingServer: the Fig. 3 sequence diagram end to end."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import server as S
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64
+
+DIM = 8
+MIN = 60_000
+
+
+def tower(params, feats):
+    return feats @ params                     # (B, DIM)
+
+
+@pytest.fixture
+def setup():
+    cfg = CacheConfig(model_id=1, model_type="ctr", n_buckets=256, ways=4,
+                      value_dim=DIM, cache_ttl_ms=5 * MIN,
+                      failover_ttl_ms=60 * MIN)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower, miss_budget=8)
+    state = S.init_server_state(cfg)
+    params = jnp.eye(DIM)
+    return cfg, srv, state, params
+
+
+def feats_of(ids):
+    return jnp.asarray(np.asarray(ids)[:, None] * np.ones(DIM), jnp.float32)
+
+
+def keys_of(ids):
+    return Key64.from_int(np.asarray(ids, np.int64))
+
+
+def test_cold_serve_computes_all(setup):
+    _, srv, state, params = setup
+    ids = np.arange(8)
+    res = srv.serve_step(params, state, keys_of(ids), feats_of(ids), 0)
+    assert int(res.stats["tower_inferences"]) == 8
+    assert int(res.stats["direct_hits"]) == 0
+    np.testing.assert_array_equal(res.source, S.SRC_COMPUTED)
+    np.testing.assert_allclose(res.embeddings, feats_of(ids))
+
+
+def test_warm_serve_hits_direct_cache(setup):
+    _, srv, state, params = setup
+    ids = np.arange(8)
+    res = srv.serve_step(params, state, keys_of(ids), feats_of(ids), 0)
+    state = srv.flush(res.state, 0)                  # async write applied
+    res2 = srv.serve_step(params, state, keys_of(ids), feats_of(ids), 1000)
+    assert int(res2.stats["direct_hits"]) == 8
+    assert int(res2.stats["tower_inferences"]) == 0
+    np.testing.assert_array_equal(res2.source, S.SRC_DIRECT)
+    np.testing.assert_allclose(res2.embeddings, feats_of(ids))
+    assert int(res2.age_ms.max()) == 1000
+
+
+def test_direct_expiry_failover_recovers(setup):
+    cfg, srv, state, params = setup
+    ids = np.arange(8)
+    res = srv.serve_step(params, state, keys_of(ids), feats_of(ids), 0)
+    state = srv.flush(res.state, 0)
+    # past direct TTL, within failover TTL, all inferences FAIL
+    t = cfg.cache_ttl_ms + 1
+    fail = jnp.ones((8,), bool)
+    res3 = srv.serve_step(params, state, keys_of(ids), feats_of(ids), t,
+                          failure_mask=fail)
+    assert int(res3.stats["direct_hits"]) == 0
+    assert int(res3.stats["failover_hits"]) == 8
+    assert int(res3.stats["fallbacks"]) == 0
+    np.testing.assert_array_equal(res3.source, S.SRC_FAILOVER)
+    np.testing.assert_allclose(res3.embeddings, feats_of(ids))
+
+
+def test_total_fallback_when_both_caches_cold(setup):
+    _, srv, state, params = setup
+    ids = np.arange(8)
+    fail = jnp.ones((8,), bool)
+    res = srv.serve_step(params, state, keys_of(ids), feats_of(ids), 0,
+                         failure_mask=fail)
+    assert int(res.stats["fallbacks"]) == 8
+    np.testing.assert_array_equal(res.source, S.SRC_FALLBACK)
+    np.testing.assert_allclose(res.embeddings, 0.0)
+
+
+def test_miss_budget_overflow_routes_to_failover_or_fallback(setup):
+    cfg, srv, state, params = setup
+    ids = np.arange(16)                      # budget is 8
+    res = srv.serve_step(params, state, keys_of(ids), feats_of(ids), 0)
+    assert int(res.stats["tower_inferences"]) == 8
+    assert int(res.stats["overflow"]) == 8
+    assert int(res.stats["fallbacks"]) == 8  # failover cold → fallback
+    # exactly the 8 computed got real embeddings
+    computed = np.asarray(res.source) == S.SRC_COMPUTED
+    assert computed.sum() == 8
+
+
+def test_mixed_batch_provenance(setup):
+    cfg, srv, state, params = setup
+    warm = np.arange(4)
+    res = srv.serve_step(params, state, keys_of(warm), feats_of(warm), 0)
+    state = srv.flush(res.state, 0)
+    ids = np.arange(8)                       # 4 warm + 4 cold
+    res2 = srv.serve_step(params, state, keys_of(ids), feats_of(ids), 1000)
+    src = np.asarray(res2.source)
+    assert (src[:4] == S.SRC_DIRECT).all()
+    assert (src[4:] == S.SRC_COMPUTED).all()
+    np.testing.assert_allclose(res2.embeddings, feats_of(ids))
+
+
+def test_flush_populates_both_caches(setup):
+    cfg, srv, state, params = setup
+    ids = np.arange(4)
+    res = srv.serve_step(params, state, keys_of(ids), feats_of(ids), 0)
+    state = srv.flush(res.state, 0)
+    t = cfg.cache_ttl_ms + 1                 # direct expired
+    from repro.core import cache as C
+    fo = C.lookup(state.failover, keys_of(ids), t, cfg.failover_ttl_ms)
+    assert bool(fo.hit.all())
+
+
+def test_no_cache_baseline():
+    params = jnp.eye(DIM)
+    ids = np.arange(4)
+    emb, src = S.serve_step_no_cache(tower, params, keys_of(ids),
+                                     feats_of(ids),
+                                     jnp.asarray([0, 1, 0, 0], bool))
+    assert (np.asarray(src) == [S.SRC_COMPUTED, S.SRC_FALLBACK,
+                                S.SRC_COMPUTED, S.SRC_COMPUTED]).all()
+    np.testing.assert_allclose(emb[1], 0.0)
+
+
+def test_jit_serve_step_matches_eager(setup):
+    _, srv, state, params = setup
+    ids = np.arange(8)
+    r1 = srv.serve_step(params, state, keys_of(ids), feats_of(ids), 0)
+    r2 = srv.jit_serve_step(params, state, keys_of(ids), feats_of(ids), 0)
+    np.testing.assert_allclose(r1.embeddings, r2.embeddings, atol=1e-6)
+    np.testing.assert_array_equal(r1.source, r2.source)
