@@ -1,0 +1,100 @@
+"""Serve-path throughput: fused insert plan + single-dispatch serve_step.
+
+Times the pieces ISSUE 1 rebuilt:
+
+* ``insert`` with the fused single-sort plan, and ``flush_dual`` (one
+  shared plan for direct+failover) vs two independent flushes;
+* end-to-end ``serve_step`` on the jnp reference backend vs the pallas
+  kernel backend (on CPU the pallas numbers run the interpreter — the
+  jnp/pallas ratio is only meaningful on a real TPU backend, but the
+  trajectory is tracked from this PR onward either way).
+
+Returns a metrics dict merged into ``BENCH_serve.json`` by run.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import cache as C
+from repro.core import server as S
+from repro.core import writebuf as wb_lib
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64
+
+MIN = 60_000
+DIM = 64
+
+
+def _tower(params, feats):
+    return feats @ params
+
+
+def run(report):
+    quick = getattr(common, "QUICK", False)
+    B = 256 if quick else 1024
+    n_buckets = 1 << 10 if quick else 1 << 12
+    rng = np.random.default_rng(0)
+
+    # ---------------------------------------------- fused insert / flush
+    state = C.init_cache(n_buckets, 8, DIM)
+    ids = rng.integers(0, 4 * B, size=B).astype(np.int64)
+    keys = Key64.from_int(ids)
+    vals = jnp.asarray(rng.standard_normal((B, DIM)), jnp.float32)
+    insert_jit = jax.jit(lambda s, k, v: C.insert(s, k, v, 1000, MIN))
+    us_insert = common.time_us(insert_jit, state, keys, vals)
+    report.add(f"insert_fused_plan_B{B}", us_insert,
+               f"{B / (us_insert * 1e-6):.0f}_writes_per_s")
+
+    buf = wb_lib.init_writebuf(B, DIM)
+    buf = wb_lib.append(buf, keys, vals, 1000, mask=jnp.ones((B,), bool))
+    failover = C.init_cache(n_buckets, 8, DIM)
+
+    def two_flushes(bf, d, f):
+        d2, bf2 = wb_lib.flush(bf, d, 2000, MIN)
+        f2, _ = wb_lib.flush(bf, f, 2000, 60 * MIN)
+        return d2, f2, bf2
+
+    flush_dual_jit = jax.jit(lambda bf, d, f: wb_lib.flush_dual(
+        bf, d, f, 2000, MIN, 60 * MIN))
+    two_flushes_jit = jax.jit(two_flushes)
+    us_dual = common.time_us(flush_dual_jit, buf, state, failover)
+    us_two = common.time_us(two_flushes_jit, buf, state, failover)
+    report.add(f"flush_dual_B{B}", us_dual,
+               f"vs_two_flushes={us_two / us_dual:.2f}x")
+
+    # --------------------------------------------------- serve_step e2e
+    serve_us = {}
+    for backend in ("jnp", "pallas"):
+        cfg = CacheConfig(model_id=1, model_type="ctr", n_buckets=n_buckets,
+                          ways=8, value_dim=DIM, cache_ttl_ms=5 * MIN,
+                          failover_ttl_ms=60 * MIN, backend=backend)
+        srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=_tower,
+                                      miss_budget=B // 4)
+        st = S.init_server_state(cfg, writebuf_capacity=B)
+        params = jnp.asarray(rng.standard_normal((DIM, DIM)), jnp.float32)
+        feats = jnp.asarray(rng.standard_normal((B, DIM)), jnp.float32)
+        # warm the caches so the probe sees a realistic hit mix
+        res = srv.serve_step(params, st, keys, feats, 0)
+        st = srv.flush(res.state, 0)
+        # plain jit (no donation) so the timing loop can reuse its args
+        step = jax.jit(srv.serve_step)
+        serve_us[backend] = common.time_us(step, params, st, keys, feats,
+                                           1000)
+        report.add(f"serve_step_{backend}_B{B}", serve_us[backend],
+                   f"{B / (serve_us[backend] * 1e-6):.0f}_req_per_s")
+
+    return {
+        "batch": B,
+        "insert_us": us_insert,
+        "insert_writes_per_s": B / (us_insert * 1e-6),
+        "flush_dual_us": us_dual,
+        "flush_two_passes_us": us_two,
+        "flush_dual_speedup": us_two / us_dual,
+        "serve_step_us": serve_us,
+        "serve_step_req_per_s": {k: B / (v * 1e-6)
+                                 for k, v in serve_us.items()},
+        "serve_ref_vs_pallas_speedup": serve_us["jnp"] / serve_us["pallas"],
+    }

@@ -6,6 +6,9 @@ from typing import Callable, List, Tuple
 
 import numpy as np
 
+# Set by run.py --quick: benches shrink shapes/iterations for CI smoke runs.
+QUICK = False
+
 
 def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
     """Median wall time of fn(*args) in microseconds (jit-warmed)."""

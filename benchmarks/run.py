@@ -1,15 +1,22 @@
-"""Benchmark harness: one function per paper table/figure.
+"""Benchmark harness: one function per paper table/figure + serve-path perf.
 
-Prints ``name,us_per_call,derived`` CSV (benchmarks/common.Report).
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.Report) and
+writes the machine-readable ``BENCH_serve.json`` (probe/insert/serve_step
+throughput and ref-vs-pallas speedups) so the perf trajectory is tracked
+PR over PR.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig6,table2]
+    PYTHONPATH=src python -m benchmarks.run --quick      # CI smoke subset
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
+from benchmarks import common
 from benchmarks.common import Report
 
 BENCHES = [
@@ -22,17 +29,42 @@ BENCHES = [
     ("fig10_drain", "benchmarks.bench_drain"),
     ("capacity_beyond_paper", "benchmarks.bench_capacity"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("kernel_probe", "benchmarks.bench_kernel_probe"),
+    ("serve_path", "benchmarks.bench_serve"),
 ]
+
+# the fast, serve-path-focused subset run by CI (--quick with no --only)
+QUICK_BENCHES = ("kernel_probe", "serve_path")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filters")
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes + serve-path benches only (CI smoke)")
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="path for the machine-readable serve metrics "
+                         "('' disables)")
     args = ap.parse_args()
-    only = args.only.split(",") if args.only else None
+    common.QUICK = args.quick
+    if args.only:
+        only = args.only.split(",")
+    elif args.quick:
+        only = list(QUICK_BENCHES)
+    else:
+        only = None
+
+    import jax
 
     report = Report()
+    metrics = {
+        "schema": "ercache-bench-serve/1",
+        "quick": args.quick,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "benches": {},
+    }
     t_start = time.perf_counter()
     for name, module in BENCHES:
         if only and not any(f in name for f in only):
@@ -41,12 +73,23 @@ def main() -> None:
         print(f"# --- {name} ---", file=sys.stderr, flush=True)
         mod = __import__(module, fromlist=["run"])
         try:
-            mod.run(report)
+            out = mod.run(report)
+            if isinstance(out, dict):
+                metrics["benches"][name] = out
         except Exception as e:  # keep the harness going; record the failure
             report.add(f"{name}_FAILED", 0.0, f"{type(e).__name__}: {e}")
+            metrics["benches"][name] = {"error": f"{type(e).__name__}: {e}"}
         print(f"# {name} done in {time.perf_counter()-t0:.1f}s",
               file=sys.stderr, flush=True)
+    metrics["wall_s"] = round(time.perf_counter() - t_start, 1)
     report.print_csv(header=True)
+    # Only (re)write the serve-metrics file when the serve-path benches
+    # actually ran — a partial `--only fig6` iteration must not clobber the
+    # tracked BENCH_serve.json with an empty one.
+    if args.json and any(b in metrics["benches"] for b in QUICK_BENCHES):
+        with open(args.json, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
     print(f"# total {time.perf_counter()-t_start:.1f}s", file=sys.stderr)
 
 

@@ -96,12 +96,24 @@ def _probe(state: CacheState, keys: Key64):
     return bucket, match, empty, ts
 
 
-def lookup(state: CacheState, keys: Key64, now_ms, ttl_ms) -> LookupResult:
-    """Batched TTL-validated lookup (pure-jnp reference path).
+def lookup(state: CacheState, keys: Key64, now_ms, ttl_ms,
+           backend: str = "jnp") -> LookupResult:
+    """Batched TTL-validated lookup.
 
-    The Pallas ``cache_probe`` kernel implements the same contract fused
-    (kernels/cache_probe.py); tests assert they agree bit-exactly.
+    ``backend="jnp"`` is the pure-jnp reference path (the bit-exact oracle);
+    ``backend="pallas"`` dispatches the tiled ``cache_probe`` kernel
+    (kernels/cache_probe.py) — tests assert the two agree bit-exactly.
     """
+    if backend == "pallas":
+        from repro.kernels import cache_probe as probe_kernels
+
+        buckets = bucket_index(keys, state.n_buckets)
+        hit, vals, age = probe_kernels.cache_probe_tiled(
+            state.key_hi, state.key_lo, state.write_ts, state.values,
+            keys.hi, keys.lo, buckets, now_ms, ttl_ms)
+        return LookupResult(hit=hit, values=vals, age_ms=age)
+    if backend != "jnp":
+        raise ValueError(f"unknown cache backend: {backend!r}")
     now_ms = jnp.int32(now_ms)
     ttl_ms = jnp.int32(ttl_ms)
     bucket, match, _, ts = _probe(state, keys)
@@ -118,24 +130,123 @@ def lookup(state: CacheState, keys: Key64, now_ms, ttl_ms) -> LookupResult:
     return LookupResult(hit=hit, values=vals, age_ms=age)
 
 
-def _ways_by_evictability(empty, expired, ts) -> jnp.ndarray:
-    """(B, W) → (B, W): way indices sorted best-to-evict first.
+def lookup_dual(direct: CacheState, failover: CacheState, keys: Key64,
+                now_ms, direct_ttl_ms, failover_ttl_ms,
+                backend: str = "jnp"):
+    """Probe the direct AND failover caches for the same keys.
 
-    Order: empty > expired > oldest live (paper §3.3 TTL eviction).
-    Lexicographic (priority, ts) argsort in two stable stages (int32-safe).
+    Returns (LookupResult_direct, LookupResult_failover). On the pallas
+    backend this is a SINGLE fused kernel launch (``cache_probe_dual``);
+    on jnp it is two reference lookups — same results either way.
     """
+    if backend == "pallas":
+        from repro.kernels import cache_probe as probe_kernels
+
+        b_d = bucket_index(keys, direct.n_buckets)
+        b_f = bucket_index(keys, failover.n_buckets)
+        (hd, vd, ad), (hf, vf, af) = probe_kernels.cache_probe_dual(
+            direct.key_hi, direct.key_lo, direct.write_ts, direct.values,
+            failover.key_hi, failover.key_lo, failover.write_ts,
+            failover.values, keys.hi, keys.lo, b_d, b_f,
+            now_ms, direct_ttl_ms, failover_ttl_ms)
+        return (LookupResult(hit=hd, values=vd, age_ms=ad),
+                LookupResult(hit=hf, values=vf, age_ms=af))
+    return (lookup(direct, keys, now_ms, direct_ttl_ms, backend=backend),
+            lookup(failover, keys, now_ms, failover_ttl_ms, backend=backend))
+
+
+def _dedupe(keys: Key64, live: jnp.ndarray) -> jnp.ndarray:
+    """ONE lexsort: last-writer-wins batch dedupe, cache-independent.
+
+    Returns winner (B,) bool — the LAST live occurrence of each distinct
+    key. Depends only on the keys (a key maps to the same bucket however
+    the cache is sized), so a dual insert shares this across both caches.
+    """
+    B = keys.hi.shape[0]
+    idx = jnp.arange(B, dtype=jnp.int32)
+    dead = (~live).astype(jnp.int32)
+    order = jnp.lexsort((idx, keys.lo, keys.hi, dead))
+    s_d = dead[order]
+    s_hi = keys.hi[order]
+    s_lo = keys.lo[order]
+    nxt = lambda a, fill: jnp.concatenate([a[1:], jnp.full((1,), fill,
+                                                           a.dtype)])
+    same_as_next = ((s_d == nxt(s_d, -1)) & (s_hi == nxt(s_hi, 0))
+                    & (s_lo == nxt(s_lo, 0)))
+    winner_sorted = (~same_as_next) & (s_d == 0)
+    return jnp.zeros((B,), bool).at[order].set(winner_sorted)
+
+
+def _bucket_rank(bucket: jnp.ndarray, winner: jnp.ndarray,
+                 n_buckets: int) -> jnp.ndarray:
+    """Per-bucket rank of the winners (batch order within each bucket), via
+    ONE stable single-key argsort — the only per-cache sort of the plan."""
+    B = bucket.shape[0]
+    bkt_w = jnp.where(winner, bucket, jnp.int32(n_buckets))
+    order = jnp.argsort(bkt_w, stable=True)
+    s_b = bkt_w[order]
+    win_i = winner[order].astype(jnp.int32)
+    cum = jnp.cumsum(win_i)
+    prev_b = jnp.concatenate([jnp.full((1,), -1, s_b.dtype), s_b[:-1]])
+    is_start = s_b != prev_b
+    seg_base = jax.lax.cummax(jnp.where(is_start, cum - win_i, -1))
+    rank_sorted = cum - 1 - seg_base
+    return jnp.zeros((B,), jnp.int32).at[order].set(rank_sorted)
+
+
+def _choose_way(match, empty, expired, ts, rank) -> jnp.ndarray:
+    """(B, W) probe results + (B,) rank → (B,) way. Sort-free.
+
+    Eviction order is lexicographic (priority, ts, way) with priority
+    empty(0) > expired(1) > live(2) — the paper §3.3 TTL eviction. Instead
+    of argsorting each bucket row twice, compute each way's position in
+    that order with O(W²) vectorized comparisons (W is 4–8: 16–64 lanes),
+    then one-hot select the way whose position equals the insert rank.
+    """
+    W = ts.shape[-1]
     priority = jnp.where(empty, 0, jnp.where(expired, 1, 2)).astype(jnp.int32)
-    order_ts = jnp.argsort(ts, axis=-1, stable=True)
-    prio_sorted = jnp.take_along_axis(priority, order_ts, axis=-1)
-    order_prio = jnp.argsort(prio_sorted, axis=-1, stable=True)
-    return jnp.take_along_axis(order_ts, order_prio, axis=-1)
+    w_idx = jnp.arange(W, dtype=jnp.int32)
+    # rank_ts[b, w] = #{w' : (ts[b, w'], w') < (ts[b, w], w)} — the rank of
+    # each way's timestamp within its row, way index as tie-break.
+    ts_w = ts[:, :, None]                   # (B, W, 1): w on axis 1
+    ts_wp = ts[:, None, :]                  # (B, 1, W): w' on axis 2
+    lt = (ts_wp < ts_w) | ((ts_wp == ts_w)
+                           & (w_idx[None, None, :] < w_idx[None, :, None]))
+    rank_ts = jnp.sum(lt, axis=2).astype(jnp.int32)          # (B, W)
+    # priority*W + rank_ts is distinct within a row and orders ways exactly
+    # by (priority, ts, way); pos[b, w] = position of way w in evict order.
+    composite = priority * W + rank_ts
+    pos = jnp.sum(composite[:, None, :] < composite[:, :, None], axis=2)
+    r = jnp.clip(rank, 0, W - 1)
+    way_evict = jnp.sum(w_idx[None, :] * (pos == r[:, None]),
+                        axis=1).astype(jnp.int32)
+    has_match = jnp.any(match, axis=-1)
+    way_match = jnp.argmax(match, axis=-1).astype(jnp.int32)
+    return jnp.where(has_match, way_match, way_evict)
+
+
+def _resolve_collisions(winner, bucket, way, n_buckets: int,
+                        ways: int) -> jnp.ndarray:
+    """Last-writer-wins on residual slot collisions (clipped ranks /
+    match-vs-evict overlap), without a sort: scatter-max each winner's batch
+    index into its target slot, keep only the index that won."""
+    B = bucket.shape[0]
+    idx = jnp.arange(B, dtype=jnp.int32)
+    slot = bucket * ways + way
+    slot_w = jnp.where(winner, slot, jnp.int32(n_buckets * ways))
+    best = jnp.full((n_buckets * ways,), -1, jnp.int32)
+    best = best.at[slot_w].max(idx, mode="drop")
+    return winner & (best[slot] == idx)
 
 
 def plan_insert(state: CacheState, keys: Key64, now_ms, ttl_ms,
                 write_mask: Optional[jnp.ndarray] = None):
     """Slot assignment for a batched insert, emulating sequential writes.
 
-    Returns (winner (B,) bool, bucket (B,), way (B,)). Semantics:
+    ONE lexsort (``_dedupe``) + one single-key argsort (``_bucket_rank``)
+    drive the whole plan; way selection and collision resolution are
+    sort-free (DESIGN.md §3). Returns (winner (B,) bool, bucket (B,),
+    way (B,)). Semantics:
 
     * identical keys within the batch: LAST occurrence wins (sequential
       last-writer-wins), earlier ones are dropped;
@@ -146,48 +257,44 @@ def plan_insert(state: CacheState, keys: Key64, now_ms, ttl_ms,
     * > W distinct new keys in one bucket in one batch: ranks clip to the
       last (worst) way and collide there (bounded, last-writer-wins) —
       a cache may drop writes under pressure.
+
+    The returned ``winner`` already has residual slot collisions resolved;
+    ``(winner, bucket, way)`` target slots are distinct.
     """
     B = keys.hi.shape[0]
     now_ms = jnp.int32(now_ms)
     ttl_ms = jnp.int32(ttl_ms)
-    W = state.ways
     bucket, match, empty, ts = _probe(state, keys)
     expired = (~empty) & ((now_ms - ts) > ttl_ms)
     live = (write_mask if write_mask is not None
             else jnp.ones((B,), bool))
-
-    # ---- stage 1: per-key dedupe + per-bucket rank of distinct keys
-    idx = jnp.arange(B, dtype=jnp.int32)
-    bkt_live = jnp.where(live, bucket, jnp.int32(state.n_buckets))
-    order = jnp.lexsort((idx, keys.lo, keys.hi, bkt_live))
-    s_b = bkt_live[order]
-    s_hi = keys.hi[order]
-    s_lo = keys.lo[order]
-    nxt = lambda a, fill: jnp.concatenate([a[1:], jnp.full((1,), fill,
-                                                           a.dtype)])
-    same_as_next = ((s_b == nxt(s_b, -1)) & (s_hi == nxt(s_hi, 0))
-                    & (s_lo == nxt(s_lo, 0)))
-    winner_sorted = (~same_as_next) & (s_b < state.n_buckets)
-
-    # rank among distinct-key winners within each bucket group
-    win_i = winner_sorted.astype(jnp.int32)
-    cum = jnp.cumsum(win_i)
-    prev_b = jnp.concatenate([jnp.full((1,), -1, s_b.dtype), s_b[:-1]])
-    is_start = s_b != prev_b
-    seg_base = jax.lax.cummax(jnp.where(is_start, cum - win_i, -1))
-    rank_sorted = cum - 1 - seg_base
-
-    winner = jnp.zeros((B,), bool).at[order].set(winner_sorted)
-    rank = jnp.zeros((B,), jnp.int32).at[order].set(rank_sorted)
-
-    # ---- stage 2: way choice
-    has_match = jnp.any(match, axis=-1)
-    way_match = jnp.argmax(match, axis=-1).astype(jnp.int32)
-    evict_order = _ways_by_evictability(empty, expired, ts)     # (B, W)
-    way_rank = jnp.take_along_axis(
-        evict_order, jnp.clip(rank, 0, W - 1)[:, None], axis=-1)[:, 0]
-    way = jnp.where(has_match, way_match, way_rank.astype(jnp.int32))
+    winner = _dedupe(keys, live)
+    rank = _bucket_rank(bucket, winner, state.n_buckets)
+    way = _choose_way(match, empty, expired, ts, rank)
+    winner = _resolve_collisions(winner, bucket, way, state.n_buckets,
+                                 state.ways)
     return winner, bucket, way
+
+
+def _scatter_insert(state: CacheState, keys: Key64, values, ts_vec,
+                    winner, bucket, way) -> CacheState:
+    """Apply a resolved insert plan. mode='drop': losers get an
+    out-of-range bucket."""
+    b_w = jnp.where(winner, bucket, jnp.int32(state.n_buckets))
+    return CacheState(
+        key_hi=state.key_hi.at[b_w, way].set(keys.hi, mode="drop"),
+        key_lo=state.key_lo.at[b_w, way].set(keys.lo, mode="drop"),
+        write_ts=state.write_ts.at[b_w, way].set(ts_vec, mode="drop"),
+        values=state.values.at[b_w, way].set(
+            values.astype(state.values.dtype), mode="drop"),
+    )
+
+
+def _ts_vector(values, now_ms, ts_ms) -> jnp.ndarray:
+    B = values.shape[0]
+    if ts_ms is None:
+        return jnp.broadcast_to(jnp.int32(now_ms), (B,))
+    return jnp.asarray(ts_ms, jnp.int32)
 
 
 def insert(state: CacheState, keys: Key64, values: jnp.ndarray,
@@ -203,29 +310,58 @@ def insert(state: CacheState, keys: Key64, values: jnp.ndarray,
       computed at t but flushed at t+δ ages from t, not t+δ — async writes
       (paper §3.5) move work off the critical path without faking freshness.
     """
-    B = values.shape[0]
-    now_ms = jnp.int32(now_ms)
-    if ts_ms is None:
-        ts_vec = jnp.broadcast_to(now_ms, (B,))
-    else:
-        ts_vec = jnp.asarray(ts_ms, jnp.int32)
-
     winner, bucket, way = plan_insert(state, keys, now_ms, ttl_ms,
                                       write_mask)
-    # safety net: residual slot collisions (clipped ranks / match-vs-evict
-    # overlap) resolve last-writer-wins by slot target
-    target = jnp.where(winner, bucket * state.ways + way, jnp.int32(-1))
-    order = jnp.argsort(target, stable=True)
-    st = target[order]
-    nxt = jnp.concatenate([st[1:], jnp.full((1,), -2, jnp.int32)])
-    winner = jnp.zeros((B,), bool).at[order].set((st != nxt) & (st >= 0))
+    return _scatter_insert(state, keys, values,
+                           _ts_vector(values, now_ms, ts_ms),
+                           winner, bucket, way)
 
-    # Scatter with mode='drop': losers get an out-of-range bucket.
-    b_w = jnp.where(winner, bucket, jnp.int32(state.n_buckets))
-    return CacheState(
-        key_hi=state.key_hi.at[b_w, way].set(keys.hi, mode="drop"),
-        key_lo=state.key_lo.at[b_w, way].set(keys.lo, mode="drop"),
-        write_ts=state.write_ts.at[b_w, way].set(ts_vec, mode="drop"),
-        values=state.values.at[b_w, way].set(
-            values.astype(state.values.dtype), mode="drop"),
-    )
+
+def insert_dual(direct: CacheState, failover: CacheState, keys: Key64,
+                values: jnp.ndarray, now_ms, direct_ttl_ms, failover_ttl_ms,
+                write_mask: Optional[jnp.ndarray] = None,
+                ts_ms: Optional[jnp.ndarray] = None):
+    """Insert the same records into BOTH caches with ONE shared plan.
+
+    The batch dedupe (the plan's lexsort) depends only on the keys, so it
+    runs ONCE and is shared. When the failover cache has the same
+    ``n_buckets`` its bucket mapping — and therefore the per-bucket ranks —
+    is identical and reused outright; otherwise one cheap single-key
+    regroup pass re-ranks under the failover's mapping. Way choice and
+    collision resolution are per-cache (they depend on each cache's
+    contents) but sort-free. Results are bit-identical to two independent
+    :func:`insert` calls.
+
+    Returns (new_direct, new_failover).
+    """
+    B = keys.hi.shape[0]
+    now_ms = jnp.int32(now_ms)
+    live = (write_mask if write_mask is not None
+            else jnp.ones((B,), bool))
+    ts_vec = _ts_vector(values, now_ms, ts_ms)
+
+    winner = _dedupe(keys, live)
+
+    b_d, match_d, empty_d, ts_d = _probe(direct, keys)
+    rank_d = _bucket_rank(b_d, winner, direct.n_buckets)
+    expired_d = (~empty_d) & ((now_ms - ts_d) > jnp.int32(direct_ttl_ms))
+    way_d = _choose_way(match_d, empty_d, expired_d, ts_d, rank_d)
+    win_d = _resolve_collisions(winner, b_d, way_d, direct.n_buckets,
+                                direct.ways)
+    new_direct = _scatter_insert(direct, keys, values, ts_vec,
+                                 win_d, b_d, way_d)
+
+    # Probe results must come from the failover's own contents; only the
+    # bucket mapping (and therefore the ranks) can be shared across caches.
+    b_f, match_f, empty_f, ts_f = _probe(failover, keys)
+    if failover.n_buckets == direct.n_buckets:
+        rank_f = rank_d                       # identical bucket mapping
+    else:
+        rank_f = _bucket_rank(b_f, winner, failover.n_buckets)
+    expired_f = (~empty_f) & ((now_ms - ts_f) > jnp.int32(failover_ttl_ms))
+    way_f = _choose_way(match_f, empty_f, expired_f, ts_f, rank_f)
+    win_f = _resolve_collisions(winner, b_f, way_f, failover.n_buckets,
+                                failover.ways)
+    new_failover = _scatter_insert(failover, keys, values, ts_vec,
+                                   win_f, b_f, way_f)
+    return new_direct, new_failover

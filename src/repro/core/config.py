@@ -28,9 +28,23 @@ class CacheConfig:
     n_buckets: int = 1 << 14
     ways: int = 8
     value_dim: int = 64
+    # Failover-cache sizing. The paper gives the failover tier its own
+    # capacity/TTL settings (§4.4); None → same as the direct cache.
+    failover_n_buckets: Optional[int] = None
+    failover_ways: Optional[int] = None
     # serving-tier provisioning: max tower inferences per serve batch,
     # as a fraction of the batch (see core/server.py miss-budget compaction).
     miss_budget_frac: float = 0.75
+    # Lookup execution backend: "jnp" (reference, bit-exact oracle) or
+    # "pallas" (tiled fused probe kernels — DESIGN.md §4).
+    backend: str = "jnp"
+
+    def resolved_failover_n_buckets(self) -> int:
+        return (self.n_buckets if self.failover_n_buckets is None
+                else self.failover_n_buckets)
+
+    def resolved_failover_ways(self) -> int:
+        return self.ways if self.failover_ways is None else self.failover_ways
 
 
 @dataclasses.dataclass(frozen=True)

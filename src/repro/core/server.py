@@ -3,7 +3,10 @@ static-shape JAX program (DESIGN.md §2, "miss-budget compaction").
 
 Per serve batch:
 
-  1. **Direct cache check** — TTL-validated probe for every request.
+  1. **Direct cache check** — TTL-validated probe for every request. The
+     failover probe (step 3) is issued in the SAME dispatch: on the pallas
+     backend both tables are probed by one fused kernel launch
+     (``cache_probe_dual``, DESIGN.md §4).
   2. **Compaction** — misses are compacted to the front (stable argsort on the
      hit flag) and the user tower runs on the first ``miss_budget`` of them
      only. ``miss_budget`` is the provisioned-compute knob: the paper's
@@ -57,11 +60,15 @@ class ServeResult(NamedTuple):
 
 def init_server_state(cfg: CacheConfig, dtype=jnp.float32,
                       writebuf_capacity: int = 4096) -> ServerState:
+    """Allocate both caches + the write buffer. The failover cache is sized
+    from its OWN config knobs (paper §4.4 gives it different capacity/TTL
+    than the direct tier); unset knobs fall back to the direct sizing."""
     return ServerState(
         direct=cache_lib.init_cache(cfg.n_buckets, cfg.ways, cfg.value_dim,
                                     dtype),
-        failover=cache_lib.init_cache(cfg.n_buckets, cfg.ways, cfg.value_dim,
-                                      dtype),
+        failover=cache_lib.init_cache(cfg.resolved_failover_n_buckets(),
+                                      cfg.resolved_failover_ways(),
+                                      cfg.value_dim, dtype),
         writebuf=wb_lib.init_writebuf(writebuf_capacity, cfg.value_dim, dtype),
     )
 
@@ -90,8 +97,13 @@ class CachedEmbeddingServer:
         if failure_mask is None:
             failure_mask = jnp.zeros((B,), bool)
 
-        # (1) direct cache check ------------------------------------------
-        direct = cache_lib.lookup(state.direct, keys, now_ms, cfg.cache_ttl_ms)
+        # (1) direct + failover cache check — ONE dispatch ----------------
+        # Both probes read the pre-step state, so they fuse into a single
+        # kernel launch on the pallas backend (cache_probe_dual); the
+        # failover result is only consulted in step (3).
+        direct, fo = cache_lib.lookup_dual(
+            state.direct, state.failover, keys, now_ms, cfg.cache_ttl_ms,
+            cfg.failover_ttl_ms, backend=cfg.backend)
 
         # (2) compaction: misses first, stable --------------------------------
         order = jnp.argsort(direct.hit, stable=True)        # False (miss) first
@@ -110,8 +122,6 @@ class CachedEmbeddingServer:
         emb = direct.values
         emb = emb.at[sel].set(jnp.where(sel_ok[:, None], towered, emb[sel]))
         unresolved = ~direct.hit & ~computed                # overflow ∪ failed
-
-        fo = cache_lib.lookup(state.failover, keys, now_ms, cfg.failover_ttl_ms)
         use_fo = unresolved & fo.hit
         emb = jnp.where(use_fo[:, None], fo.values.astype(emb.dtype), emb)
         fallback = unresolved & ~fo.hit
@@ -154,22 +164,27 @@ class CachedEmbeddingServer:
     # ----------------------------------------------------------------- flush
     def flush(self, state: ServerState, now_ms) -> ServerState:
         """Apply the async write buffer to BOTH caches (same embeddings, the
-        failover simply keeps them valid longer — paper §4.4). Runs off the
-        serving critical path."""
-        direct, wb1 = wb_lib.flush(state.writebuf, state.direct, now_ms,
-                                   self.cfg.cache_ttl_ms)
-        failover, _ = wb_lib.flush(state.writebuf, state.failover, now_ms,
-                                   self.cfg.failover_ttl_ms)
+        failover simply keeps them valid longer — paper §4.4) with ONE
+        shared insert plan (wb_lib.flush_dual). Runs off the serving
+        critical path."""
+        direct, failover, wb1 = wb_lib.flush_dual(
+            state.writebuf, state.direct, state.failover, now_ms,
+            self.cfg.cache_ttl_ms, self.cfg.failover_ttl_ms)
         return ServerState(direct=direct, failover=failover, writebuf=wb1)
 
     # ------------------------------------------------------------------ jit
+    # ServerState is DONATED: the caches pass through serve_step unchanged
+    # and flush rewrites them in place, so donation lets XLA alias the
+    # (potentially multi-GB) cache tables instead of copying them every
+    # step. Callers must follow the move pattern ``state = res.state`` /
+    # ``state = srv.jit_flush(state, now)`` and never touch the old value.
     @functools.cached_property
     def jit_serve_step(self):
-        return jax.jit(self.serve_step)
+        return jax.jit(self.serve_step, donate_argnums=(1,))
 
     @functools.cached_property
     def jit_flush(self):
-        return jax.jit(self.flush)
+        return jax.jit(self.flush, donate_argnums=(0,))
 
 
 def serve_step_no_cache(tower_fn: Callable, params, keys: Key64, features,

@@ -66,13 +66,8 @@ def append(buf: WriteBuffer, keys: Key64, values: jnp.ndarray,
     )
 
 
-def flush(buf: WriteBuffer, state: cache_lib.CacheState, now_ms, ttl_ms
-          ) -> Tuple[cache_lib.CacheState, WriteBuffer]:
-    """Apply all buffered records to the cache; reset the buffer.
-
-    Records are applied in append order (ring order), so last-writer-wins
-    matches the true write stream. Slots beyond ``count`` are masked out.
-    """
+def _ring_order(buf: WriteBuffer):
+    """Unroll the ring into append order. Returns (keys, values, ts, live)."""
     cap = buf.capacity
     idx = jnp.arange(cap, dtype=jnp.int32)
     n_live = jnp.minimum(buf.count, cap)
@@ -81,7 +76,35 @@ def flush(buf: WriteBuffer, state: cache_lib.CacheState, now_ms, ttl_ms
     ring = (start + idx) % cap
     live = idx < n_live
     keys = Key64(hi=buf.key_hi[ring], lo=buf.key_lo[ring])
-    new_state = cache_lib.insert(
-        state, keys, buf.values[ring], now_ms, ttl_ms,
-        write_mask=live, ts_ms=buf.ts_ms[ring])
+    return keys, buf.values[ring], buf.ts_ms[ring], live
+
+
+def flush(buf: WriteBuffer, state: cache_lib.CacheState, now_ms, ttl_ms
+          ) -> Tuple[cache_lib.CacheState, WriteBuffer]:
+    """Apply all buffered records to the cache; reset the buffer.
+
+    Records are applied in append order (ring order), so last-writer-wins
+    matches the true write stream. Slots beyond ``count`` are masked out.
+    """
+    keys, values, ts, live = _ring_order(buf)
+    new_state = cache_lib.insert(state, keys, values, now_ms, ttl_ms,
+                                 write_mask=live, ts_ms=ts)
     return new_state, buf._replace(count=jnp.int32(0))
+
+
+def flush_dual(buf: WriteBuffer, direct: cache_lib.CacheState,
+               failover: cache_lib.CacheState, now_ms,
+               direct_ttl_ms, failover_ttl_ms
+               ) -> Tuple[cache_lib.CacheState, cache_lib.CacheState,
+                          WriteBuffer]:
+    """Flush the buffer into BOTH caches with ONE shared insert plan.
+
+    The ring unroll and the plan's dedupe/rank sort run once instead of
+    twice (cache_lib.insert_dual); semantics per cache are identical to two
+    independent :func:`flush` calls with the respective TTLs.
+    """
+    keys, values, ts, live = _ring_order(buf)
+    new_direct, new_failover = cache_lib.insert_dual(
+        direct, failover, keys, values, now_ms, direct_ttl_ms,
+        failover_ttl_ms, write_mask=live, ts_ms=ts)
+    return new_direct, new_failover, buf._replace(count=jnp.int32(0))

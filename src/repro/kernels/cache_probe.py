@@ -1,29 +1,348 @@
-"""Fused ERCache bucket probe — the paper's cache *read* as one TPU kernel.
+"""Fused ERCache bucket probes — the paper's cache *read* as TPU kernels.
 
-For each of B query keys: load its 8-way set-associative bucket (keys, write
-timestamps, value rows), do the key-compare + TTL check, and emit (hit,
-value, age) — one HBM→VMEM stream per query, no (B, W, D) gather
-materialized in HBM.
+Three kernels share one contract (``ref.cache_probe_ref`` /
+``core.cache.lookup``): for each query key, load its set-associative bucket
+(keys, write timestamps, value rows), do the key-compare + TTL check, and
+emit (hit, value, age) — the cache table never leaves HBM except for the
+probed buckets (DESIGN.md §4).
 
-TPU mapping: ``PrefetchScalarGridSpec`` — bucket indices are scalar-
-prefetched (SMEM) and drive every operand's BlockSpec index_map, so the
-value-table block for query i is exactly its bucket's (W, D) row group.
-This is the canonical scalar-prefetch gather pattern; the cache table never
-leaves HBM except for the probed buckets.
+* ``cache_probe_tiled`` (the default, exported as ``cache_probe``): processes
+  a ``tile_q``-query tile per grid step.  Bucket indices are scalar-prefetched
+  into SMEM and drive per-query async DMAs that land the bucket rows in VMEM
+  scratch; the key-compare / TTL / select math then runs ONCE, vectorized
+  over the whole (tile_q, W) tile instead of once per query.
+* ``cache_probe_dual``: probes the direct AND failover tables for the same
+  queries in a single kernel launch — one grid sweep, two sets of DMAs —
+  so ``serve_step`` does not pay two full-batch kernel dispatches.
+* ``cache_probe_perquery``: the original one-query-per-grid-step kernel
+  (``grid=(B,)``, blocks gathered via BlockSpec index_map).  Kept as the
+  dispatch-overhead baseline for ``benchmarks/bench_kernel_probe.py``.
+
+``interpret`` resolves automatically from the active JAX backend (compiled
+on TPU, interpreter elsewhere); ``REPRO_FORCE_INTERPRET=0/1`` overrides.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+DEFAULT_TILE_Q = 128
 
-def _probe_kernel(bucket_ref, scalars_ref,            # scalar prefetch
-                  khi_ref, klo_ref, ts_ref, val_ref, qhi_ref, qlo_ref,
-                  hit_ref, out_ref, age_ref):
+# Python-level launch counters (one increment per wrapper call, i.e. per
+# kernel launch in eager mode / per trace under jit). Tests use these to
+# assert serve_step issues exactly ONE probe launch for direct+failover.
+LAUNCHES = {"tiled": 0, "dual": 0, "perquery": 0}
+
+
+def resolve_interpret(interpret=None) -> bool:
+    """None → interpret unless running on a real TPU backend.
+
+    ``REPRO_FORCE_INTERPRET=0/1`` overrides the auto-detection (useful to
+    exercise the Mosaic compile path in interpret-capable CI).
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("REPRO_FORCE_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pick_tile(batch: int, tile_q) -> int:
+    if tile_q is not None:
+        return int(tile_q)
+    if batch >= DEFAULT_TILE_Q:
+        return DEFAULT_TILE_Q
+    # small batches: next power of two ≥ 8 to avoid padding 8 queries to 128
+    return max(8, 1 << max(batch - 1, 1).bit_length())
+
+
+def _probe_tile(now, ttl, qhi, qlo, khi, klo, ts, vals, out_dtype):
+    """Vectorized probe math over a (TQ, W[, D]) tile. Pure jnp — shared by
+    the tiled and dual kernel bodies."""
+    match = (khi == qhi[:, None]) & (klo == qlo[:, None])
+    fresh = (now - ts) <= ttl
+    valid = match & fresh
+    hit = jnp.any(valid, axis=-1)
+    # select exactly the first valid way without a dynamic gather
+    first = valid & (jnp.cumsum(valid.astype(jnp.int32), axis=-1) == 1)
+    val = jnp.sum(jnp.where(first[:, :, None], vals, 0.0), axis=1)
+    age = jnp.sum(jnp.where(first, now - ts, 0), axis=-1)
+    return (hit.astype(jnp.int32), val.astype(out_dtype),
+            jnp.where(hit, age, jnp.int32(-1)))
+
+
+def _table_dmas(bucket, tables, scratches, sems, sem_base: int, j):
+    """The async copies landing one query's bucket rows (one per table
+    array) in VMEM scratch, on semaphore rows [sem_base, sem_base+len)."""
+    return [pltpu.make_async_copy(tab.at[bucket], scr.at[j],
+                                  sems.at[sem_base + i, j])
+            for i, (tab, scr) in enumerate(zip(tables, scratches))]
+
+
+def _start_then_drain(tq: int, dmas):
+    """Start ALL tile DMAs, then drain: the copies overlap each other (and,
+    on hardware, the previous tile's output write-back). ``dmas(j)`` must
+    rebuild the same copy descriptors on both passes."""
+    def start(j, c):
+        for d in dmas(j):
+            d.start()
+        return c
+
+    def wait(j, c):
+        for d in dmas(j):
+            d.wait()
+        return c
+
+    jax.lax.fori_loop(0, tq, start, 0)
+    jax.lax.fori_loop(0, tq, wait, 0)
+
+
+# ---------------------------------------------------------------- tiled probe
+def _make_tiled_kernel(tq: int):
+    def kernel(bucket_ref, scalars_ref,                 # scalar prefetch
+               qhi_ref, qlo_ref,                        # (TQ,) VMEM blocks
+               khi_hbm, klo_hbm, ts_hbm, val_hbm,       # full tables, ANY/HBM
+               hit_ref, out_ref, age_ref,               # (TQ,) / (TQ, D) out
+               khi_s, klo_s, ts_s, val_s, sems):        # scratch + DMA sems
+        t = pl.program_id(0)
+        now = scalars_ref[0]
+        ttl = scalars_ref[1]
+        tables = (khi_hbm, klo_hbm, ts_hbm, val_hbm)
+        scratches = (khi_s, klo_s, ts_s, val_s)
+
+        def dmas(j):
+            return _table_dmas(bucket_ref[t * tq + j], tables, scratches,
+                               sems, 0, j)
+
+        _start_then_drain(tq, dmas)
+
+        hit, val, age = _probe_tile(now, ttl, qhi_ref[:], qlo_ref[:],
+                                    khi_s[:], klo_s[:], ts_s[:], val_s[:],
+                                    out_ref.dtype)
+        hit_ref[:] = hit
+        out_ref[:] = val
+        age_ref[:] = age
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "interpret"))
+def _cache_probe_tiled(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
+                       now_ms, ttl_ms, *, tile_q: int, interpret: bool):
+    B = q_hi.shape[0]
+    Nb, W = key_hi.shape
+    D = values.shape[-1]
+    tq = tile_q
+    pad = (-B) % tq
+    if pad:
+        q_hi = jnp.pad(q_hi, (0, pad))
+        q_lo = jnp.pad(q_lo, (0, pad))
+        buckets = jnp.pad(buckets, (0, pad))   # bucket 0: always a valid DMA
+    Bp = B + pad
+    scalars = jnp.asarray([now_ms, ttl_ms], jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Bp // tq,),
+        in_specs=[
+            pl.BlockSpec((tq,), lambda t, b, s: (t,)),
+            pl.BlockSpec((tq,), lambda t, b, s: (t,)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq,), lambda t, b, s: (t,)),
+            pl.BlockSpec((tq, D), lambda t, b, s: (t, 0)),
+            pl.BlockSpec((tq,), lambda t, b, s: (t,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, W), jnp.int32),
+            pltpu.VMEM((tq, W), jnp.int32),
+            pltpu.VMEM((tq, W), jnp.int32),
+            pltpu.VMEM((tq, W, D), values.dtype),
+            pltpu.SemaphoreType.DMA((4, tq)),
+        ],
+    )
+    hit, out, age = pl.pallas_call(
+        _make_tiled_kernel(tq),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, D), values.dtype),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(buckets, scalars, q_hi, q_lo, key_hi, key_lo, write_ts, values)
+    return hit[:B].astype(bool), out[:B], age[:B]
+
+
+def cache_probe_tiled(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
+                      now_ms, ttl_ms, *, tile_q=None, interpret=None):
+    """Tiled Pallas cache probe. Same contract as ref.cache_probe_ref.
+
+    key_hi/key_lo/write_ts: (Nb, W) int32; values: (Nb, W, D);
+    q_hi/q_lo/buckets: (B,). Returns (hit (B,) bool, value (B, D), age (B,)).
+    Batch sizes that are not a multiple of ``tile_q`` are padded internally.
+    """
+    LAUNCHES["tiled"] += 1
+    return _cache_probe_tiled(
+        key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
+        now_ms, ttl_ms, tile_q=_pick_tile(q_hi.shape[0], tile_q),
+        interpret=resolve_interpret(interpret))
+
+
+# public name: the tiled kernel IS the cache probe
+def cache_probe(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
+                now_ms, ttl_ms, *, tile_q=None, interpret=None):
+    """Alias of :func:`cache_probe_tiled` (the serving probe)."""
+    return cache_probe_tiled(key_hi, key_lo, write_ts, values, q_hi, q_lo,
+                             buckets, now_ms, ttl_ms, tile_q=tile_q,
+                             interpret=interpret)
+
+
+# ----------------------------------------------------------------- dual probe
+def _make_dual_kernel(tq: int):
+    def kernel(bkt_d_ref, bkt_f_ref, scalars_ref,       # scalar prefetch
+               qhi_ref, qlo_ref,
+               dkhi, dklo, dts, dval,                    # direct tables (ANY)
+               fkhi, fklo, fts, fval,                    # failover tables (ANY)
+               hit_d_ref, out_d_ref, age_d_ref,
+               hit_f_ref, out_f_ref, age_f_ref,
+               dkhi_s, dklo_s, dts_s, dval_s,
+               fkhi_s, fklo_s, fts_s, fval_s, sems):
+        t = pl.program_id(0)
+        now = scalars_ref[0]
+        ttl_d = scalars_ref[1]
+        ttl_f = scalars_ref[2]
+        d_tabs = (dkhi, dklo, dts, dval)
+        d_scrs = (dkhi_s, dklo_s, dts_s, dval_s)
+        f_tabs = (fkhi, fklo, fts, fval)
+        f_scrs = (fkhi_s, fklo_s, fts_s, fval_s)
+
+        def dmas(j):
+            return (_table_dmas(bkt_d_ref[t * tq + j], d_tabs, d_scrs,
+                                sems, 0, j)
+                    + _table_dmas(bkt_f_ref[t * tq + j], f_tabs, f_scrs,
+                                  sems, 4, j))
+
+        _start_then_drain(tq, dmas)
+
+        qhi = qhi_ref[:]
+        qlo = qlo_ref[:]
+        hit, val, age = _probe_tile(now, ttl_d, qhi, qlo, dkhi_s[:],
+                                    dklo_s[:], dts_s[:], dval_s[:],
+                                    out_d_ref.dtype)
+        hit_d_ref[:] = hit
+        out_d_ref[:] = val
+        age_d_ref[:] = age
+        hit, val, age = _probe_tile(now, ttl_f, qhi, qlo, fkhi_s[:],
+                                    fklo_s[:], fts_s[:], fval_s[:],
+                                    out_f_ref.dtype)
+        hit_f_ref[:] = hit
+        out_f_ref[:] = val
+        age_f_ref[:] = age
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "interpret"))
+def _cache_probe_dual(d_key_hi, d_key_lo, d_write_ts, d_values,
+                      f_key_hi, f_key_lo, f_write_ts, f_values,
+                      q_hi, q_lo, buckets_d, buckets_f,
+                      now_ms, ttl_direct_ms, ttl_failover_ms,
+                      *, tile_q: int, interpret: bool):
+    B = q_hi.shape[0]
+    Wd = d_key_hi.shape[1]
+    Wf = f_key_hi.shape[1]
+    D = d_values.shape[-1]
+    tq = tile_q
+    pad = (-B) % tq
+    if pad:
+        q_hi = jnp.pad(q_hi, (0, pad))
+        q_lo = jnp.pad(q_lo, (0, pad))
+        buckets_d = jnp.pad(buckets_d, (0, pad))
+        buckets_f = jnp.pad(buckets_f, (0, pad))
+    Bp = B + pad
+    scalars = jnp.asarray([now_ms, ttl_direct_ms, ttl_failover_ms], jnp.int32)
+
+    out1d = lambda: pl.BlockSpec((tq,), lambda t, bd, bf, s: (t,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(Bp // tq,),
+        in_specs=[out1d(), out1d()]
+        + [pl.BlockSpec(memory_space=pltpu.ANY)] * 8,
+        out_specs=[
+            out1d(),
+            pl.BlockSpec((tq, D), lambda t, bd, bf, s: (t, 0)),
+            out1d(),
+            out1d(),
+            pl.BlockSpec((tq, D), lambda t, bd, bf, s: (t, 0)),
+            out1d(),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, Wd), jnp.int32),
+            pltpu.VMEM((tq, Wd), jnp.int32),
+            pltpu.VMEM((tq, Wd), jnp.int32),
+            pltpu.VMEM((tq, Wd, D), d_values.dtype),
+            pltpu.VMEM((tq, Wf), jnp.int32),
+            pltpu.VMEM((tq, Wf), jnp.int32),
+            pltpu.VMEM((tq, Wf), jnp.int32),
+            pltpu.VMEM((tq, Wf, D), f_values.dtype),
+            pltpu.SemaphoreType.DMA((8, tq)),
+        ],
+    )
+    outs = pl.pallas_call(
+        _make_dual_kernel(tq),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, D), d_values.dtype),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, D), f_values.dtype),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(buckets_d, buckets_f, scalars, q_hi, q_lo,
+      d_key_hi, d_key_lo, d_write_ts, d_values,
+      f_key_hi, f_key_lo, f_write_ts, f_values)
+    hit_d, out_d, age_d, hit_f, out_f, age_f = outs
+    return ((hit_d[:B].astype(bool), out_d[:B], age_d[:B]),
+            (hit_f[:B].astype(bool), out_f[:B], age_f[:B]))
+
+
+def cache_probe_dual(d_key_hi, d_key_lo, d_write_ts, d_values,
+                     f_key_hi, f_key_lo, f_write_ts, f_values,
+                     q_hi, q_lo, buckets_d, buckets_f,
+                     now_ms, ttl_direct_ms, ttl_failover_ms,
+                     *, tile_q=None, interpret=None):
+    """Probe direct + failover tables for the same queries in ONE launch.
+
+    Returns ((hit_d, value_d, age_d), (hit_f, value_f, age_f)) — each half
+    bit-identical to :func:`cache_probe_tiled` on the respective table.
+    """
+    LAUNCHES["dual"] += 1
+    return _cache_probe_dual(
+        d_key_hi, d_key_lo, d_write_ts, d_values,
+        f_key_hi, f_key_lo, f_write_ts, f_values,
+        q_hi, q_lo, buckets_d, buckets_f,
+        now_ms, ttl_direct_ms, ttl_failover_ms,
+        tile_q=_pick_tile(q_hi.shape[0], tile_q),
+        interpret=resolve_interpret(interpret))
+
+
+# ----------------------------------------------- per-query (legacy baseline)
+def _perquery_kernel(bucket_ref, scalars_ref,            # scalar prefetch
+                     khi_ref, klo_ref, ts_ref, val_ref, qhi_ref, qlo_ref,
+                     hit_ref, out_ref, age_ref):
     now = scalars_ref[0]
     ttl = scalars_ref[1]
     khi = khi_ref[0]                       # (W,)
@@ -33,7 +352,6 @@ def _probe_kernel(bucket_ref, scalars_ref,            # scalar prefetch
     fresh = (now - ts) <= ttl
     valid = match & fresh
     hit = jnp.any(valid)
-    # select exactly the first valid way without a dynamic gather
     first = valid & (jnp.cumsum(valid.astype(jnp.int32)) == 1)
     val = jnp.sum(jnp.where(first[:, None], val_ref[0], 0.0), axis=0)
     age = jnp.sum(jnp.where(first, now - ts, 0))
@@ -43,13 +361,8 @@ def _probe_kernel(bucket_ref, scalars_ref,            # scalar prefetch
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def cache_probe(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
-                now_ms, ttl_ms, *, interpret: bool = True):
-    """Pallas cache probe. Same contract as ref.cache_probe_ref.
-
-    key_hi/key_lo/write_ts: (Nb, W) int32; values: (Nb, W, D);
-    q_hi/q_lo/buckets: (B,). Returns (hit (B,) bool, value (B, D), age (B,)).
-    """
+def _cache_probe_perquery(key_hi, key_lo, write_ts, values, q_hi, q_lo,
+                          buckets, now_ms, ttl_ms, *, interpret: bool):
     B = q_hi.shape[0]
     Nb, W = key_hi.shape
     D = values.shape[-1]
@@ -73,7 +386,7 @@ def cache_probe(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
         ],
     )
     hit, out, age = pl.pallas_call(
-        _probe_kernel,
+        _perquery_kernel,
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((B,), jnp.int32),
@@ -83,3 +396,13 @@ def cache_probe(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
         interpret=interpret,
     )(buckets, scalars, key_hi, key_lo, write_ts, values, q_hi, q_lo)
     return hit.astype(bool), out, age
+
+
+def cache_probe_perquery(key_hi, key_lo, write_ts, values, q_hi, q_lo,
+                         buckets, now_ms, ttl_ms, *, interpret=None):
+    """One-query-per-grid-step probe (pre-tiling implementation). Same
+    contract as ``cache_probe_tiled``; kept as the benchmark baseline."""
+    LAUNCHES["perquery"] += 1
+    return _cache_probe_perquery(key_hi, key_lo, write_ts, values, q_hi,
+                                 q_lo, buckets, now_ms, ttl_ms,
+                                 interpret=resolve_interpret(interpret))

@@ -1,36 +1,26 @@
 """jit'd public wrappers for the Pallas kernels with backend switching.
 
-``interpret`` resolution: TPU backends run the compiled kernels; everything
-else (this CPU container) runs ``interpret=True`` — the kernel body executed
-in Python by the Pallas interpreter, which is what the correctness suite
-sweeps against the ref.py oracles.
+``interpret`` resolution (kernels/cache_probe.resolve_interpret): TPU
+backends run the compiled kernels; everything else (this CPU container)
+runs ``interpret=True`` — the kernel body executed in Python by the Pallas
+interpreter, which is what the correctness suite sweeps against the ref.py
+oracles.
 
 Set ``REPRO_FORCE_INTERPRET=0/1`` to override.
 """
 from __future__ import annotations
 
-import os
-
-import jax
-
 from repro.kernels import ref
-from repro.kernels.cache_probe import cache_probe as _cache_probe
+from repro.kernels.cache_probe import (cache_probe, cache_probe_dual,
+                                       cache_probe_perquery,
+                                       cache_probe_tiled, resolve_interpret)
 from repro.kernels.decode_attention import decode_attention as _decode_attn
 from repro.kernels.embedding_bag import embedding_bag as _embedding_bag
 from repro.kernels.flash_attention import flash_attention as _flash_attn
 
-
-def _interpret() -> bool:
-    env = os.environ.get("REPRO_FORCE_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
-
-
-def cache_probe(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
-                now_ms, ttl_ms):
-    return _cache_probe(key_hi, key_lo, write_ts, values, q_hi, q_lo,
-                        buckets, now_ms, ttl_ms, interpret=_interpret())
+# Backwards-compatible alias; the cache_probe family resolves interpret
+# itself (see kernels/cache_probe.py).
+_interpret = resolve_interpret
 
 
 def embedding_bag(table, ids, mode: str = "sum"):
@@ -47,5 +37,6 @@ def decode_attention(q, k, v, valid_len=None, bs: int = 512):
     return _decode_attn(q, k, v, valid_len, bs=bs, interpret=_interpret())
 
 
-__all__ = ["cache_probe", "embedding_bag", "flash_attention",
+__all__ = ["cache_probe", "cache_probe_tiled", "cache_probe_dual",
+           "cache_probe_perquery", "embedding_bag", "flash_attention",
            "decode_attention", "ref"]
