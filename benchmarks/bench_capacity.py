@@ -1,7 +1,7 @@
 """BEYOND the paper: capacity vs hit rate for the in-HBM cache.
 
 Meta's ERCache lives in an elastic memcache tier, so the paper only studies
-TTL. Our TPU-native redesign (DESIGN.md §6) bounds the cache by device HBM,
+TTL. Our TPU-native redesign (DESIGN.md §2) bounds the cache by device HBM,
 making capacity a first-class knob: this experiment runs the REAL
 set-associative CacheState over the calibrated request stream and measures
 hit rate vs slot count at a fixed 1 h TTL — i.e. how much HBM the paper's

@@ -1,0 +1,142 @@
+"""Multi-model tier: ONE dispatch for the whole registry vs a per-model loop.
+
+The paper's headline deployment shape — 30+ ranking models behind one cache
+tier, each with customized settings — reproduced as the stacked
+MultiCacheState (DESIGN.md §5). This bench measures what the stacking buys:
+
+* **single dispatch** — a mixed-model batch of B queries over M models is
+  probed (direct + failover, per-model TTLs) by ONE ``lookup_dual_multi``
+  call;
+* **per-model loop** — the same B queries served the pre-stacking way:
+  M separate ``lookup_dual`` dispatches, one per model, each over that
+  model's B/M sub-batch against its own tables.
+
+Also runs a short warm serve loop and reports the per-model hit-rate
+breakdown (the Table 2 shape). Writes ``BENCH_multi_model.json`` and
+returns the same metrics dict for ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import cache as C
+from repro.core import server as S
+from repro.core.config import multi_model_tier_configs
+from repro.core.hashing import Key64
+
+DIM = 64
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_multi_model.json")
+
+
+def _tower(params, feats):
+    return feats @ params
+
+
+def _warm_state(cfgs, rng, batch, rounds=4):
+    """A few serve+flush rounds so the probes see a realistic hit mix."""
+    srv = S.MultiModelServer(cfgs=tuple(cfgs), tower_fn=_tower,
+                             miss_budget=batch, backend="jnp")
+    state = S.init_multi_server_state(cfgs, writebuf_capacity=batch * 2)
+    params = jnp.eye(DIM, dtype=jnp.float32)
+    M = srv.n_models
+    for r in range(rounds):
+        ids = rng.zipf(1.3, size=batch).astype(np.int64) % 4096
+        keys = Key64.from_int(ids)
+        slots = jnp.asarray((np.arange(batch) + r) % M, jnp.int32)
+        feats = jnp.asarray(rng.standard_normal((batch, DIM)), jnp.float32)
+        res = srv.serve_step(params, state, slots, keys, feats, r * 30_000)
+        state = srv.flush(res.state, r * 30_000)
+    return srv, state, params
+
+
+def run(report):
+    quick = getattr(common, "QUICK", False)
+    B = 512 if quick else 2048
+    n_buckets = 1 << 8 if quick else 1 << 10
+    n_models = 4 if quick else 8
+    rng = np.random.default_rng(0)
+
+    cfgs = multi_model_tier_configs(value_dim=DIM,
+                                    n_buckets=n_buckets)[:n_models]
+    srv, state, params = _warm_state(cfgs, rng, B)
+    policy = srv.policy
+    M = len(cfgs)
+    assert B % M == 0
+
+    ids = rng.zipf(1.3, size=B).astype(np.int64) % 4096
+    keys = Key64.from_int(ids)
+    slots = jnp.asarray(np.arange(B) % M, jnp.int32)
+    now = 5 * 30_000
+
+    # ------------------------------------------- arm A: single dispatch
+    single = jax.jit(lambda d, f, s, k: C.lookup_dual_multi(
+        d, f, policy, s, k, now, backend="jnp"))
+    us_single = common.time_us(single, state.direct, state.failover, slots,
+                               keys)
+
+    # ------------------------------------------- arm B: per-model loop
+    # The pre-stacking deployment: each model owns its tables; its B/M
+    # sub-batch is a separate dual-probe dispatch. Views and sub-batches
+    # are prepared outside the timed region (a real per-model deployment
+    # holds them that way permanently).
+    slots_np = np.arange(B) % M
+    per_model = []
+    for m, cfg in enumerate(cfgs):
+        mask = slots_np == m
+        sub_keys = Key64(hi=keys.hi[np.flatnonzero(mask)],
+                         lo=keys.lo[np.flatnonzero(mask)])
+        d_view = state.direct.model_view(m, cfg.n_buckets)
+        f_view = state.failover.model_view(
+            m, cfg.resolved_failover_n_buckets())
+        fn = jax.jit(lambda d, f, k, _ttl=cfg.cache_ttl_ms,
+                     _fttl=cfg.failover_ttl_ms: C.lookup_dual(
+                         d, f, k, now, _ttl, _fttl, backend="jnp"))
+        per_model.append((fn, d_view, f_view, sub_keys))
+
+    def loop_all():
+        outs = [fn(d, f, k) for fn, d, f, k in per_model]
+        return [o for pair in outs for o in pair]
+
+    us_loop = common.time_us(loop_all)
+
+    speedup = us_loop / us_single
+    report.add(f"multi_single_dispatch_B{B}_M{M}", us_single,
+               f"{B / (us_single * 1e-6):.0f}_probes_per_s")
+    report.add(f"multi_per_model_loop_B{B}_M{M}", us_loop,
+               f"single_dispatch_speedup={speedup:.2f}x")
+
+    # ------------------------------------- per-model hit-rate breakdown
+    res_d, _ = C.lookup_dual_multi(state.direct, state.failover, policy,
+                                   slots, keys, now, backend="jnp")
+    hit = np.asarray(res_d.hit)
+    per_model_hit_rate = {
+        str(cfg.model_id): round(float(hit[slots_np == m].mean()), 4)
+        for m, cfg in enumerate(cfgs)
+    }
+
+    metrics = {
+        "schema": "ercache-bench-multi/1",
+        "quick": quick,
+        "batch": B,
+        "n_models": M,
+        "n_buckets_per_model": n_buckets,
+        "single_dispatch_us": us_single,
+        "per_model_loop_us": us_loop,
+        "single_dispatch_speedup": speedup,
+        "per_model_hit_rate": per_model_hit_rate,
+    }
+    if getattr(common, "WRITE_JSON", True):
+        with open(JSON_PATH, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        print(f"# wrote {JSON_PATH}")
+    # BENCH_multi_model.json is the single source of truth for these
+    # numbers — returning them would duplicate them into BENCH_serve.json,
+    # where a partial --only rerun could leave the two copies disagreeing.
+    return None

@@ -1,6 +1,6 @@
 """Figs. 7–9 reproduction: ERCache serving cost — QPS, latency, bandwidth.
 
-Our cache is in-mesh HBM (DESIGN.md §6), so the "serving cost" has two
+Our cache is in-mesh HBM (DESIGN.md §2), so the "serving cost" has two
 parts: (a) measured op cost of lookup / insert / combined write on this
 host (µs/call → achievable QPS per core), and (b) the paper-scale derived
 accounting: write-QPS reduction from update combination (Fig. 5 / Fig. 7)

@@ -8,6 +8,9 @@ import numpy as np
 
 # Set by run.py --quick: benches shrink shapes/iterations for CI smoke runs.
 QUICK = False
+# Set by run.py from --json: '' disables ALL metrics-file writes, including
+# benches that own their file (bench_multi_model's BENCH_multi_model.json).
+WRITE_JSON = True
 
 
 def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:

@@ -31,10 +31,11 @@ BENCHES = [
     ("roofline", "benchmarks.bench_roofline"),
     ("kernel_probe", "benchmarks.bench_kernel_probe"),
     ("serve_path", "benchmarks.bench_serve"),
+    ("multi_model", "benchmarks.bench_multi_model"),
 ]
 
 # the fast, serve-path-focused subset run by CI (--quick with no --only)
-QUICK_BENCHES = ("kernel_probe", "serve_path")
+QUICK_BENCHES = ("kernel_probe", "serve_path", "multi_model")
 
 
 def main() -> None:
@@ -48,6 +49,7 @@ def main() -> None:
                          "('' disables)")
     args = ap.parse_args()
     common.QUICK = args.quick
+    common.WRITE_JSON = bool(args.json)
     if args.only:
         only = args.only.split(",")
     elif args.quick:
@@ -85,8 +87,10 @@ def main() -> None:
     report.print_csv(header=True)
     # Only (re)write the serve-metrics file when the serve-path benches
     # actually ran — a partial `--only fig6` iteration must not clobber the
-    # tracked BENCH_serve.json with an empty one.
-    if args.json and any(b in metrics["benches"] for b in QUICK_BENCHES):
+    # tracked BENCH_serve.json with an empty one. (bench_multi_model owns
+    # its separate BENCH_multi_model.json and writes it itself.)
+    if args.json and any(b in metrics["benches"]
+                         for b in ("kernel_probe", "serve_path")):
         with open(args.json, "w") as f:
             json.dump(metrics, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)

@@ -1,27 +1,40 @@
 """ERCache core — the paper's contribution as composable JAX modules.
 
 Public surface:
-  cache        — CacheState, init_cache, lookup, insert (TTL semantics)
+  cache        — CacheState, init_cache, lookup, insert (TTL semantics);
+                 MultiCacheState / ModelPolicy (stacked multi-model tier, §5)
   config       — CacheConfig / StageConfig / registry (paper Table 1)
   server       — CachedEmbeddingServer (direct → miss-budget tower → failover)
+                 and MultiModelServer (one dispatch for the whole registry)
   combiner     — grouped update combination across models × stages (Fig. 5)
-  writebuf     — asynchronous write buffer (§3.5)
+  writebuf     — asynchronous write buffer (§3.5), model-tagged records
   ratelimit    — regional token buckets (§3.7)
   regions      — 13-region sticky routing + drain-test harness (§3.6, Fig. 10)
   metrics      — hit rate / fallback rate / power savings / NE
 """
-from repro.core.cache import CacheState, LookupResult, init_cache, insert, lookup
-from repro.core.config import CacheConfig, CacheConfigRegistry, StageConfig
+from repro.core.cache import (CacheState, LookupResult, ModelPolicy,
+                              MultiCacheState, init_cache, init_multi_cache,
+                              insert, insert_dual_multi, lookup,
+                              lookup_dual_multi, policy_from_configs)
+from repro.core.config import (CacheConfig, CacheConfigRegistry, StageConfig,
+                               multi_model_tier_configs,
+                               paper_production_configs)
 from repro.core.hashing import Key64
-from repro.core.server import (CachedEmbeddingServer, ServerState, ServeResult,
-                               init_server_state, serve_step_no_cache,
+from repro.core.server import (CachedEmbeddingServer, MultiModelServer,
+                               MultiServerState, ServerState, ServeResult,
+                               init_multi_server_state, init_server_state,
+                               serve_step_no_cache,
                                SRC_COMPUTED, SRC_DIRECT, SRC_FAILOVER,
                                SRC_FALLBACK)
 
 __all__ = [
     "CacheState", "LookupResult", "init_cache", "insert", "lookup",
+    "MultiCacheState", "ModelPolicy", "init_multi_cache",
+    "insert_dual_multi", "lookup_dual_multi", "policy_from_configs",
     "CacheConfig", "CacheConfigRegistry", "StageConfig", "Key64",
+    "multi_model_tier_configs", "paper_production_configs",
     "CachedEmbeddingServer", "ServerState", "ServeResult",
+    "MultiModelServer", "MultiServerState", "init_multi_server_state",
     "init_server_state", "serve_step_no_cache",
     "SRC_COMPUTED", "SRC_DIRECT", "SRC_FAILOVER", "SRC_FALLBACK",
 ]

@@ -19,12 +19,13 @@ Timestamps are int32 milliseconds from the simulation epoch. Keys are 64-bit
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.hashing import EMPTY_HI, EMPTY_LO, Key64, bucket_index
+from repro.core.hashing import EMPTY_HI, EMPTY_LO, Key64, bucket_index, \
+    hash_u32
 
 INT32_MIN = -0x80000000
 INT32_MAX = 0x7FFFFFFF
@@ -82,12 +83,24 @@ def init_cache(n_buckets: int, ways: int, dim: int,
     )
 
 
-def _probe(state: CacheState, keys: Key64):
+def _ttl_cols(ttl_ms) -> jnp.ndarray:
+    """Scalar TTL or per-query (B,) TTLs → broadcastable against (B, W).
+
+    Per-query TTLs are how the multi-model tier threads each model's policy
+    through one shared probe/insert (DESIGN.md §5)."""
+    ttl = jnp.asarray(ttl_ms, jnp.int32)
+    return ttl[:, None] if ttl.ndim == 1 else ttl
+
+
+def _probe(state: CacheState, keys: Key64, bucket=None):
     """Shared probe: bucket index + per-way match/empty/ts gathers.
 
+    ``bucket`` overrides the hash-derived index — the multi-model tier passes
+    pooled (slot-offset) buckets computed with per-model capacity masks.
     Returns (bucket (B,), match (B,W) bool, empty (B,W) bool, ts (B,W) int32).
     """
-    bucket = bucket_index(keys, state.n_buckets)
+    if bucket is None:
+        bucket = bucket_index(keys, state.n_buckets)
     k_hi = state.key_hi[bucket]          # (B, W)
     k_lo = state.key_lo[bucket]
     ts = state.write_ts[bucket]
@@ -97,17 +110,23 @@ def _probe(state: CacheState, keys: Key64):
 
 
 def lookup(state: CacheState, keys: Key64, now_ms, ttl_ms,
-           backend: str = "jnp") -> LookupResult:
+           backend: str = "jnp", buckets=None) -> LookupResult:
     """Batched TTL-validated lookup.
 
     ``backend="jnp"`` is the pure-jnp reference path (the bit-exact oracle);
     ``backend="pallas"`` dispatches the tiled ``cache_probe`` kernel
     (kernels/cache_probe.py) — tests assert the two agree bit-exactly.
+    ``ttl_ms`` may be a scalar or a per-query (B,) vector (multi-model
+    policies); ``buckets`` optionally overrides the hash-derived index.
     """
     if backend == "pallas":
         from repro.kernels import cache_probe as probe_kernels
 
-        buckets = bucket_index(keys, state.n_buckets)
+        if jnp.asarray(ttl_ms).ndim:
+            raise ValueError("per-query ttl_ms needs the multi-model "
+                             "kernel: use lookup_dual_multi")
+        if buckets is None:
+            buckets = bucket_index(keys, state.n_buckets)
         hit, vals, age = probe_kernels.cache_probe_tiled(
             state.key_hi, state.key_lo, state.write_ts, state.values,
             keys.hi, keys.lo, buckets, now_ms, ttl_ms)
@@ -115,9 +134,9 @@ def lookup(state: CacheState, keys: Key64, now_ms, ttl_ms,
     if backend != "jnp":
         raise ValueError(f"unknown cache backend: {backend!r}")
     now_ms = jnp.int32(now_ms)
-    ttl_ms = jnp.int32(ttl_ms)
-    bucket, match, _, ts = _probe(state, keys)
-    fresh = (now_ms - ts) <= ttl_ms          # garbage for empty slots,
+    ttl_b = _ttl_cols(ttl_ms)
+    bucket, match, _, ts = _probe(state, keys, bucket=buckets)
+    fresh = (now_ms - ts) <= ttl_b           # garbage for empty slots,
     valid = match & fresh                    # but match is False there.
     hit = jnp.any(valid, axis=-1)
     # At most one way can match a given key (insert overwrites matches), so
@@ -155,17 +174,27 @@ def lookup_dual(direct: CacheState, failover: CacheState, keys: Key64,
             lookup(failover, keys, now_ms, failover_ttl_ms, backend=backend))
 
 
-def _dedupe(keys: Key64, live: jnp.ndarray) -> jnp.ndarray:
+def _dedupe(keys: Key64, live: jnp.ndarray, salt=None) -> jnp.ndarray:
     """ONE lexsort: last-writer-wins batch dedupe, cache-independent.
 
     Returns winner (B,) bool — the LAST live occurrence of each distinct
     key. Depends only on the keys (a key maps to the same bucket however
     the cache is sized), so a dual insert shares this across both caches.
+
+    ``salt`` (optional (B,) int32) widens key identity to (salt, key): the
+    multi-model tier passes model slots so the SAME user appearing for two
+    models stays two records (they target different slabs of the stacked
+    table and must both be written).
     """
     B = keys.hi.shape[0]
     idx = jnp.arange(B, dtype=jnp.int32)
     dead = (~live).astype(jnp.int32)
-    order = jnp.lexsort((idx, keys.lo, keys.hi, dead))
+    cols = [idx, keys.lo, keys.hi]
+    if salt is not None:
+        salt = jnp.asarray(salt, jnp.int32)
+        cols.append(salt)
+    cols.append(dead)
+    order = jnp.lexsort(tuple(cols))
     s_d = dead[order]
     s_hi = keys.hi[order]
     s_lo = keys.lo[order]
@@ -173,6 +202,9 @@ def _dedupe(keys: Key64, live: jnp.ndarray) -> jnp.ndarray:
                                                            a.dtype)])
     same_as_next = ((s_d == nxt(s_d, -1)) & (s_hi == nxt(s_hi, 0))
                     & (s_lo == nxt(s_lo, 0)))
+    if salt is not None:
+        s_s = salt[order]
+        same_as_next = same_as_next & (s_s == nxt(s_s, -1))
     winner_sorted = (~same_as_next) & (s_d == 0)
     return jnp.zeros((B,), bool).at[order].set(winner_sorted)
 
@@ -194,17 +226,32 @@ def _bucket_rank(bucket: jnp.ndarray, winner: jnp.ndarray,
     return jnp.zeros((B,), jnp.int32).at[order].set(rank_sorted)
 
 
-def _choose_way(match, empty, expired, ts, rank) -> jnp.ndarray:
+def _choose_way(match, empty, expired, ts, rank, lru=None) -> jnp.ndarray:
     """(B, W) probe results + (B,) rank → (B,) way. Sort-free.
 
-    Eviction order is lexicographic (priority, ts, way) with priority
-    empty(0) > expired(1) > live(2) — the paper §3.3 TTL eviction. Instead
-    of argsorting each bucket row twice, compute each way's position in
-    that order with O(W²) vectorized comparisons (W is 4–8: 16–64 lanes),
-    then one-hot select the way whose position equals the insert rank.
+    Eviction order is lexicographic (priority, ts, way). Two policies
+    (paper §3.3, selectable per model in the multi-model tier):
+
+    * **TTL-priority** (default): empty(0) > expired(1) > live(2) — an
+      expired slot is always sacrificed before a live one, however old.
+    * **LRU-timestamp** (``lru`` True): empty(0) > everything-else(2) —
+      the oldest write goes first regardless of TTL state.
+
+    ``lru`` may be a scalar bool or a per-query (B,) vector (mixed-model
+    batches carry each model's policy). Instead of argsorting each bucket
+    row twice, compute each way's position in the eviction order with
+    O(W²) vectorized comparisons (W is 4–8: 16–64 lanes), then one-hot
+    select the way whose position equals the insert rank.
     """
     W = ts.shape[-1]
-    priority = jnp.where(empty, 0, jnp.where(expired, 1, 2)).astype(jnp.int32)
+    prio_ttl = jnp.where(empty, 0, jnp.where(expired, 1, 2))
+    if lru is None:
+        priority = prio_ttl.astype(jnp.int32)
+    else:
+        lru = jnp.asarray(lru, bool)
+        lru_b = lru[:, None] if lru.ndim == 1 else lru
+        prio_lru = jnp.where(empty, 0, 2)
+        priority = jnp.where(lru_b, prio_lru, prio_ttl).astype(jnp.int32)
     w_idx = jnp.arange(W, dtype=jnp.int32)
     # rank_ts[b, w] = #{w' : (ts[b, w'], w') < (ts[b, w], w)} — the rank of
     # each way's timestamp within its row, way index as tie-break.
@@ -240,7 +287,8 @@ def _resolve_collisions(winner, bucket, way, n_buckets: int,
 
 
 def plan_insert(state: CacheState, keys: Key64, now_ms, ttl_ms,
-                write_mask: Optional[jnp.ndarray] = None):
+                write_mask: Optional[jnp.ndarray] = None,
+                evict_lru=None, buckets=None, dedupe_salt=None):
     """Slot assignment for a batched insert, emulating sequential writes.
 
     ONE lexsort (``_dedupe``) + one single-key argsort (``_bucket_rank``)
@@ -258,19 +306,23 @@ def plan_insert(state: CacheState, keys: Key64, now_ms, ttl_ms,
       last (worst) way and collide there (bounded, last-writer-wins) —
       a cache may drop writes under pressure.
 
+    Multi-model extensions (DESIGN.md §5): ``ttl_ms`` may be per-query,
+    ``evict_lru`` switches the victim order per query (see
+    :func:`_choose_way`), ``buckets`` injects pooled slot-offset indices,
+    and ``dedupe_salt`` widens key identity (see :func:`_dedupe`).
+
     The returned ``winner`` already has residual slot collisions resolved;
     ``(winner, bucket, way)`` target slots are distinct.
     """
     B = keys.hi.shape[0]
     now_ms = jnp.int32(now_ms)
-    ttl_ms = jnp.int32(ttl_ms)
-    bucket, match, empty, ts = _probe(state, keys)
-    expired = (~empty) & ((now_ms - ts) > ttl_ms)
+    bucket, match, empty, ts = _probe(state, keys, bucket=buckets)
+    expired = (~empty) & ((now_ms - ts) > _ttl_cols(ttl_ms))
     live = (write_mask if write_mask is not None
             else jnp.ones((B,), bool))
-    winner = _dedupe(keys, live)
+    winner = _dedupe(keys, live, salt=dedupe_salt)
     rank = _bucket_rank(bucket, winner, state.n_buckets)
-    way = _choose_way(match, empty, expired, ts, rank)
+    way = _choose_way(match, empty, expired, ts, rank, lru=evict_lru)
     winner = _resolve_collisions(winner, bucket, way, state.n_buckets,
                                  state.ways)
     return winner, bucket, way
@@ -300,7 +352,9 @@ def _ts_vector(values, now_ms, ts_ms) -> jnp.ndarray:
 def insert(state: CacheState, keys: Key64, values: jnp.ndarray,
            now_ms, ttl_ms,
            write_mask: Optional[jnp.ndarray] = None,
-           ts_ms: Optional[jnp.ndarray] = None) -> CacheState:
+           ts_ms: Optional[jnp.ndarray] = None,
+           evict_lru=None, buckets=None,
+           dedupe_salt=None) -> CacheState:
     """Batched insert/overwrite with sequential-write emulation (see
     ``plan_insert``).
 
@@ -309,9 +363,13 @@ def insert(state: CacheState, keys: Key64, values: jnp.ndarray,
     * ``ts_ms`` optionally carries per-entry compute timestamps: an embedding
       computed at t but flushed at t+δ ages from t, not t+δ — async writes
       (paper §3.5) move work off the critical path without faking freshness.
+    * ``evict_lru`` / ``buckets`` / ``dedupe_salt``: multi-model plan knobs,
+      forwarded to :func:`plan_insert`.
     """
     winner, bucket, way = plan_insert(state, keys, now_ms, ttl_ms,
-                                      write_mask)
+                                      write_mask, evict_lru=evict_lru,
+                                      buckets=buckets,
+                                      dedupe_salt=dedupe_salt)
     return _scatter_insert(state, keys, values,
                            _ts_vector(values, now_ms, ts_ms),
                            winner, bucket, way)
@@ -320,17 +378,22 @@ def insert(state: CacheState, keys: Key64, values: jnp.ndarray,
 def insert_dual(direct: CacheState, failover: CacheState, keys: Key64,
                 values: jnp.ndarray, now_ms, direct_ttl_ms, failover_ttl_ms,
                 write_mask: Optional[jnp.ndarray] = None,
-                ts_ms: Optional[jnp.ndarray] = None):
+                ts_ms: Optional[jnp.ndarray] = None,
+                evict_lru=None, buckets_d=None, buckets_f=None,
+                dedupe_salt=None):
     """Insert the same records into BOTH caches with ONE shared plan.
 
-    The batch dedupe (the plan's lexsort) depends only on the keys, so it
-    runs ONCE and is shared. When the failover cache has the same
-    ``n_buckets`` its bucket mapping — and therefore the per-bucket ranks —
-    is identical and reused outright; otherwise one cheap single-key
-    regroup pass re-ranks under the failover's mapping. Way choice and
-    collision resolution are per-cache (they depend on each cache's
-    contents) but sort-free. Results are bit-identical to two independent
-    :func:`insert` calls.
+    The batch dedupe (the plan's lexsort) depends only on the keys (plus
+    ``dedupe_salt``), so it runs ONCE and is shared. When both caches use
+    the same bucket mapping — same ``n_buckets`` (hash-derived path) or the
+    same explicit ``buckets`` array — the per-bucket ranks are reused
+    outright; otherwise one cheap single-key regroup pass re-ranks under
+    the failover's mapping. Way choice and collision resolution are
+    per-cache (they depend on each cache's contents) but sort-free.
+    Results are bit-identical to two independent :func:`insert` calls.
+
+    TTLs may be per-query vectors and ``evict_lru`` switches the eviction
+    policy per query — the multi-model flush path (DESIGN.md §5).
 
     Returns (new_direct, new_failover).
     """
@@ -340,12 +403,13 @@ def insert_dual(direct: CacheState, failover: CacheState, keys: Key64,
             else jnp.ones((B,), bool))
     ts_vec = _ts_vector(values, now_ms, ts_ms)
 
-    winner = _dedupe(keys, live)
+    winner = _dedupe(keys, live, salt=dedupe_salt)
 
-    b_d, match_d, empty_d, ts_d = _probe(direct, keys)
+    b_d, match_d, empty_d, ts_d = _probe(direct, keys, bucket=buckets_d)
     rank_d = _bucket_rank(b_d, winner, direct.n_buckets)
-    expired_d = (~empty_d) & ((now_ms - ts_d) > jnp.int32(direct_ttl_ms))
-    way_d = _choose_way(match_d, empty_d, expired_d, ts_d, rank_d)
+    expired_d = (~empty_d) & ((now_ms - ts_d) > _ttl_cols(direct_ttl_ms))
+    way_d = _choose_way(match_d, empty_d, expired_d, ts_d, rank_d,
+                        lru=evict_lru)
     win_d = _resolve_collisions(winner, b_d, way_d, direct.n_buckets,
                                 direct.ways)
     new_direct = _scatter_insert(direct, keys, values, ts_vec,
@@ -353,15 +417,257 @@ def insert_dual(direct: CacheState, failover: CacheState, keys: Key64,
 
     # Probe results must come from the failover's own contents; only the
     # bucket mapping (and therefore the ranks) can be shared across caches.
-    b_f, match_f, empty_f, ts_f = _probe(failover, keys)
-    if failover.n_buckets == direct.n_buckets:
+    b_f, match_f, empty_f, ts_f = _probe(failover, keys, bucket=buckets_f)
+    same_mapping = ((buckets_d is None and buckets_f is None
+                     and failover.n_buckets == direct.n_buckets)
+                    or (buckets_d is not None and buckets_d is buckets_f))
+    if same_mapping:
         rank_f = rank_d                       # identical bucket mapping
     else:
         rank_f = _bucket_rank(b_f, winner, failover.n_buckets)
-    expired_f = (~empty_f) & ((now_ms - ts_f) > jnp.int32(failover_ttl_ms))
-    way_f = _choose_way(match_f, empty_f, expired_f, ts_f, rank_f)
+    expired_f = (~empty_f) & ((now_ms - ts_f) > _ttl_cols(failover_ttl_ms))
+    way_f = _choose_way(match_f, empty_f, expired_f, ts_f, rank_f,
+                        lru=evict_lru)
     win_f = _resolve_collisions(winner, b_f, way_f, failover.n_buckets,
                                 failover.ways)
     new_failover = _scatter_insert(failover, keys, values, ts_vec,
                                    win_f, b_f, way_f)
     return new_direct, new_failover
+
+
+# =========================================================== multi-model tier
+# One serving tier fronting the WHOLE model registry (paper: "more than 30
+# ranking models", each with customized cache settings). Per-model direct +
+# failover tables are stacked along a leading model axis; a mixed-model
+# request batch ((model_slot, user_key) pairs) is served by ONE dual-probe
+# dispatch, with each query's TTL / eviction policy gathered from a small
+# per-model policy table (DESIGN.md §5).
+
+
+class ModelPolicy(NamedTuple):
+    """Per-model policy table of the multi-model tier.
+
+    Device arrays indexed by model *slot* (the model's position in the
+    tier, not its registry ``model_id``). TTLs feed the probe's freshness
+    check — the pallas path scalar-prefetches the (M, 2) :meth:`table`
+    into SMEM and gathers per query in-kernel. ``evict_lru`` switches the
+    insert plan's victim order (paper §3.3 TTL-priority vs LRU-timestamp)
+    and the bucket masks give each model its own capacity inside the
+    stacked table: local bucket = hash & mask, mask = model n_buckets - 1.
+    """
+
+    ttl_ms: jnp.ndarray            # (M,) int32 — direct-cache TTL
+    failover_ttl_ms: jnp.ndarray   # (M,) int32
+    evict_lru: jnp.ndarray         # (M,) bool — True: LRU-timestamp policy
+    bucket_mask_d: jnp.ndarray     # (M,) int32 — direct n_buckets[m] - 1
+    bucket_mask_f: jnp.ndarray     # (M,) int32 — failover n_buckets[m] - 1
+
+    @property
+    def n_models(self) -> int:
+        return self.ttl_ms.shape[0]
+
+    def table(self) -> jnp.ndarray:
+        """(M, 2) int32 [direct_ttl, failover_ttl] — the scalar-prefetched
+        view consumed by ``cache_probe_dual_multi``."""
+        return jnp.stack([self.ttl_ms, self.failover_ttl_ms], axis=1)
+
+
+def policy_from_configs(cfgs) -> ModelPolicy:
+    """Build the device-side policy table from an ordered CacheConfig list
+    (slot i ↔ cfgs[i]).
+
+    When every model's failover capacity equals its direct capacity the
+    two mask fields alias ONE array — object identity is the static
+    marker ``insert_dual_multi`` uses to share the insert plan's rank
+    sort across both tiers (it survives jit tracing, unlike a value
+    comparison on traced arrays)."""
+    masks_d = [c.n_buckets - 1 for c in cfgs]
+    masks_f = [c.resolved_failover_n_buckets() - 1 for c in cfgs]
+    mask_d = jnp.asarray(masks_d, jnp.int32)
+    mask_f = mask_d if masks_f == masks_d else jnp.asarray(masks_f,
+                                                           jnp.int32)
+    return ModelPolicy(
+        ttl_ms=jnp.asarray([c.cache_ttl_ms for c in cfgs], jnp.int32),
+        failover_ttl_ms=jnp.asarray([c.failover_ttl_ms for c in cfgs],
+                                    jnp.int32),
+        evict_lru=jnp.asarray([c.eviction == "lru" for c in cfgs], bool),
+        bucket_mask_d=mask_d,
+        bucket_mask_f=mask_f,
+    )
+
+
+class MultiCacheState(NamedTuple):
+    """Per-model cache tables stacked along a leading model axis.
+
+    The stack allocates ``max(n_buckets)`` buckets per model; a model with
+    a smaller configured capacity only ever addresses the first
+    ``n_buckets[m]`` rows of its slab (its bucket mask is narrower) — the
+    tail rows simply stay empty. Ways and dim are uniform across the tier
+    (heterogeneous ``ways`` are normalized up to the tier maximum).
+    """
+
+    key_hi: jnp.ndarray    # (M, n_buckets, ways) int32
+    key_lo: jnp.ndarray    # (M, n_buckets, ways) int32
+    write_ts: jnp.ndarray  # (M, n_buckets, ways) int32, ms
+    values: jnp.ndarray    # (M, n_buckets, ways, dim)
+
+    @property
+    def n_models(self) -> int:
+        return self.key_hi.shape[0]
+
+    @property
+    def n_buckets(self) -> int:
+        """Stacked (maximum) buckets per model slab."""
+        return self.key_hi.shape[1]
+
+    @property
+    def ways(self) -> int:
+        return self.key_hi.shape[2]
+
+    @property
+    def dim(self) -> int:
+        return self.values.shape[-1]
+
+    def flat(self) -> CacheState:
+        """The (M*Nb, W) pooled view the shared probe/insert math runs on.
+        A reshape of contiguous arrays — no copy under XLA."""
+        M, Nb, W = self.key_hi.shape
+        return CacheState(
+            key_hi=self.key_hi.reshape(M * Nb, W),
+            key_lo=self.key_lo.reshape(M * Nb, W),
+            write_ts=self.write_ts.reshape(M * Nb, W),
+            values=self.values.reshape(M * Nb, W, self.values.shape[-1]),
+        )
+
+    def with_flat(self, flat: CacheState) -> "MultiCacheState":
+        """Re-stack a pooled view produced by :meth:`flat`."""
+        M, Nb, W = self.key_hi.shape
+        return MultiCacheState(
+            key_hi=flat.key_hi.reshape(M, Nb, W),
+            key_lo=flat.key_lo.reshape(M, Nb, W),
+            write_ts=flat.write_ts.reshape(M, Nb, W),
+            values=flat.values.reshape(M, Nb, W, self.values.shape[-1]),
+        )
+
+    def model_view(self, slot: int, n_buckets: Optional[int] = None
+                   ) -> CacheState:
+        """Model ``slot``'s slab as a standalone CacheState (the per-model
+        jnp oracle's operand). ``n_buckets`` trims to the model's own
+        configured capacity so ``bucket_index`` reproduces the pooled
+        mapping."""
+        nb = self.n_buckets if n_buckets is None else n_buckets
+        return CacheState(
+            key_hi=self.key_hi[slot, :nb],
+            key_lo=self.key_lo[slot, :nb],
+            write_ts=self.write_ts[slot, :nb],
+            values=self.values[slot, :nb],
+        )
+
+
+def init_multi_cache(n_buckets: Sequence[int], ways: int, dim: int,
+                     dtype=jnp.float32) -> MultiCacheState:
+    """Allocate an empty stacked tier: one slab per model, each a power-of-2
+    bucket count; the stack is sized by the largest."""
+    for nb in n_buckets:
+        assert nb & (nb - 1) == 0, "per-model n_buckets must be powers of 2"
+    M = len(n_buckets)
+    nb_max = max(n_buckets)
+    shape = (M, nb_max, ways)
+    return MultiCacheState(
+        key_hi=jnp.full(shape, EMPTY_HI, dtype=jnp.int32),
+        key_lo=jnp.full(shape, EMPTY_LO, dtype=jnp.int32),
+        write_ts=jnp.full(shape, TS_EMPTY, dtype=jnp.int32),
+        values=jnp.zeros(shape + (dim,), dtype=dtype),
+    )
+
+
+def pooled_buckets(slots, keys: Key64, bucket_mask, nb_stack: int
+                   ) -> jnp.ndarray:
+    """Flat bucket index into a stacked tier's pooled (M*Nb, W) view:
+    ``slot * Nb + (hash & mask[slot])``. The per-model mask realizes
+    per-model capacity; the slot offset selects the slab."""
+    h = hash_u32(keys)
+    local = (h & bucket_mask[slots].astype(jnp.uint32)).astype(jnp.int32)
+    return slots.astype(jnp.int32) * nb_stack + local
+
+
+def _pooled_bucket_pair(direct: "MultiCacheState",
+                        failover: "MultiCacheState",
+                        policy: "ModelPolicy", slots, keys: Key64):
+    """(direct, failover) pooled buckets for one mixed-model batch — THE
+    mapping both lookup_dual_multi and insert_dual_multi must agree on.
+
+    Identical stack size + aliased masks (see policy_from_configs) ⇒
+    identical mapping: the SAME array object is returned for both, which
+    downstream code (insert_dual's ``buckets_d is buckets_f`` test) uses
+    to reuse the insert plan's per-bucket ranks instead of re-sorting.
+    """
+    b_d = pooled_buckets(slots, keys, policy.bucket_mask_d,
+                         direct.n_buckets)
+    if (failover.n_buckets == direct.n_buckets
+            and policy.bucket_mask_f is policy.bucket_mask_d):
+        return b_d, b_d
+    return b_d, pooled_buckets(slots, keys, policy.bucket_mask_f,
+                               failover.n_buckets)
+
+
+def lookup_dual_multi(direct: MultiCacheState, failover: MultiCacheState,
+                      policy: ModelPolicy, slots, keys: Key64, now_ms,
+                      backend: str = "jnp"):
+    """Probe BOTH stacked tiers for a mixed-model batch in one dispatch.
+
+    ``slots`` (B,) int32 assigns each query its model; each query is
+    validated against its model's direct/failover TTL. On the pallas
+    backend this is a SINGLE fused kernel launch (``cache_probe_dual_multi``
+    — per-model TTLs gathered in-kernel from the scalar-prefetched policy
+    table); on jnp it is two per-query-TTL reference lookups on the pooled
+    views — bit-identical either way, and bit-identical to looping the
+    single-model oracle over each model's slab.
+
+    Returns (LookupResult_direct, LookupResult_failover).
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    b_d, b_f = _pooled_bucket_pair(direct, failover, policy, slots, keys)
+    if backend == "pallas":
+        from repro.kernels import cache_probe as probe_kernels
+
+        fd, ff = direct.flat(), failover.flat()
+        (hd, vd, ad), (hf, vf, af) = probe_kernels.cache_probe_dual_multi(
+            fd.key_hi, fd.key_lo, fd.write_ts, fd.values,
+            ff.key_hi, ff.key_lo, ff.write_ts, ff.values,
+            keys.hi, keys.lo, slots, b_d, b_f, policy.table(), now_ms)
+        return (LookupResult(hit=hd, values=vd, age_ms=ad),
+                LookupResult(hit=hf, values=vf, age_ms=af))
+    if backend != "jnp":
+        raise ValueError(f"unknown cache backend: {backend!r}")
+    return (lookup(direct.flat(), keys, now_ms, policy.ttl_ms[slots],
+                   buckets=b_d),
+            lookup(failover.flat(), keys, now_ms,
+                   policy.failover_ttl_ms[slots], buckets=b_f))
+
+
+def insert_dual_multi(direct: MultiCacheState, failover: MultiCacheState,
+                      policy: ModelPolicy, slots, keys: Key64,
+                      values: jnp.ndarray, now_ms,
+                      write_mask: Optional[jnp.ndarray] = None,
+                      ts_ms: Optional[jnp.ndarray] = None):
+    """Insert a mixed-model record batch into BOTH stacked tiers with ONE
+    shared plan.
+
+    Per-record TTLs and eviction policies are gathered from the policy
+    table; the plan's dedupe is salted with the model slot so the same
+    user appearing for two models stays two records. Bit-identical to
+    looping the single-model :func:`insert` over each model's slab with
+    that model's settings.
+
+    Returns (new_direct, new_failover).
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    b_d, b_f = _pooled_bucket_pair(direct, failover, policy, slots, keys)
+    new_d, new_f = insert_dual(
+        direct.flat(), failover.flat(), keys, values, now_ms,
+        policy.ttl_ms[slots], policy.failover_ttl_ms[slots],
+        write_mask=write_mask, ts_ms=ts_ms,
+        evict_lru=policy.evict_lru[slots],
+        buckets_d=b_d, buckets_f=b_f, dedupe_salt=slots)
+    return direct.with_flat(new_d), failover.with_flat(new_f)

@@ -9,7 +9,7 @@ Production values from the paper's evaluation:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 MINUTE_MS = 60_000
 HOUR_MS = 3_600_000
@@ -38,6 +38,15 @@ class CacheConfig:
     # Lookup execution backend: "jnp" (reference, bit-exact oracle) or
     # "pallas" (tiled fused probe kernels — DESIGN.md §4).
     backend: str = "jnp"
+    # Eviction policy (paper §3.3): "ttl" — TTL-priority (empty > expired >
+    # oldest, the paper's default) or "lru" — LRU-timestamp (empty > oldest
+    # regardless of expiry). Selectable per model in the multi-model tier.
+    eviction: str = "ttl"
+
+    def __post_init__(self) -> None:
+        if self.eviction not in ("ttl", "lru"):
+            raise ValueError(
+                f"eviction must be 'ttl' or 'lru', got {self.eviction!r}")
 
     def resolved_failover_n_buckets(self) -> int:
         return (self.n_buckets if self.failover_n_buckets is None
@@ -81,26 +90,53 @@ class CacheConfigRegistry:
 
 
 def paper_production_configs() -> Dict[str, StageConfig]:
-    """The (task × stage) cells of Tables 2–3, with the paper's TTLs."""
+    """The (task × stage) cells of Tables 2–3, with the paper's TTLs.
+
+    The eviction column is this reproduction's §3.3 policy switch: the
+    second-stage models (tightest freshness budgets, Table 4) run
+    LRU-timestamp; everything else runs the paper's TTL-priority default.
+    """
     cells = {}
     rows = [
-        # (name, model_id, type, stage, direct ttl min, failover ttl h)
-        ("cvr_retrieval", 10, "cvr", "retrieval", 5, 1),
-        ("ctr_retrieval", 11, "ctr", "retrieval", 5, 1),
-        ("cvr_first_a", 12, "cvr", "first", 5, 1),
-        ("cvr_first_b", 13, "cvr", "first", 5, 1),
-        ("ctr_first_a", 14, "ctr", "first", 5, 1),
-        ("ctr_first_b", 15, "ctr", "first", 5, 1),
-        ("ctr_second", 16, "ctr", "second", 5, 2),
-        ("cvr_second", 17, "cvr", "second", 1, 2),
+        # (name, model_id, type, stage, direct ttl min, failover ttl h, evict)
+        ("cvr_retrieval", 10, "cvr", "retrieval", 5, 1, "ttl"),
+        ("ctr_retrieval", 11, "ctr", "retrieval", 5, 1, "ttl"),
+        ("cvr_first_a", 12, "cvr", "first", 5, 1, "ttl"),
+        ("cvr_first_b", 13, "cvr", "first", 5, 1, "ttl"),
+        ("ctr_first_a", 14, "ctr", "first", 5, 1, "ttl"),
+        ("ctr_first_b", 15, "ctr", "first", 5, 1, "ttl"),
+        ("ctr_second", 16, "ctr", "second", 5, 2, "lru"),
+        ("cvr_second", 17, "cvr", "second", 1, 2, "lru"),
     ]
-    for name, mid, mtype, stage, ttl_min, fo_h in rows:
+    for name, mid, mtype, stage, ttl_min, fo_h, evict in rows:
         cells[name] = StageConfig(
             stage=stage,
             cache=CacheConfig(
                 model_id=mid, model_type=mtype,
                 cache_ttl_ms=ttl_min * MINUTE_MS,
                 failover_ttl_ms=fo_h * HOUR_MS,
+                eviction=evict,
             ),
         )
     return cells
+
+
+def multi_model_tier_configs(value_dim: int = 64, n_buckets: int = 1 << 12,
+                             ways: int = 8,
+                             failover_n_buckets: Optional[int] = None
+                             ) -> List[CacheConfig]:
+    """The paper registry re-sized for one multi-model serving tier: every
+    Table 2–3 model cell, ordered by model_id, sharing value_dim/ways but
+    keeping its own TTLs and eviction policy. Retrieval-stage models get a
+    double-capacity DIRECT cache (they see the widest user fan-out); the
+    failover tier stays at ``failover_n_buckets`` (default: the base
+    ``n_buckets``) for every model."""
+    cfgs = []
+    fo_nb = n_buckets if failover_n_buckets is None else failover_n_buckets
+    for cell in paper_production_configs().values():
+        c = cell.cache
+        nb = n_buckets * 2 if cell.stage == "retrieval" else n_buckets
+        cfgs.append(dataclasses.replace(
+            c, value_dim=value_dim, n_buckets=nb, ways=ways,
+            failover_n_buckets=fo_nb))
+    return sorted(cfgs, key=lambda c: c.model_id)

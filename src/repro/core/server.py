@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +73,88 @@ def init_server_state(cfg: CacheConfig, dtype=jnp.float32,
     )
 
 
+def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
+                params, features, keys: Key64, now_ms, failure_mask,
+                direct, fo, writebuf: WriteBuffer,
+                model_slots=None, n_models: Optional[int] = None):
+    """Steps (2)–(4) of the Fig. 3 serve sequence, shared by the single-
+    and multi-model servers (step (1), the dual probe, differs):
+
+    miss-budget compaction + tower, failover assistance / model fallback,
+    provenance + counters, write-buffer append. ``model_slots``/
+    ``n_models`` (multi-model tier) tag buffered records and add per-model
+    (M,) stat breakdowns. Returns (embeddings, source, age, new_writebuf,
+    stats).
+    """
+    B = keys.hi.shape[0]
+
+    # (2) compaction: misses first, stable --------------------------------
+    order = jnp.argsort(direct.hit, stable=True)        # False (miss) first
+    sel = order[:miss_budget]                           # batch indices
+    sel_is_miss = ~direct.hit[sel]                      # tail may be hits
+
+    sel_features = jax.tree_util.tree_map(lambda x: x[sel], features)
+    towered = tower_fn(params, sel_features)            # (miss_budget, D)
+    towered = towered.astype(direct.values.dtype)
+
+    sel_failed = failure_mask[sel]
+    sel_ok = sel_is_miss & ~sel_failed                  # produced embedding
+
+    # (3) scatter computed rows back; find who still needs help -----------
+    computed = jnp.zeros((B,), bool).at[sel].set(sel_ok)
+    emb = direct.values
+    emb = emb.at[sel].set(jnp.where(sel_ok[:, None], towered, emb[sel]))
+    unresolved = ~direct.hit & ~computed                # overflow ∪ failed
+    use_fo = unresolved & fo.hit
+    emb = jnp.where(use_fo[:, None], fo.values.astype(emb.dtype), emb)
+    fallback = unresolved & ~fo.hit
+    emb = jnp.where(fallback[:, None],
+                    jnp.full_like(emb, fallback_value), emb)
+
+    source = jnp.where(
+        direct.hit, SRC_DIRECT,
+        jnp.where(computed, SRC_COMPUTED,
+                  jnp.where(use_fo, SRC_FAILOVER, SRC_FALLBACK))
+    ).astype(jnp.int32)
+    age = jnp.where(direct.hit, direct.age_ms,
+                    jnp.where(computed, 0,
+                              jnp.where(use_fo, fo.age_ms, -1)))
+
+    # (4) async cache update: append computed rows to the write buffer ----
+    sel_keys = Key64(hi=keys.hi[sel], lo=keys.lo[sel])
+    new_wb = wb_lib.append(
+        writebuf, sel_keys, towered, now_ms, mask=sel_ok,
+        model_ids=None if model_slots is None else model_slots[sel])
+
+    stats = {
+        "requests": jnp.int32(B),
+        "direct_hits": jnp.sum(direct.hit.astype(jnp.int32)),
+        "tower_inferences": jnp.sum(sel_is_miss.astype(jnp.int32)),
+        "tower_failures": jnp.sum((sel_is_miss & sel_failed).astype(jnp.int32)),
+        # misses beyond the provisioned budget (never attempted)
+        "overflow": jnp.sum((~direct.hit).astype(jnp.int32))
+            - jnp.sum(sel_is_miss.astype(jnp.int32)),
+        "failover_hits": jnp.sum(use_fo.astype(jnp.int32)),
+        "fallbacks": jnp.sum(fallback.astype(jnp.int32)),
+        # float32 accumulation: int32 would wrap on a batch of
+        # hour-scale failover ages (2e3 rows x 7.2e6 ms > 2^31)
+        "mean_age_ms": jnp.sum(jnp.where(age > 0, age, 0)
+                               .astype(jnp.float32)) /
+            jnp.maximum(jnp.sum((age > 0).astype(jnp.int32)), 1),
+    }
+    if model_slots is not None:
+        # per-model (M,) breakdowns for Table-1-style accounting
+        def per_model(flag):
+            return (jnp.zeros((n_models,), jnp.int32)
+                    .at[model_slots].add(flag.astype(jnp.int32)))
+
+        stats["per_model_requests"] = per_model(jnp.ones((B,), bool))
+        stats["per_model_direct_hits"] = per_model(direct.hit)
+        stats["per_model_failover_hits"] = per_model(use_fo)
+        stats["per_model_fallbacks"] = per_model(fallback)
+    return emb, source, age.astype(jnp.int32), new_wb, stats
+
+
 @dataclasses.dataclass(frozen=True)
 class CachedEmbeddingServer:
     """Binds a user-tower fn to ERCache semantics.
@@ -91,7 +173,6 @@ class CachedEmbeddingServer:
                    features, now_ms, failure_mask: Optional[jnp.ndarray] = None,
                    ) -> ServeResult:
         B = keys.hi.shape[0]
-        M = self.miss_budget
         cfg = self.cfg
         now_ms = jnp.int32(now_ms)
         if failure_mask is None:
@@ -105,58 +186,13 @@ class CachedEmbeddingServer:
             state.direct, state.failover, keys, now_ms, cfg.cache_ttl_ms,
             cfg.failover_ttl_ms, backend=cfg.backend)
 
-        # (2) compaction: misses first, stable --------------------------------
-        order = jnp.argsort(direct.hit, stable=True)        # False (miss) first
-        sel = order[:M]                                     # (M,) batch indices
-        sel_is_miss = ~direct.hit[sel]                      # tail may be hits
-
-        sel_features = jax.tree_util.tree_map(lambda x: x[sel], features)
-        towered = self.tower_fn(params, sel_features)       # (M, D)
-        towered = towered.astype(state.direct.values.dtype)
-
-        sel_failed = failure_mask[sel]
-        sel_ok = sel_is_miss & ~sel_failed                  # produced embedding
-
-        # (3) scatter computed rows back; find who still needs help -------
-        computed = jnp.zeros((B,), bool).at[sel].set(sel_ok)
-        emb = direct.values
-        emb = emb.at[sel].set(jnp.where(sel_ok[:, None], towered, emb[sel]))
-        unresolved = ~direct.hit & ~computed                # overflow ∪ failed
-        use_fo = unresolved & fo.hit
-        emb = jnp.where(use_fo[:, None], fo.values.astype(emb.dtype), emb)
-        fallback = unresolved & ~fo.hit
-        emb = jnp.where(fallback[:, None],
-                        jnp.full_like(emb, self.fallback_value), emb)
-
-        source = jnp.where(
-            direct.hit, SRC_DIRECT,
-            jnp.where(computed, SRC_COMPUTED,
-                      jnp.where(use_fo, SRC_FAILOVER, SRC_FALLBACK))
-        ).astype(jnp.int32)
-        age = jnp.where(direct.hit, direct.age_ms,
-                        jnp.where(computed, 0,
-                                  jnp.where(use_fo, fo.age_ms, -1)))
-
-        # (4) async cache update: append computed rows to the write buffer
-        sel_keys = Key64(hi=keys.hi[sel], lo=keys.lo[sel])
-        new_wb = wb_lib.append(state.writebuf, sel_keys, towered, now_ms,
-                               mask=sel_ok)
-
-        stats = {
-            "requests": jnp.int32(B),
-            "direct_hits": jnp.sum(direct.hit.astype(jnp.int32)),
-            "tower_inferences": jnp.sum(sel_is_miss.astype(jnp.int32)),
-            "tower_failures": jnp.sum((sel_is_miss & sel_failed).astype(jnp.int32)),
-            # misses beyond the provisioned budget (never attempted)
-            "overflow": jnp.sum((~direct.hit).astype(jnp.int32))
-                - jnp.sum(sel_is_miss.astype(jnp.int32)),
-            "failover_hits": jnp.sum(use_fo.astype(jnp.int32)),
-            "fallbacks": jnp.sum(fallback.astype(jnp.int32)),
-            "mean_age_ms": jnp.sum(jnp.where(age > 0, age, 0)) /
-                jnp.maximum(jnp.sum((age > 0).astype(jnp.int32)), 1),
-        }
+        # (2)–(4): shared serve tail
+        emb, source, age, new_wb, stats = _serve_tail(
+            self.tower_fn, self.miss_budget, self.fallback_value, params,
+            features, keys, now_ms, failure_mask, direct, fo,
+            state.writebuf)
         return ServeResult(
-            embeddings=emb, source=source, age_ms=age.astype(jnp.int32),
+            embeddings=emb, source=source, age_ms=age,
             state=ServerState(direct=state.direct, failover=state.failover,
                               writebuf=new_wb),
             stats=stats)
@@ -169,7 +205,8 @@ class CachedEmbeddingServer:
         critical path."""
         direct, failover, wb1 = wb_lib.flush_dual(
             state.writebuf, state.direct, state.failover, now_ms,
-            self.cfg.cache_ttl_ms, self.cfg.failover_ttl_ms)
+            self.cfg.cache_ttl_ms, self.cfg.failover_ttl_ms,
+            evict_lru=self.cfg.eviction == "lru")
         return ServerState(direct=direct, failover=failover, writebuf=wb1)
 
     # ------------------------------------------------------------------ jit
@@ -178,6 +215,142 @@ class CachedEmbeddingServer:
     # (potentially multi-GB) cache tables instead of copying them every
     # step. Callers must follow the move pattern ``state = res.state`` /
     # ``state = srv.jit_flush(state, now)`` and never touch the old value.
+    @functools.cached_property
+    def jit_serve_step(self):
+        return jax.jit(self.serve_step, donate_argnums=(1,))
+
+    @functools.cached_property
+    def jit_flush(self):
+        return jax.jit(self.flush, donate_argnums=(0,))
+
+
+# ========================================================== multi-model tier
+class MultiServerState(NamedTuple):
+    direct: cache_lib.MultiCacheState     # stacked per-model direct tables
+    failover: cache_lib.MultiCacheState   # stacked per-model failover tables
+    writebuf: WriteBuffer                 # shared ring, records model-tagged
+
+
+def init_multi_server_state(cfgs: Sequence[CacheConfig], dtype=jnp.float32,
+                            writebuf_capacity: int = 4096
+                            ) -> MultiServerState:
+    """Allocate the stacked tier for an ordered model registry.
+
+    Every model keeps its own direct/failover capacity (bucket masks);
+    value_dim must agree across the tier and heterogeneous ``ways`` are
+    normalized up to the tier maximum (extra associativity, never less).
+    """
+    dims = {c.value_dim for c in cfgs}
+    if len(dims) != 1:
+        raise ValueError(f"tier needs one value_dim, got {sorted(dims)}")
+    dim = dims.pop()
+    ways_d = max(c.ways for c in cfgs)
+    ways_f = max(c.resolved_failover_ways() for c in cfgs)
+    return MultiServerState(
+        direct=cache_lib.init_multi_cache(
+            [c.n_buckets for c in cfgs], ways_d, dim, dtype),
+        failover=cache_lib.init_multi_cache(
+            [c.resolved_failover_n_buckets() for c in cfgs], ways_f, dim,
+            dtype),
+        writebuf=wb_lib.init_writebuf(writebuf_capacity, dim, dtype),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiModelServer:
+    """One serving tier fronting the WHOLE model registry (DESIGN.md §5).
+
+    The paper's headline shape: 30+ ranking models, each with customized
+    cache settings, served by one cache deployment. A serve batch is a
+    mixed stream of (model slot, user key) pairs; the direct+failover
+    probe for ALL models is ONE dispatch (``lookup_dual_multi`` — the
+    pallas backend launches ``cache_probe_dual_multi`` once, with
+    per-model TTLs gathered in-kernel from the policy table), and the
+    async flush applies per-model TTL and eviction policy through one
+    shared insert plan.
+
+    ``tower_fn(params, features) -> (B, D)`` stands in for the per-model
+    user towers (one shared tower in this reproduction — the cache-tier
+    semantics, not the tower zoo, are what's under test).
+    """
+
+    cfgs: Tuple[CacheConfig, ...]
+    tower_fn: Callable
+    miss_budget: int
+    fallback_value: float = 0.0
+    # "jnp" oracle | "pallas" fused kernel. None (default) resolves from
+    # the configs — which must then agree, so a registry built with
+    # backend="pallas" is never silently served on the jnp path.
+    backend: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.backend is None:
+            backends = {c.backend for c in self.cfgs}
+            if len(backends) != 1:
+                raise ValueError(
+                    f"configs disagree on backend {sorted(backends)}; pass "
+                    "MultiModelServer(backend=...) explicitly")
+            object.__setattr__(self, "backend", backends.pop())
+        # Materialize the policy table EAGERLY: building it lazily inside
+        # the first jit trace would cache trace-bound tracers (leak).
+        object.__setattr__(self, "_policy",
+                           cache_lib.policy_from_configs(self.cfgs))
+
+    @property
+    def policy(self) -> cache_lib.ModelPolicy:
+        return self._policy
+
+    @property
+    def n_models(self) -> int:
+        return len(self.cfgs)
+
+    # ----------------------------------------------------------------- serve
+    def serve_step(self, params, state: MultiServerState, slots,
+                   keys: Key64, features, now_ms,
+                   failure_mask: Optional[jnp.ndarray] = None
+                   ) -> ServeResult:
+        """Serve a MIXED-model batch: ``slots`` (B,) int32 assigns each
+        request its model. Steps mirror CachedEmbeddingServer.serve_step
+        (the shared ``_serve_tail``); step (1) covers every model in the
+        registry in one dispatch, and the stats gain per-model (M,)
+        breakdowns."""
+        B = keys.hi.shape[0]
+        now_ms = jnp.int32(now_ms)
+        slots = jnp.asarray(slots, jnp.int32)
+        if failure_mask is None:
+            failure_mask = jnp.zeros((B,), bool)
+
+        # (1) direct + failover check, ALL models — ONE dispatch ----------
+        direct, fo = cache_lib.lookup_dual_multi(
+            state.direct, state.failover, self.policy, slots, keys, now_ms,
+            backend=self.backend)
+
+        # (2)–(4): shared serve tail, with model-tagged buffer records
+        emb, source, age, new_wb, stats = _serve_tail(
+            self.tower_fn, self.miss_budget, self.fallback_value, params,
+            features, keys, now_ms, failure_mask, direct, fo,
+            state.writebuf, model_slots=slots, n_models=self.n_models)
+        return ServeResult(
+            embeddings=emb, source=source, age_ms=age,
+            state=MultiServerState(direct=state.direct,
+                                   failover=state.failover,
+                                   writebuf=new_wb),
+            stats=stats)
+
+    # ----------------------------------------------------------------- flush
+    def flush(self, state: MultiServerState, now_ms) -> MultiServerState:
+        """Apply the mixed-model write buffer to both stacked tiers with
+        ONE shared insert plan; each record under its model's TTL and
+        eviction policy. Off the serving critical path."""
+        direct, failover, wb1 = wb_lib.flush_dual_multi(
+            state.writebuf, state.direct, state.failover, self.policy,
+            now_ms)
+        return MultiServerState(direct=direct, failover=failover,
+                                writebuf=wb1)
+
+    # ------------------------------------------------------------------ jit
+    # Same donation contract as CachedEmbeddingServer: MultiServerState is
+    # donated, callers follow the move pattern and never reuse old state.
     @functools.cached_property
     def jit_serve_step(self):
         return jax.jit(self.serve_step, donate_argnums=(1,))

@@ -12,7 +12,7 @@ freshness (see cache.insert ``ts_ms``).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -27,6 +27,8 @@ class WriteBuffer(NamedTuple):
     values: jnp.ndarray   # (cap, dim)
     count: jnp.ndarray    # () int32 — total appended since last flush (may
                           # exceed cap; ring overwrites oldest)
+    model_id: jnp.ndarray  # (cap,) int32 — model slot per record (all zero
+                           # for single-model servers)
 
     @property
     def capacity(self) -> int:
@@ -40,14 +42,21 @@ def init_writebuf(capacity: int, dim: int, dtype=jnp.float32) -> WriteBuffer:
         ts_ms=jnp.zeros((capacity,), jnp.int32),
         values=jnp.zeros((capacity, dim), dtype),
         count=jnp.int32(0),
+        model_id=jnp.zeros((capacity,), jnp.int32),
     )
 
 
 def append(buf: WriteBuffer, keys: Key64, values: jnp.ndarray,
-           ts_ms, mask: jnp.ndarray) -> WriteBuffer:
-    """Append masked records at the ring head. O(B) scatter."""
+           ts_ms, mask: jnp.ndarray,
+           model_ids: Optional[jnp.ndarray] = None) -> WriteBuffer:
+    """Append masked records at the ring head. O(B) scatter.
+
+    ``model_ids`` (B,) tags each record with its model slot — the
+    multi-model flush gathers per-record TTL/eviction policy from it."""
     B = values.shape[0]
     ts_vec = jnp.broadcast_to(jnp.asarray(ts_ms, jnp.int32), (B,))
+    if model_ids is None:
+        model_ids = jnp.zeros((B,), jnp.int32)
     # Compact live records to the front so ring slots aren't wasted on pads.
     order = jnp.argsort(~mask, stable=True)          # live first
     n_live = jnp.sum(mask.astype(jnp.int32))
@@ -63,11 +72,14 @@ def append(buf: WriteBuffer, keys: Key64, values: jnp.ndarray,
         values=buf.values.at[slot].set(
             values[src].astype(buf.values.dtype), mode="drop"),
         count=buf.count + n_live,
+        model_id=buf.model_id.at[slot].set(
+            jnp.asarray(model_ids, jnp.int32)[src], mode="drop"),
     )
 
 
 def _ring_order(buf: WriteBuffer):
-    """Unroll the ring into append order. Returns (keys, values, ts, live)."""
+    """Unroll the ring into append order. Returns (keys, values, ts, live,
+    model slots)."""
     cap = buf.capacity
     idx = jnp.arange(cap, dtype=jnp.int32)
     n_live = jnp.minimum(buf.count, cap)
@@ -76,7 +88,7 @@ def _ring_order(buf: WriteBuffer):
     ring = (start + idx) % cap
     live = idx < n_live
     keys = Key64(hi=buf.key_hi[ring], lo=buf.key_lo[ring])
-    return keys, buf.values[ring], buf.ts_ms[ring], live
+    return keys, buf.values[ring], buf.ts_ms[ring], live, buf.model_id[ring]
 
 
 def flush(buf: WriteBuffer, state: cache_lib.CacheState, now_ms, ttl_ms
@@ -86,7 +98,7 @@ def flush(buf: WriteBuffer, state: cache_lib.CacheState, now_ms, ttl_ms
     Records are applied in append order (ring order), so last-writer-wins
     matches the true write stream. Slots beyond ``count`` are masked out.
     """
-    keys, values, ts, live = _ring_order(buf)
+    keys, values, ts, live, _ = _ring_order(buf)
     new_state = cache_lib.insert(state, keys, values, now_ms, ttl_ms,
                                  write_mask=live, ts_ms=ts)
     return new_state, buf._replace(count=jnp.int32(0))
@@ -94,7 +106,7 @@ def flush(buf: WriteBuffer, state: cache_lib.CacheState, now_ms, ttl_ms
 
 def flush_dual(buf: WriteBuffer, direct: cache_lib.CacheState,
                failover: cache_lib.CacheState, now_ms,
-               direct_ttl_ms, failover_ttl_ms
+               direct_ttl_ms, failover_ttl_ms, evict_lru=None
                ) -> Tuple[cache_lib.CacheState, cache_lib.CacheState,
                           WriteBuffer]:
     """Flush the buffer into BOTH caches with ONE shared insert plan.
@@ -102,9 +114,31 @@ def flush_dual(buf: WriteBuffer, direct: cache_lib.CacheState,
     The ring unroll and the plan's dedupe/rank sort run once instead of
     twice (cache_lib.insert_dual); semantics per cache are identical to two
     independent :func:`flush` calls with the respective TTLs.
+    ``evict_lru`` selects the victim order (paper §3.3 policy switch).
     """
-    keys, values, ts, live = _ring_order(buf)
+    keys, values, ts, live, _ = _ring_order(buf)
     new_direct, new_failover = cache_lib.insert_dual(
         direct, failover, keys, values, now_ms, direct_ttl_ms,
-        failover_ttl_ms, write_mask=live, ts_ms=ts)
+        failover_ttl_ms, write_mask=live, ts_ms=ts, evict_lru=evict_lru)
+    return new_direct, new_failover, buf._replace(count=jnp.int32(0))
+
+
+def flush_dual_multi(buf: WriteBuffer, direct: cache_lib.MultiCacheState,
+                     failover: cache_lib.MultiCacheState,
+                     policy: cache_lib.ModelPolicy, now_ms
+                     ) -> Tuple[cache_lib.MultiCacheState,
+                                cache_lib.MultiCacheState, WriteBuffer]:
+    """Flush a mixed-model buffer into BOTH stacked tiers with ONE shared
+    insert plan.
+
+    Each record's TTLs and eviction policy come from its model's row of
+    the policy table (``cache_lib.insert_dual_multi``); the plan's dedupe
+    is model-salted so the same user buffered for two models writes to
+    both slabs. Semantics per model are identical to flushing that
+    model's records alone with its own settings.
+    """
+    keys, values, ts, live, slots = _ring_order(buf)
+    new_direct, new_failover = cache_lib.insert_dual_multi(
+        direct, failover, policy, slots, keys, values, now_ms,
+        write_mask=live, ts_ms=ts)
     return new_direct, new_failover, buf._replace(count=jnp.int32(0))

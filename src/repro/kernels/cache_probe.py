@@ -35,8 +35,9 @@ DEFAULT_TILE_Q = 128
 
 # Python-level launch counters (one increment per wrapper call, i.e. per
 # kernel launch in eager mode / per trace under jit). Tests use these to
-# assert serve_step issues exactly ONE probe launch for direct+failover.
-LAUNCHES = {"tiled": 0, "dual": 0, "perquery": 0}
+# assert serve_step issues exactly ONE probe launch for direct+failover —
+# and, on the multi-model tier, ONE launch for the whole model registry.
+LAUNCHES = {"tiled": 0, "dual": 0, "dual_multi": 0, "perquery": 0}
 
 
 def resolve_interpret(interpret=None) -> bool:
@@ -335,6 +336,161 @@ def cache_probe_dual(d_key_hi, d_key_lo, d_write_ts, d_values,
         f_key_hi, f_key_lo, f_write_ts, f_values,
         q_hi, q_lo, buckets_d, buckets_f,
         now_ms, ttl_direct_ms, ttl_failover_ms,
+        tile_q=_pick_tile(q_hi.shape[0], tile_q),
+        interpret=resolve_interpret(interpret))
+
+
+# ----------------------------------------------------- dual multi-model probe
+def _policy_ttls(policy_ref, slot_v):
+    """Per-query (TQ,) direct/failover TTL vectors from the scalar-prefetched
+    (M, 2) policy table.
+
+    SMEM holds scalars, so the gather is an unrolled select over the model
+    axis: M scalar reads broadcast against the slot vector (M is the
+    registry size — tens, not thousands)."""
+    M = policy_ref.shape[0]
+    ttl_d = jnp.zeros(slot_v.shape, jnp.int32)
+    ttl_f = jnp.zeros(slot_v.shape, jnp.int32)
+    for m in range(M):
+        sel = slot_v == m
+        ttl_d = jnp.where(sel, policy_ref[m, 0], ttl_d)
+        ttl_f = jnp.where(sel, policy_ref[m, 1], ttl_f)
+    return ttl_d, ttl_f
+
+
+def _make_dual_multi_kernel(tq: int):
+    """The dual probe extended to a stacked multi-model tier: tables are the
+    pooled (M*Nb, W) views, buckets already carry the slot offset, and each
+    query's TTLs come from its model's row of the policy table."""
+    def kernel(bkt_d_ref, bkt_f_ref, policy_ref, scalars_ref,  # scalar prefetch
+               qhi_ref, qlo_ref, slot_ref,                      # (TQ,) blocks
+               dkhi, dklo, dts, dval,                    # direct tables (ANY)
+               fkhi, fklo, fts, fval,                    # failover tables (ANY)
+               hit_d_ref, out_d_ref, age_d_ref,
+               hit_f_ref, out_f_ref, age_f_ref,
+               dkhi_s, dklo_s, dts_s, dval_s,
+               fkhi_s, fklo_s, fts_s, fval_s, sems):
+        t = pl.program_id(0)
+        now = scalars_ref[0]
+        d_tabs = (dkhi, dklo, dts, dval)
+        d_scrs = (dkhi_s, dklo_s, dts_s, dval_s)
+        f_tabs = (fkhi, fklo, fts, fval)
+        f_scrs = (fkhi_s, fklo_s, fts_s, fval_s)
+
+        def dmas(j):
+            return (_table_dmas(bkt_d_ref[t * tq + j], d_tabs, d_scrs,
+                                sems, 0, j)
+                    + _table_dmas(bkt_f_ref[t * tq + j], f_tabs, f_scrs,
+                                  sems, 4, j))
+
+        _start_then_drain(tq, dmas)
+
+        qhi = qhi_ref[:]
+        qlo = qlo_ref[:]
+        ttl_d, ttl_f = _policy_ttls(policy_ref, slot_ref[:])
+        hit, val, age = _probe_tile(now, ttl_d[:, None], qhi, qlo, dkhi_s[:],
+                                    dklo_s[:], dts_s[:], dval_s[:],
+                                    out_d_ref.dtype)
+        hit_d_ref[:] = hit
+        out_d_ref[:] = val
+        age_d_ref[:] = age
+        hit, val, age = _probe_tile(now, ttl_f[:, None], qhi, qlo, fkhi_s[:],
+                                    fklo_s[:], fts_s[:], fval_s[:],
+                                    out_f_ref.dtype)
+        hit_f_ref[:] = hit
+        out_f_ref[:] = val
+        age_f_ref[:] = age
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "interpret"))
+def _cache_probe_dual_multi(d_key_hi, d_key_lo, d_write_ts, d_values,
+                            f_key_hi, f_key_lo, f_write_ts, f_values,
+                            q_hi, q_lo, slots, buckets_d, buckets_f,
+                            policy, now_ms, *, tile_q: int, interpret: bool):
+    B = q_hi.shape[0]
+    Wd = d_key_hi.shape[1]
+    Wf = f_key_hi.shape[1]
+    D = d_values.shape[-1]
+    tq = tile_q
+    pad = (-B) % tq
+    if pad:
+        q_hi = jnp.pad(q_hi, (0, pad))
+        q_lo = jnp.pad(q_lo, (0, pad))
+        slots = jnp.pad(slots, (0, pad))       # model 0: always a valid row
+        buckets_d = jnp.pad(buckets_d, (0, pad))
+        buckets_f = jnp.pad(buckets_f, (0, pad))
+    Bp = B + pad
+    scalars = jnp.asarray([now_ms], jnp.int32)
+
+    out1d = lambda: pl.BlockSpec((tq,), lambda t, bd, bf, p, s: (t,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(Bp // tq,),
+        in_specs=[out1d(), out1d(), out1d()]
+        + [pl.BlockSpec(memory_space=pltpu.ANY)] * 8,
+        out_specs=[
+            out1d(),
+            pl.BlockSpec((tq, D), lambda t, bd, bf, p, s: (t, 0)),
+            out1d(),
+            out1d(),
+            pl.BlockSpec((tq, D), lambda t, bd, bf, p, s: (t, 0)),
+            out1d(),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, Wd), jnp.int32),
+            pltpu.VMEM((tq, Wd), jnp.int32),
+            pltpu.VMEM((tq, Wd), jnp.int32),
+            pltpu.VMEM((tq, Wd, D), d_values.dtype),
+            pltpu.VMEM((tq, Wf), jnp.int32),
+            pltpu.VMEM((tq, Wf), jnp.int32),
+            pltpu.VMEM((tq, Wf), jnp.int32),
+            pltpu.VMEM((tq, Wf, D), f_values.dtype),
+            pltpu.SemaphoreType.DMA((8, tq)),
+        ],
+    )
+    outs = pl.pallas_call(
+        _make_dual_multi_kernel(tq),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, D), d_values.dtype),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, D), f_values.dtype),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(buckets_d, buckets_f, policy, scalars, q_hi, q_lo, slots,
+      d_key_hi, d_key_lo, d_write_ts, d_values,
+      f_key_hi, f_key_lo, f_write_ts, f_values)
+    hit_d, out_d, age_d, hit_f, out_f, age_f = outs
+    return ((hit_d[:B].astype(bool), out_d[:B], age_d[:B]),
+            (hit_f[:B].astype(bool), out_f[:B], age_f[:B]))
+
+
+def cache_probe_dual_multi(d_key_hi, d_key_lo, d_write_ts, d_values,
+                           f_key_hi, f_key_lo, f_write_ts, f_values,
+                           q_hi, q_lo, slots, buckets_d, buckets_f,
+                           policy, now_ms, *, tile_q=None, interpret=None):
+    """Probe the pooled direct + failover tiers of a multi-model stack for a
+    MIXED-model query batch in ONE launch.
+
+    ``d_*``/``f_*`` are the pooled (M*Nb, W[, D]) views of the stacked
+    tables, ``slots`` (B,) assigns each query its model, ``buckets_*``
+    already carry the slot offset (``core.cache.pooled_buckets``), and
+    ``policy`` is the (M, 2) int32 [direct_ttl, failover_ttl] table —
+    scalar-prefetched so each query's freshness check uses its own model's
+    TTLs. Returns ((hit_d, value_d, age_d), (hit_f, value_f, age_f)),
+    each half bit-identical to a per-model jnp-oracle loop.
+    """
+    LAUNCHES["dual_multi"] += 1
+    return _cache_probe_dual_multi(
+        d_key_hi, d_key_lo, d_write_ts, d_values,
+        f_key_hi, f_key_lo, f_write_ts, f_values,
+        q_hi, q_lo, slots, buckets_d, buckets_f,
+        jnp.asarray(policy, jnp.int32), jnp.int32(now_ms),
         tile_q=_pick_tile(q_hi.shape[0], tile_q),
         interpret=resolve_interpret(interpret))
 

@@ -5,10 +5,15 @@ generator (Fig. 2 calibrated) drives per-region CachedEmbeddingServer
 instances fronting a configurable user tower; counters reproduce the
 Table 2/3 accounting; results print as a report.
 
+``--multi`` replays ONE access stream across the WHOLE per-model registry
+(paper Table 1 / `configs.multi_model_tier_configs`): every batch is a
+mixed-model batch served by a single MultiModelServer dispatch, and the
+report breaks hit rates down per model.
+
 Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --arch sasrec \
-        --minutes 120 --users 5000 --ttl-min 5 [--no-cache]
+        --minutes 120 --users 5000 --ttl-min 5 [--no-cache] [--multi]
 """
 from __future__ import annotations
 
@@ -21,7 +26,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import server as srv_lib
-from repro.core.config import CacheConfig, MINUTE_MS, HOUR_MS
+from repro.core.config import (CacheConfig, MINUTE_MS, HOUR_MS,
+                               multi_model_tier_configs)
 from repro.core.hashing import Key64
 from repro.core.metrics import ServingCounters, power_savings
 from repro.data.access_patterns import (FIG6_KNOTS, InterArrivalDist,
@@ -55,7 +61,7 @@ def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
                 ttl_min: float = 5.0, failover_ttl_h: float = 1.0,
                 batch: int = 256, miss_budget_frac: float = 0.75,
                 failure_rate: float = 0.0, use_cache: bool = True,
-                seed: int = 0, log=print):
+                backend: str = "jnp", seed: int = 0, log=print):
     tower_cfg, params, tower_fn, features_of = build_tower(arch)
     cache_cfg = CacheConfig(
         model_id=1, model_type="ctr",
@@ -63,7 +69,8 @@ def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
         failover_ttl_ms=int(failover_ttl_h * HOUR_MS),
         n_buckets=1 << 14, ways=8,
         value_dim=tower_cfg.user_embed_dim,
-        miss_budget_frac=miss_budget_frac)
+        miss_budget_frac=miss_budget_frac,
+        backend=backend)
     server = srv_lib.CachedEmbeddingServer(
         cfg=cache_cfg, tower_fn=tower_fn,
         miss_budget=max(int(batch * miss_budget_frac), 1))
@@ -120,19 +127,135 @@ def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
     return d
 
 
+def run_serving_multi(arch: str = "sasrec", minutes: int = 60,
+                      users: int = 2000, batch: int = 256,
+                      miss_budget_frac: float = 0.75,
+                      n_buckets: int = 1 << 12, failure_rate: float = 0.0,
+                      backend: str = "jnp", seed: int = 0, log=print):
+    """Replay one access stream across the whole model registry.
+
+    Each arriving user request is fanned out to one of the registry's
+    models (round-robin within the batch), so every serve batch is a
+    mixed-model batch — served by ONE MultiModelServer dispatch with
+    per-model TTL/eviction/capacity policies. Reports global counters
+    plus the per-model hit-rate breakdown (the paper's Table 2 shape).
+    """
+    tower_cfg, params, tower_fn, features_of = build_tower(arch)
+    cfgs = multi_model_tier_configs(value_dim=tower_cfg.user_embed_dim,
+                                    n_buckets=n_buckets)
+    server = srv_lib.MultiModelServer(
+        cfgs=tuple(cfgs), tower_fn=tower_fn,
+        miss_budget=max(int(batch * miss_budget_frac), 1), backend=backend)
+    state = srv_lib.init_multi_server_state(cfgs,
+                                            writebuf_capacity=batch * 4)
+    n_models = server.n_models
+
+    stream_cfg = StreamConfig(n_users=users, horizon_s=minutes * 60.0,
+                              seed=seed)
+    times_ms, uids = generate_stream_fast(
+        stream_cfg, InterArrivalDist(FIG6_KNOTS))
+    injector = FailureInjector(base_rate=failure_rate, seed=seed)
+
+    counters = ServingCounters()
+    pm_requests = np.zeros(n_models, np.int64)
+    pm_hits = np.zeros(n_models, np.int64)
+    pm_fallbacks = np.zeros(n_models, np.int64)
+    t0 = time.perf_counter()
+    n_batches = 0
+    for lo in range(0, len(uids) - batch + 1, batch):
+        ids = uids[lo:lo + batch]
+        now = int(times_ms[lo + batch - 1])
+        keys = Key64.from_int(ids)
+        # fan-out: each request targets one registry model, round-robin
+        # phased by the batch index so a user cycles through models.
+        slots = jnp.asarray((np.arange(batch) + n_batches) % n_models,
+                            jnp.int32)
+        feats = features_of(ids, now)
+        fail = jnp.asarray(injector.mask(batch, now))
+        res = server.jit_serve_step(params, state, slots, keys, feats, now,
+                                    fail)
+        state = res.state
+        s = {k: int(v) for k, v in res.stats.items()
+             if not k.startswith("per_model") and k != "mean_age_ms"}
+        counters.merge(ServingCounters(
+            requests=s["requests"], direct_hits=s["direct_hits"],
+            tower_inferences=s["tower_inferences"],
+            tower_failures=s["tower_failures"],
+            overflow=s["overflow"], failover_hits=s["failover_hits"],
+            fallbacks=s["fallbacks"], combined_writes=1))
+        pm_requests += np.asarray(res.stats["per_model_requests"])
+        pm_hits += np.asarray(res.stats["per_model_direct_hits"])
+        pm_fallbacks += np.asarray(res.stats["per_model_fallbacks"])
+        state = server.jit_flush(state, now)
+        n_batches += 1
+    wall = time.perf_counter() - t0
+
+    d = counters.as_dict()
+    d["wall_s"] = round(wall, 2)
+    d["batches"] = n_batches
+    d["n_models"] = n_models
+    d["per_model"] = {
+        cfg.model_id: {
+            "model_type": cfg.model_type,
+            "eviction": cfg.eviction,
+            "ttl_min": cfg.cache_ttl_ms / MINUTE_MS,
+            "requests": int(pm_requests[i]),
+            "hit_rate": round(pm_hits[i] / max(pm_requests[i], 1), 4),
+            "fallback_rate": round(
+                pm_fallbacks[i] / max(pm_requests[i], 1), 4),
+        }
+        for i, cfg in enumerate(cfgs)
+    }
+    log(f"[serve-multi {arch}] models={n_models} backend={backend}"
+        f" requests={d['requests']} hit_rate={d['hit_rate']:.3f}"
+        f" fallback_rate={d['fallback_rate']:.4f} ({wall:.1f}s)")
+    for mid, pm in d["per_model"].items():
+        log(f"  model {mid} ({pm['model_type']}, ttl={pm['ttl_min']:g}min,"
+            f" {pm['eviction']}): hit_rate={pm['hit_rate']:.3f}"
+            f" requests={pm['requests']}")
+    return d
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="sasrec")
     ap.add_argument("--minutes", type=int, default=60)
     ap.add_argument("--users", type=int, default=2000)
-    ap.add_argument("--ttl-min", type=float, default=5.0)
+    # None (not 5.0) so --multi can tell "flag passed" from "default":
+    # per-model TTLs come from the registry and must not be overridden.
+    ap.add_argument("--ttl-min", type=float, default=None,
+                    help="direct-cache TTL in minutes (default 5; "
+                         "incompatible with --multi)")
     ap.add_argument("--failure-rate", type=float, default=0.0)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--multi", action="store_true",
+                    help="serve the whole per-model registry as one "
+                         "multi-model tier (mixed-model batches, one "
+                         "dispatch per batch)")
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--multi-buckets", type=int, default=1 << 12,
+                    help="per-model direct-cache buckets in --multi mode")
     args = ap.parse_args()
-    run_serving(arch=args.arch, minutes=args.minutes, users=args.users,
-                ttl_min=args.ttl_min, failure_rate=args.failure_rate,
-                batch=args.batch, use_cache=not args.no_cache)
+    if args.multi:
+        # fail loudly on flags the multi tier cannot honor: TTLs come from
+        # the per-model registry and the tier has no cache-off baseline.
+        if args.no_cache:
+            ap.error("--no-cache has no multi-model baseline; drop --multi")
+        if args.ttl_min is not None:
+            ap.error("--ttl-min is per-model in --multi mode (see "
+                     "docs/model_registry.md); it cannot be overridden")
+        run_serving_multi(arch=args.arch, minutes=args.minutes,
+                          users=args.users, batch=args.batch,
+                          n_buckets=args.multi_buckets,
+                          failure_rate=args.failure_rate,
+                          backend=args.backend)
+    else:
+        run_serving(arch=args.arch, minutes=args.minutes, users=args.users,
+                    ttl_min=5.0 if args.ttl_min is None else args.ttl_min,
+                    failure_rate=args.failure_rate,
+                    batch=args.batch, use_cache=not args.no_cache,
+                    backend=args.backend)
 
 
 if __name__ == "__main__":

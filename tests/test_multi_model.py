@@ -1,0 +1,388 @@
+"""Multi-model cache tier: one dispatch serves the whole registry.
+
+Contracts (DESIGN.md §5):
+
+* a MIXED-model batch across ≥4 registry models is served by a SINGLE
+  ``lookup`` dispatch (the PR-1 launch-counting contract, extended to the
+  ``dual_multi`` kernel), bit-exact against a per-model jnp-oracle loop;
+* per-model TTL, capacity (bucket masks), and eviction policy thread
+  through the shared probe/insert plan;
+* the model-salted dedupe keeps the same user distinct across models;
+* MultiModelServer end-to-end: provenance, per-model stats, flush,
+  donation, jnp/pallas backend parity.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as C
+from repro.core import server as S
+from repro.core import writebuf as wb_lib
+from repro.core.config import CacheConfig, multi_model_tier_configs
+from repro.core.hashing import EMPTY_HI, Key64
+from repro.kernels import cache_probe as pk
+
+MIN = 60_000
+DIM = 8
+
+
+def keys_of(ids):
+    return Key64.from_int(np.asarray(ids, np.int64))
+
+
+def tier_configs():
+    """Four models with DIFFERENT capacity, TTLs, and eviction policies."""
+    return (
+        CacheConfig(model_id=10, model_type="ctr", n_buckets=32, ways=4,
+                    value_dim=DIM, cache_ttl_ms=1 * MIN,
+                    failover_ttl_ms=10 * MIN),
+        CacheConfig(model_id=11, model_type="cvr", n_buckets=64, ways=4,
+                    value_dim=DIM, cache_ttl_ms=5 * MIN,
+                    failover_ttl_ms=20 * MIN, eviction="lru"),
+        CacheConfig(model_id=12, model_type="ctr", n_buckets=16, ways=4,
+                    value_dim=DIM, cache_ttl_ms=2 * MIN,
+                    failover_ttl_ms=10 * MIN),
+        CacheConfig(model_id=13, model_type="cvr", n_buckets=32, ways=4,
+                    value_dim=DIM, cache_ttl_ms=3 * MIN,
+                    failover_ttl_ms=15 * MIN, eviction="lru"),
+    )
+
+
+def populated_tier(rng, cfgs, n=60, t_write=0):
+    """A warmed stacked tier: n random (slot, key) records inserted."""
+    policy = C.policy_from_configs(cfgs)
+    direct = C.init_multi_cache([c.n_buckets for c in cfgs], 4, DIM)
+    failover = C.init_multi_cache(
+        [c.resolved_failover_n_buckets() for c in cfgs], 4, DIM)
+    ids = rng.integers(0, 40, n)
+    slots = jnp.asarray(rng.integers(0, len(cfgs), n), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal((n, DIM)), jnp.float32)
+    direct, failover = C.insert_dual_multi(direct, failover, policy, slots,
+                                           keys_of(ids), vals, t_write)
+    return policy, direct, failover, ids, slots, vals
+
+
+# ------------------------------------------------------------ lookup parity
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_mixed_batch_matches_per_model_oracle_loop(backend, rng):
+    """The single multi-model dispatch is bit-exact against looping the
+    single-model jnp oracle over each model's slab — across 4 models with
+    different capacities and TTLs, mixed hit/expired/missing queries."""
+    cfgs = tier_configs()
+    policy, direct, failover, ids, slots, _ = populated_tier(rng, cfgs)
+    B = 85
+    q_ids = rng.choice(np.concatenate([ids, np.arange(B) + 10 ** 6]), B)
+    q_slots = jnp.asarray(rng.integers(0, len(cfgs), B), jnp.int32)
+    k = keys_of(q_ids)
+    now = 90_000  # model 10 (1 min TTL) expired, others still fresh
+
+    got_d, got_f = C.lookup_dual_multi(direct, failover, policy, q_slots,
+                                       k, now, backend=backend)
+    slots_np = np.asarray(q_slots)
+    for m, cfg in enumerate(cfgs):
+        sel = np.flatnonzero(slots_np == m)
+        sub = Key64(hi=k.hi[sel], lo=k.lo[sel])
+        want_d = C.lookup(direct.model_view(m, cfg.n_buckets), sub, now,
+                          cfg.cache_ttl_ms)
+        want_f = C.lookup(failover.model_view(
+            m, cfg.resolved_failover_n_buckets()), sub, now,
+            cfg.failover_ttl_ms)
+        for got, want in [(got_d, want_d), (got_f, want_f)]:
+            np.testing.assert_array_equal(np.asarray(got.hit)[sel], want.hit)
+            np.testing.assert_array_equal(np.asarray(got.values)[sel],
+                                          want.values)
+            np.testing.assert_array_equal(np.asarray(got.age_ms)[sel],
+                                          want.age_ms)
+    # per-model TTLs actually differentiate: the 1-min model lost its
+    # entries at now=90s while the 5-min model kept them
+    hit = np.asarray(got_d.hit)
+    assert not hit[slots_np == 0].any()
+    assert hit[slots_np == 1].any()
+
+
+def test_single_launch_for_whole_registry(rng):
+    """A mixed-model batch across 4 models costs EXACTLY ONE kernel launch
+    (the dual_multi fused probe) — not one per model, not separate
+    direct/failover probes."""
+    cfgs = tier_configs()
+    policy, direct, failover, ids, _, _ = populated_tier(rng, cfgs)
+    B = 48
+    slots = jnp.asarray(np.arange(B) % len(cfgs), jnp.int32)
+    k = keys_of(rng.choice(ids, B))
+    before = dict(pk.LAUNCHES)
+    C.lookup_dual_multi(direct, failover, policy, slots, k, 30_000,
+                        backend="pallas")
+    assert pk.LAUNCHES["dual_multi"] == before["dual_multi"] + 1
+    assert pk.LAUNCHES["dual"] == before["dual"]
+    assert pk.LAUNCHES["tiled"] == before["tiled"]
+    assert pk.LAUNCHES["perquery"] == before["perquery"]
+
+
+def test_per_model_capacity_masks(rng):
+    """Models address only their own configured bucket range: a model with
+    16 buckets inside a 64-bucket stack never writes beyond row 15."""
+    cfgs = tier_configs()
+    policy, direct, failover, _, _, _ = populated_tier(rng, cfgs, n=200)
+    m = 2                                     # n_buckets=16; stack is 64
+    beyond = np.asarray(direct.key_hi[m, cfgs[m].n_buckets:])
+    assert (beyond == int(EMPTY_HI)).all()
+    within = np.asarray(direct.key_hi[m, :cfgs[m].n_buckets])
+    assert (within != int(EMPTY_HI)).any()
+
+
+# ------------------------------------------------------------- insert parity
+def test_insert_dual_multi_matches_per_model_inserts(rng):
+    """One shared mixed-model plan == independent per-model inserts with
+    each model's own TTLs and eviction policy, bit for bit."""
+    cfgs = tier_configs()
+    policy = C.policy_from_configs(cfgs)
+    direct = C.init_multi_cache([c.n_buckets for c in cfgs], 4, DIM)
+    failover = C.init_multi_cache(
+        [c.resolved_failover_n_buckets() for c in cfgs], 4, DIM)
+    n = 70
+    ids = rng.integers(0, 30, n)
+    slots = jnp.asarray(rng.integers(0, len(cfgs), n), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal((n, DIM)), jnp.float32)
+    mask = jnp.asarray(rng.uniform(size=n) < 0.9)
+    ts = jnp.asarray(rng.integers(0, MIN, n), jnp.int32)
+    k = keys_of(ids)
+
+    got_d, got_f = C.insert_dual_multi(direct, failover, policy, slots, k,
+                                       vals, MIN, write_mask=mask, ts_ms=ts)
+    slots_np = np.asarray(slots)
+    for m, cfg in enumerate(cfgs):
+        sel = np.flatnonzero(slots_np == m)
+        sub = Key64(hi=k.hi[sel], lo=k.lo[sel])
+        lru = cfg.eviction == "lru"
+        want_d = C.insert(direct.model_view(m, cfg.n_buckets), sub,
+                          vals[sel], MIN, cfg.cache_ttl_ms,
+                          write_mask=mask[sel], ts_ms=ts[sel],
+                          evict_lru=lru)
+        want_f = C.insert(failover.model_view(
+            m, cfg.resolved_failover_n_buckets()), sub, vals[sel], MIN,
+            cfg.failover_ttl_ms, write_mask=mask[sel], ts_ms=ts[sel],
+            evict_lru=lru)
+        for got, want in [
+                (got_d.model_view(m, cfg.n_buckets), want_d),
+                (got_f.model_view(m, cfg.resolved_failover_n_buckets()),
+                 want_f)]:
+            np.testing.assert_array_equal(got.key_hi, want.key_hi)
+            np.testing.assert_array_equal(got.key_lo, want.key_lo)
+            np.testing.assert_array_equal(got.write_ts, want.write_ts)
+            np.testing.assert_array_equal(got.values, want.values)
+
+
+def test_same_user_two_models_both_written():
+    """The model-salted dedupe: one user's record buffered for TWO models
+    is NOT collapsed — each model's slab gets its copy."""
+    cfgs = tier_configs()
+    policy = C.policy_from_configs(cfgs)
+    direct = C.init_multi_cache([c.n_buckets for c in cfgs], 4, DIM)
+    failover = C.init_multi_cache(
+        [c.resolved_failover_n_buckets() for c in cfgs], 4, DIM)
+    k = keys_of([7, 7])                       # same user twice
+    slots = jnp.asarray([0, 1], jnp.int32)    # two different models
+    vals = jnp.asarray([[1.0] * DIM, [2.0] * DIM], jnp.float32)
+    d2, f2 = C.insert_dual_multi(direct, failover, policy, slots, k, vals, 0)
+    r, _ = C.lookup_dual_multi(d2, f2, policy, slots, k, 0)
+    assert bool(r.hit.all())
+    np.testing.assert_allclose(np.asarray(r.values)[0], 1.0)
+    np.testing.assert_allclose(np.asarray(r.values)[1], 2.0)
+
+
+# ------------------------------------------------------ eviction-policy switch
+def test_choose_way_lru_vs_ttl_mechanism():
+    """The switch mechanism at the plan level: with an expired-but-NEWER
+    way next to a live-but-OLDER way, TTL-priority sacrifices the expired
+    way while LRU-timestamp sacrifices the oldest. (Reachable once any
+    non-monotone expiry source exists — e.g. access-bumped recency; see
+    the invariant test below for why write-ts recency alone stays
+    monotone.)"""
+    match = jnp.zeros((1, 2), bool)
+    empty = jnp.zeros((1, 2), bool)
+    ts = jnp.asarray([[10, 50]], jnp.int32)       # way0 older, way1 newer
+    expired = jnp.asarray([[False, True]])        # ...but way1 is expired
+    rank = jnp.zeros((1,), jnp.int32)
+    way_ttl = C._choose_way(match, empty, expired, ts, rank, lru=False)
+    way_lru = C._choose_way(match, empty, expired, ts, rank, lru=True)
+    assert int(way_ttl[0]) == 1                   # expired-first
+    assert int(way_lru[0]) == 0                   # oldest-first
+    # per-query switch: one row TTL-priority, one row LRU
+    lru_vec = jnp.asarray([False, True])
+    both = C._choose_way(jnp.tile(match, (2, 1)), jnp.tile(empty, (2, 1)),
+                         jnp.tile(expired, (2, 1)), jnp.tile(ts, (2, 1)),
+                         jnp.zeros((2,), jnp.int32), lru=lru_vec)
+    np.testing.assert_array_equal(np.asarray(both), [1, 0])
+
+
+def test_lru_equals_ttl_under_uniform_write_recency(rng):
+    """The DESIGN.md §5 invariant: with recency == write timestamp and one
+    TTL per bucket, expiry is monotone in ts (expired ⇔ ts < now - ttl),
+    so both policies rank victims identically — randomized lock so any
+    future recency change (access bumping) must revisit this consciously."""
+    for _ in range(5):
+        state = C.init_cache(4, 2, 2)
+        ids = rng.integers(0, 12, 10)
+        t = 0
+        for _step in range(4):
+            vals = jnp.asarray(rng.standard_normal((10, 2)), jnp.float32)
+            t += int(rng.integers(10_000, 40_000))
+            s_ttl = C.insert(state, keys_of(ids), vals, t, MIN,
+                             evict_lru=False)
+            s_lru = C.insert(state, keys_of(ids), vals, t, MIN,
+                             evict_lru=True)
+            np.testing.assert_array_equal(s_ttl.key_hi, s_lru.key_hi)
+            np.testing.assert_array_equal(s_ttl.write_ts, s_lru.write_ts)
+            state = s_ttl
+            ids = rng.integers(0, 12, 10)
+
+
+# --------------------------------------------------------- server end-to-end
+def make_multi_server(backend, miss_budget=32):
+    cfgs = tier_configs()
+    srv = S.MultiModelServer(cfgs=cfgs, tower_fn=lambda p, f: f @ p,
+                             miss_budget=miss_budget, backend=backend)
+    return srv, S.init_multi_server_state(cfgs, writebuf_capacity=256), \
+        jnp.eye(DIM)
+
+
+def feats_of(ids):
+    return jnp.asarray(np.asarray(ids)[:, None] * np.ones(DIM), jnp.float32)
+
+
+def test_multi_server_cold_warm_expiry_cycle():
+    """Cold serve computes, flush populates every model's slab, warm serve
+    hits, and per-model TTLs expire independently (the 1-min model falls
+    back to its failover while the 5-min model still direct-hits)."""
+    srv, state, params = make_multi_server("jnp")
+    B = 24
+    ids = np.arange(B)
+    slots = jnp.asarray(np.arange(B) % 4, jnp.int32)
+    k = keys_of(ids)
+    r1 = srv.serve_step(params, state, slots, k, feats_of(ids), 0)
+    assert int(r1.stats["direct_hits"]) == 0
+    assert int(r1.stats["tower_inferences"]) == B
+    state = srv.flush(r1.state, 0)
+    r2 = srv.serve_step(params, state, slots, k, feats_of(ids), 1000)
+    assert int(r2.stats["direct_hits"]) == B
+    np.testing.assert_array_equal(np.asarray(r2.stats["per_model_requests"]),
+                                  [6, 6, 6, 6])
+    np.testing.assert_array_equal(
+        np.asarray(r2.stats["per_model_direct_hits"]), [6, 6, 6, 6])
+    # at t = 90s only model 0 (TTL 1 min) has expired; its requests fail
+    # over (failover TTL 10 min), everyone else still direct-hits
+    fail = jnp.ones((B,), bool)               # suppress recompute
+    r3 = srv.serve_step(params, state, slots, k, feats_of(ids), 90_000,
+                        failure_mask=fail)
+    pm_hits = np.asarray(r3.stats["per_model_direct_hits"])
+    pm_fo = np.asarray(r3.stats["per_model_failover_hits"])
+    np.testing.assert_array_equal(pm_hits, [0, 6, 6, 6])
+    np.testing.assert_array_equal(pm_fo, [6, 0, 0, 0])
+    np.testing.assert_allclose(r3.embeddings, feats_of(ids))
+
+
+@pytest.mark.parametrize("t", [1000, 90_000])
+def test_multi_server_backend_parity(t):
+    """jnp and pallas backends produce identical embeddings / provenance /
+    stats through the full serve sequence."""
+    results = {}
+    B = 24
+    ids = np.arange(B)
+    slots = jnp.asarray(np.arange(B) % 4, jnp.int32)
+    k = keys_of(ids)
+    for backend in ("jnp", "pallas"):
+        srv, state, params = make_multi_server(backend)
+        r1 = srv.serve_step(params, state, slots, k, feats_of(ids), 0)
+        state = srv.flush(r1.state, 0)
+        r2 = srv.serve_step(params, state, slots, k, feats_of(ids), t)
+        results[backend] = (r1, r2)
+    for a, b in zip(results["jnp"], results["pallas"]):
+        np.testing.assert_array_equal(a.embeddings, b.embeddings)
+        np.testing.assert_array_equal(a.source, b.source)
+        np.testing.assert_array_equal(a.age_ms, b.age_ms)
+        for key in a.stats:
+            np.testing.assert_allclose(np.asarray(a.stats[key]),
+                                       np.asarray(b.stats[key]))
+
+
+def test_multi_serve_step_single_probe_launch():
+    """MultiModelServer.serve_step on the pallas backend issues EXACTLY ONE
+    probe launch for the whole 4-model registry."""
+    srv, state, params = make_multi_server("pallas")
+    ids = np.arange(16)
+    slots = jnp.asarray(np.arange(16) % 4, jnp.int32)
+    before = dict(pk.LAUNCHES)
+    srv.serve_step(params, state, slots, keys_of(ids), feats_of(ids), 0)
+    assert pk.LAUNCHES["dual_multi"] == before["dual_multi"] + 1
+    assert pk.LAUNCHES["dual"] == before["dual"]
+    assert pk.LAUNCHES["tiled"] == before["tiled"]
+
+
+def test_multi_jit_donation_move_pattern():
+    """jit_serve_step / jit_flush donate MultiServerState; the move pattern
+    keeps working across steps."""
+    srv, state, params = make_multi_server("jnp")
+    ids = np.arange(16)
+    slots = jnp.asarray(np.arange(16) % 4, jnp.int32)
+    res = srv.jit_serve_step(params, state, slots, keys_of(ids),
+                             feats_of(ids), 0)
+    assert state.writebuf.count.is_deleted()          # donated
+    state = srv.jit_flush(res.state, 0)
+    res2 = srv.jit_serve_step(params, state, slots, keys_of(ids),
+                              feats_of(ids), 1000)
+    assert int(res2.stats["direct_hits"]) == 16
+
+
+def test_writebuf_model_tags_round_trip(rng):
+    """append stores model slots alongside records (compacted like keys)
+    and flush_dual_multi resets the ring."""
+    cfgs = tier_configs()
+    policy = C.policy_from_configs(cfgs)
+    direct = C.init_multi_cache([c.n_buckets for c in cfgs], 4, DIM)
+    failover = C.init_multi_cache(
+        [c.resolved_failover_n_buckets() for c in cfgs], 4, DIM)
+    buf = wb_lib.init_writebuf(32, DIM)
+    ids = np.arange(8)
+    slots = jnp.asarray([0, 1, 2, 3, 0, 1, 2, 3], jnp.int32)
+    mask = jnp.asarray([True, True, False, True, True, True, True, False])
+    vals = jnp.asarray(rng.standard_normal((8, DIM)), jnp.float32)
+    buf = wb_lib.append(buf, keys_of(ids), vals, 1000, mask=mask,
+                        model_ids=slots)
+    live_slots = np.asarray(slots)[np.asarray(mask)]
+    np.testing.assert_array_equal(np.asarray(buf.model_id[:6]), live_slots)
+    d2, f2, buf2 = wb_lib.flush_dual_multi(buf, direct, failover, policy,
+                                           2000)
+    assert int(buf2.count) == 0
+    r, _ = C.lookup_dual_multi(
+        d2, f2, policy, slots, keys_of(ids), 2000)
+    np.testing.assert_array_equal(np.asarray(r.hit), np.asarray(mask))
+
+
+def test_multi_server_backend_resolves_from_configs():
+    """Leaving backend unset adopts the configs' backend (a pallas-built
+    registry is never silently served on the jnp path); disagreeing
+    configs demand an explicit choice."""
+    import dataclasses as dc
+    cfgs = tuple(dc.replace(c, backend="pallas") for c in tier_configs())
+    srv = S.MultiModelServer(cfgs=cfgs, tower_fn=lambda p, f: f @ p,
+                             miss_budget=8)
+    assert srv.backend == "pallas"
+    mixed = (cfgs[0], dc.replace(cfgs[1], backend="jnp")) + cfgs[2:]
+    with pytest.raises(ValueError):
+        S.MultiModelServer(cfgs=mixed, tower_fn=lambda p, f: f @ p,
+                           miss_budget=8)
+    srv2 = S.MultiModelServer(cfgs=mixed, tower_fn=lambda p, f: f @ p,
+                              miss_budget=8, backend="jnp")
+    assert srv2.backend == "jnp"
+
+
+def test_registry_tier_configs_shape():
+    """multi_model_tier_configs: every Table 2/3 model, ordered by id, one
+    value_dim, retrieval stage double-capacity, second stage LRU."""
+    cfgs = multi_model_tier_configs(value_dim=16, n_buckets=1 << 6)
+    assert [c.model_id for c in cfgs] == list(range(10, 18))
+    assert all(c.value_dim == 16 for c in cfgs)
+    by_id = {c.model_id: c for c in cfgs}
+    assert by_id[10].n_buckets == 2 * by_id[12].n_buckets   # retrieval 2x
+    assert by_id[16].eviction == "lru" and by_id[17].eviction == "lru"
+    assert by_id[10].eviction == "ttl"

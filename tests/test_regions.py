@@ -1,0 +1,111 @@
+"""Regional layers (paper §3.6–3.7): token-bucket rate limiter + sticky
+router drain behavior — the previously untested reliability pieces
+(DESIGN.md §6)."""
+import numpy as np
+
+from repro.core.ratelimit import RegionalRateLimiter, TokenBucket
+from repro.core.regions import RegionRouter
+
+
+# ------------------------------------------------------------- TokenBucket
+def test_token_bucket_starts_full_and_caps_at_burst():
+    tb = TokenBucket(rate_per_s=100.0, burst=50.0)
+    assert tb.tokens == 50.0                     # full at t=0
+    # a long idle period must not accumulate beyond the burst cap
+    assert tb.admit(now_ms=60_000, n=200) == 50
+    assert tb.admit(now_ms=60_000, n=1) == 0     # drained
+
+
+def test_token_bucket_refills_at_rate():
+    tb = TokenBucket(rate_per_s=100.0, burst=100.0)
+    assert tb.admit(now_ms=0, n=100) == 100      # drain the burst
+    # 250 ms at 100/s → 25 tokens back
+    assert tb.admit(now_ms=250, n=100) == 25
+    # no time passes → nothing more
+    assert tb.admit(now_ms=250, n=10) == 0
+    # another second refills to the burst cap at most
+    assert tb.admit(now_ms=1250, n=1000) == 100
+
+
+def test_token_bucket_partial_admission_and_counters():
+    """A spike is trimmed, not rejected wholesale, and both sides of the
+    split are accounted."""
+    tb = TokenBucket(rate_per_s=10.0, burst=30.0)
+    got = tb.admit(now_ms=0, n=100)
+    assert got == 30                             # burst's worth admitted
+    assert tb.admitted == 30
+    assert tb.rejected == 70
+    got2 = tb.admit(now_ms=2000, n=5)            # 20 tokens refilled
+    assert got2 == 5
+    assert tb.admitted == 35 and tb.rejected == 70
+
+
+def test_token_bucket_time_never_runs_backwards():
+    """Out-of-order timestamps (multi-source streams) must not mint
+    tokens."""
+    tb = TokenBucket(rate_per_s=100.0, burst=100.0)
+    tb.admit(now_ms=5000, n=100)                 # drained at t=5s
+    assert tb.admit(now_ms=1000, n=50) == 0      # stale event: no refill
+    assert tb.last_ms == 5000
+
+
+def test_regional_rate_limiter_uniform_isolated_buckets():
+    lim = RegionalRateLimiter.uniform(regions=range(3), rate_per_s=10.0,
+                                      burst_s=1.0)
+    assert lim.admit(0, 0, 10) == 10
+    assert lim.admit(0, 0, 1) == 0               # region 0 drained…
+    assert lim.admit(1, 0, 10) == 10             # …region 1 unaffected
+    stats = lim.stats()
+    assert stats[0] == (10, 1)
+    assert stats[1] == (10, 0)
+    assert stats[2] == (0, 0)
+
+
+# ------------------------------------------------------------- RegionRouter
+def test_router_sticky_home_region():
+    """With locality=1.0 a user's requests always land in one region."""
+    r = RegionRouter(n_regions=5, locality=1.0, seed=0)
+    homes = {uid: r.route(uid) for uid in range(50)}
+    for _ in range(5):
+        for uid in range(50):
+            assert r.route(uid) == homes[uid]
+
+
+def test_router_drain_moves_users_and_redistributes():
+    """Draining a region re-homes its users on next request, never routes
+    to the drained region, and spreads its load over the survivors."""
+    r = RegionRouter(n_regions=4, locality=1.0, seed=1)
+    users = list(range(200))
+    homes = {uid: r.route(uid) for uid in users}
+    drained = max(set(homes.values()),
+                  key=lambda reg: sum(h == reg for h in homes.values()))
+    moved = [uid for uid in users if homes[uid] == drained]
+    assert moved                                  # it had users
+    r.drain(drained)
+    new_homes = {uid: r.route(uid) for uid in users}
+    assert all(reg != drained for reg in new_homes.values())
+    # users whose home survived keep it (sticky through others' drain)
+    for uid in users:
+        if homes[uid] != drained:
+            assert new_homes[uid] == homes[uid]
+    # displaced users spread over ALL surviving regions, not one
+    landing = {new_homes[uid] for uid in moved}
+    assert len(landing) > 1
+    # undrain: the region becomes routable again for NEW users, but the
+    # moved users stay re-homed (lazy re-homing, no flap-back)
+    r.undrain(drained)
+    for uid in moved:
+        assert r.route(uid) == new_homes[uid]
+
+
+def test_router_excursions_do_not_move_home():
+    """locality < 1: cross-region excursions happen but the home sticks
+    (the paper's "most of the time" routing)."""
+    r = RegionRouter(n_regions=3, locality=0.7, seed=2)
+    uid = 42
+    r.route(uid)                                 # establishes the home
+    home = r._home[uid]
+    seen = [r.route(uid) for _ in range(300)]
+    assert seen.count(home) > 150                # majority at home
+    assert len(set(seen)) > 1                    # excursions exist
+    assert r._home[uid] == home                  # home never moved
