@@ -1,0 +1,111 @@
+"""Eviction-policy payoff: access-bumped LRU vs TTL-priority under re-access.
+
+The §3.3 policy switch is only worth its plumbing if the two victim orders
+produce different hit rates on a realistic stream. This bench drives the
+REAL serve path (serve_step → touch buffer → flush, jnp backend) with a
+Zipf re-access workload at capacity pressure ≥ 1 (distinct keys ≥ cache
+slots) and a TTL far beyond the horizon, so entries never expire and the
+arms isolate pure victim-order behavior:
+
+* **ttl** — TTL-priority: with nothing expired, victims are oldest-WRITE.
+  Hot keys are written once and then only ever read (no read-refresh,
+  paper §3.2), so their write age grows until the policy evicts them.
+* **lru** — LRU-timestamp over ``max(write_ts, last_access_ts)``: every
+  hit's deferred touch keeps hot keys young, so eviction lands on the
+  Zipf tail instead.
+
+Steady-state direct hit rate is measured over the second half of the
+rounds. Writes ``BENCH_eviction.json`` (schema ``ercache-bench-evict/1``)
+with the per-pressure LRU/TTL gap — the trajectory file for this axis.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import server as S
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64
+
+DIM = 16
+ZIPF_A = 1.2
+HOUR_MS = 3_600_000
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_eviction.json")
+
+
+def _tower(params, feats):
+    return feats @ params
+
+
+def _steady_hit_rate(eviction: str, n_buckets: int, ways: int,
+                     pressure: float, batch: int, rounds: int,
+                     seed: int = 0) -> float:
+    """Serve `rounds` Zipf batches end to end; hit rate of the last half."""
+    n_keys = max(int(n_buckets * ways * pressure), 1)
+    cfg = CacheConfig(model_id=1, model_type="ctr", n_buckets=n_buckets,
+                      ways=ways, value_dim=DIM, cache_ttl_ms=HOUR_MS,
+                      failover_ttl_ms=2 * HOUR_MS, eviction=eviction)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=_tower,
+                                  miss_budget=batch)
+    state = S.init_server_state(cfg, writebuf_capacity=2 * batch)
+    params = jnp.eye(DIM, dtype=jnp.float32)
+    rng = np.random.default_rng(seed)
+    hits = reqs = 0
+    for r in range(rounds):
+        ids = rng.zipf(ZIPF_A, size=batch).astype(np.int64) % n_keys
+        keys = Key64.from_int(ids)
+        feats = jnp.asarray(rng.standard_normal((batch, DIM)), jnp.float32)
+        t = r * 2000
+        res = srv.jit_serve_step(params, state, keys, feats, t)
+        state = res.state
+        if r >= rounds // 2:
+            hits += int(res.stats["direct_hits"])
+            reqs += int(res.stats["requests"])
+        state = srv.jit_flush(state, t)
+    return hits / max(reqs, 1)
+
+
+def run(report):
+    quick = getattr(common, "QUICK", False)
+    n_buckets = 64 if quick else 256
+    ways = 4
+    batch = 256 if quick else 512
+    rounds = 16 if quick else 32
+    pressures = [2.0] if quick else [1.0, 2.0, 4.0]
+
+    per_pressure = {}
+    for p in pressures:
+        h_ttl = _steady_hit_rate("ttl", n_buckets, ways, p, batch, rounds)
+        h_lru = _steady_hit_rate("lru", n_buckets, ways, p, batch, rounds)
+        gap = h_lru - h_ttl
+        per_pressure[str(p)] = {
+            "hit_rate_ttl": round(h_ttl, 4),
+            "hit_rate_lru": round(h_lru, 4),
+            "lru_gap": round(gap, 4),
+        }
+        report.add(f"eviction_lru_vs_ttl_p{p:g}", 0.0,
+                   f"lru={h_lru:.4f}_ttl={h_ttl:.4f}_gap={gap:+.4f}")
+
+    metrics = {
+        "schema": "ercache-bench-evict/1",
+        "quick": quick,
+        "zipf_a": ZIPF_A,
+        "n_buckets": n_buckets,
+        "ways": ways,
+        "capacity": n_buckets * ways,
+        "batch": batch,
+        "rounds": rounds,
+        "per_pressure": per_pressure,
+    }
+    if getattr(common, "WRITE_JSON", True):
+        with open(JSON_PATH, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        print(f"# wrote {JSON_PATH}")
+    # BENCH_eviction.json is this axis's single source of truth (same
+    # rationale as bench_multi_model): don't duplicate into BENCH_serve.json.
+    return None

@@ -53,10 +53,11 @@ def run(report):
 
     # parity gate first: tiled == core.cache.lookup, bit for bit
     want = C.lookup(state, k, 1000, TTL_MS)
-    hit, vals, age = pk.cache_probe_tiled(*args)
+    hit, vals, age, way = pk.cache_probe_tiled(*args)
     np.testing.assert_array_equal(hit, want.hit)
     np.testing.assert_array_equal(vals, want.values)
     np.testing.assert_array_equal(age, want.age_ms)
+    np.testing.assert_array_equal(way, want.way)
 
     lookup_jit = jax.jit(lambda s, kk: C.lookup(s, kk, 1000, TTL_MS))
     us_ref = common.time_us(lookup_jit, state, k)

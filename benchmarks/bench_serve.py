@@ -53,8 +53,8 @@ def run(report):
     failover = C.init_cache(n_buckets, 8, DIM)
 
     def two_flushes(bf, d, f):
-        d2, bf2 = wb_lib.flush(bf, d, 2000, MIN)
-        f2, _ = wb_lib.flush(bf, f, 2000, 60 * MIN)
+        d2, bf2, _ = wb_lib.flush(bf, d, 2000, MIN)
+        f2, _, _ = wb_lib.flush(bf, f, 2000, 60 * MIN)
         return d2, f2, bf2
 
     flush_dual_jit = jax.jit(lambda bf, d, f: wb_lib.flush_dual(

@@ -32,10 +32,11 @@ BENCHES = [
     ("kernel_probe", "benchmarks.bench_kernel_probe"),
     ("serve_path", "benchmarks.bench_serve"),
     ("multi_model", "benchmarks.bench_multi_model"),
+    ("eviction", "benchmarks.bench_eviction"),
 ]
 
 # the fast, serve-path-focused subset run by CI (--quick with no --only)
-QUICK_BENCHES = ("kernel_probe", "serve_path", "multi_model")
+QUICK_BENCHES = ("kernel_probe", "serve_path", "multi_model", "eviction")
 
 
 def main() -> None:
@@ -87,8 +88,9 @@ def main() -> None:
     report.print_csv(header=True)
     # Only (re)write the serve-metrics file when the serve-path benches
     # actually ran — a partial `--only fig6` iteration must not clobber the
-    # tracked BENCH_serve.json with an empty one. (bench_multi_model owns
-    # its separate BENCH_multi_model.json and writes it itself.)
+    # tracked BENCH_serve.json with an empty one. (bench_multi_model and
+    # bench_eviction own BENCH_multi_model.json / BENCH_eviction.json and
+    # write them themselves.)
     if args.json and any(b in metrics["benches"]
                          for b in ("kernel_probe", "serve_path")):
         with open(args.json, "w") as f:

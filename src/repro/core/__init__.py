@@ -7,7 +7,8 @@ Public surface:
   server       — CachedEmbeddingServer (direct → miss-budget tower → failover)
                  and MultiModelServer (one dispatch for the whole registry)
   combiner     — grouped update combination across models × stages (Fig. 5)
-  writebuf     — asynchronous write buffer (§3.5), model-tagged records
+  writebuf     — asynchronous write + touch buffers (§3.5), model-tagged
+                 records, deferred last-access recency bumps
   ratelimit    — regional token buckets (§3.7)
   regions      — 13-region sticky routing + drain-test harness (§3.6, Fig. 10)
   metrics      — hit rate / fallback rate / power savings / NE
@@ -15,7 +16,7 @@ Public surface:
 from repro.core.cache import (CacheState, LookupResult, ModelPolicy,
                               MultiCacheState, init_cache, init_multi_cache,
                               insert, insert_dual_multi, lookup,
-                              lookup_dual_multi, policy_from_configs)
+                              lookup_dual_multi, policy_from_configs, touch)
 from repro.core.config import (CacheConfig, CacheConfigRegistry, StageConfig,
                                multi_model_tier_configs,
                                paper_production_configs)
@@ -28,7 +29,7 @@ from repro.core.server import (CachedEmbeddingServer, MultiModelServer,
                                SRC_FALLBACK)
 
 __all__ = [
-    "CacheState", "LookupResult", "init_cache", "insert", "lookup",
+    "CacheState", "LookupResult", "init_cache", "insert", "lookup", "touch",
     "MultiCacheState", "ModelPolicy", "init_multi_cache",
     "insert_dual_multi", "lookup_dual_multi", "policy_from_configs",
     "CacheConfig", "CacheConfigRegistry", "StageConfig", "Key64",

@@ -12,7 +12,10 @@ suitable for jit / pjit:
     key to match AND ``now - write_ts <= ttl``; inserts pick, within the
     bucket:  key-match > empty > expired > oldest.
   * No read-refresh: per the paper (§3.2, "Cache update"), entries are only
-    written when fresh embeddings come back from model inference.
+    written when fresh embeddings come back from model inference. Reads DO
+    feed a separate ``last_access_ts`` recency plane (bumped off the
+    critical path via the touch buffer, :func:`touch`) that the
+    LRU-timestamp eviction policy ranks on — validity stays write-ts-based.
 
 Timestamps are int32 milliseconds from the simulation epoch. Keys are 64-bit
 (hi, lo) int32 pairs (see hashing.py).
@@ -41,6 +44,11 @@ class CacheState(NamedTuple):
     key_lo: jnp.ndarray    # (n_buckets, ways) int32
     write_ts: jnp.ndarray  # (n_buckets, ways) int32, ms
     values: jnp.ndarray    # (n_buckets, ways, dim)
+    # Last-access recency plane: max(read timestamps) per slot, bumped off
+    # the critical path via the touch buffer (writebuf.TouchBuffer). Writes
+    # reset it to the write ts; TS_EMPTY until then. Only the LRU-timestamp
+    # eviction policy reads it (recency = max(write_ts, last_access_ts)).
+    last_access_ts: jnp.ndarray  # (n_buckets, ways) int32, ms
 
     @property
     def n_buckets(self) -> int:
@@ -68,6 +76,12 @@ class LookupResult(NamedTuple):
     hit: jnp.ndarray     # (B,) bool — key present AND within TTL
     values: jnp.ndarray  # (B, dim) — cached value where hit, zeros otherwise
     age_ms: jnp.ndarray  # (B,) int32 — now - write_ts where hit, -1 otherwise
+    # Hit coordinates: the probed bucket and the hit way (-1 on miss).
+    # serve_step scatters these into the touch buffer so the flush can bump
+    # last_access_ts off the critical path. Optional (None) only for legacy
+    # producers that never feed an LRU plane (e.g. the grouped combiner).
+    bucket: Optional[jnp.ndarray] = None  # (B,) int32 — probed bucket
+    way: Optional[jnp.ndarray] = None     # (B,) int32 — hit way, -1 on miss
 
 
 def init_cache(n_buckets: int, ways: int, dim: int,
@@ -80,6 +94,7 @@ def init_cache(n_buckets: int, ways: int, dim: int,
         key_lo=jnp.full(shape, EMPTY_LO, dtype=jnp.int32),
         write_ts=jnp.full(shape, TS_EMPTY, dtype=jnp.int32),
         values=jnp.zeros(shape + (dim,), dtype=dtype),
+        last_access_ts=jnp.full(shape, TS_EMPTY, dtype=jnp.int32),
     )
 
 
@@ -127,10 +142,11 @@ def lookup(state: CacheState, keys: Key64, now_ms, ttl_ms,
                              "kernel: use lookup_dual_multi")
         if buckets is None:
             buckets = bucket_index(keys, state.n_buckets)
-        hit, vals, age = probe_kernels.cache_probe_tiled(
+        hit, vals, age, way = probe_kernels.cache_probe_tiled(
             state.key_hi, state.key_lo, state.write_ts, state.values,
             keys.hi, keys.lo, buckets, now_ms, ttl_ms)
-        return LookupResult(hit=hit, values=vals, age_ms=age)
+        return LookupResult(hit=hit, values=vals, age_ms=age,
+                            bucket=buckets, way=way)
     if backend != "jnp":
         raise ValueError(f"unknown cache backend: {backend!r}")
     now_ms = jnp.int32(now_ms)
@@ -146,7 +162,9 @@ def lookup(state: CacheState, keys: Key64, now_ms, ttl_ms,
     vals = jnp.where(hit[:, None], vals, jnp.zeros_like(vals))
     age = jnp.where(hit, now_ms - ts[jnp.arange(keys.hi.shape[0]), way],
                     jnp.int32(-1))
-    return LookupResult(hit=hit, values=vals, age_ms=age)
+    return LookupResult(hit=hit, values=vals, age_ms=age, bucket=bucket,
+                        way=jnp.where(hit, way.astype(jnp.int32),
+                                      jnp.int32(-1)))
 
 
 def lookup_dual(direct: CacheState, failover: CacheState, keys: Key64,
@@ -163,13 +181,15 @@ def lookup_dual(direct: CacheState, failover: CacheState, keys: Key64,
 
         b_d = bucket_index(keys, direct.n_buckets)
         b_f = bucket_index(keys, failover.n_buckets)
-        (hd, vd, ad), (hf, vf, af) = probe_kernels.cache_probe_dual(
+        (hd, vd, ad, wd), (hf, vf, af, wf) = probe_kernels.cache_probe_dual(
             direct.key_hi, direct.key_lo, direct.write_ts, direct.values,
             failover.key_hi, failover.key_lo, failover.write_ts,
             failover.values, keys.hi, keys.lo, b_d, b_f,
             now_ms, direct_ttl_ms, failover_ttl_ms)
-        return (LookupResult(hit=hd, values=vd, age_ms=ad),
-                LookupResult(hit=hf, values=vf, age_ms=af))
+        return (LookupResult(hit=hd, values=vd, age_ms=ad, bucket=b_d,
+                             way=wd),
+                LookupResult(hit=hf, values=vf, age_ms=af, bucket=b_f,
+                             way=wf))
     return (lookup(direct, keys, now_ms, direct_ttl_ms, backend=backend),
             lookup(failover, keys, now_ms, failover_ttl_ms, backend=backend))
 
@@ -226,7 +246,8 @@ def _bucket_rank(bucket: jnp.ndarray, winner: jnp.ndarray,
     return jnp.zeros((B,), jnp.int32).at[order].set(rank_sorted)
 
 
-def _choose_way(match, empty, expired, ts, rank, lru=None) -> jnp.ndarray:
+def _choose_way(match, empty, expired, ts, rank, lru=None,
+                recency=None) -> jnp.ndarray:
     """(B, W) probe results + (B,) rank → (B,) way. Sort-free.
 
     Eviction order is lexicographic (priority, ts, way). Two policies
@@ -234,14 +255,18 @@ def _choose_way(match, empty, expired, ts, rank, lru=None) -> jnp.ndarray:
 
     * **TTL-priority** (default): empty(0) > expired(1) > live(2) — an
       expired slot is always sacrificed before a live one, however old.
+      Ranks on the WRITE timestamp (expiry is write-age).
     * **LRU-timestamp** (``lru`` True): empty(0) > everything-else(2) —
-      the oldest write goes first regardless of TTL state.
+      the least-recently-USED slot goes first regardless of TTL state.
+      Ranks on ``recency`` = max(write_ts, last_access_ts) when given
+      (the access-bumped plane), else falls back to the write timestamp.
 
     ``lru`` may be a scalar bool or a per-query (B,) vector (mixed-model
-    batches carry each model's policy). Instead of argsorting each bucket
-    row twice, compute each way's position in the eviction order with
-    O(W²) vectorized comparisons (W is 4–8: 16–64 lanes), then one-hot
-    select the way whose position equals the insert rank.
+    batches carry each model's policy) — rows rank on their own policy's
+    timestamp. Instead of argsorting each bucket row twice, compute each
+    way's position in the eviction order with O(W²) vectorized comparisons
+    (W is 4–8: 16–64 lanes), then one-hot select the way whose position
+    equals the insert rank.
     """
     W = ts.shape[-1]
     prio_ttl = jnp.where(empty, 0, jnp.where(expired, 1, 2))
@@ -252,6 +277,9 @@ def _choose_way(match, empty, expired, ts, rank, lru=None) -> jnp.ndarray:
         lru_b = lru[:, None] if lru.ndim == 1 else lru
         prio_lru = jnp.where(empty, 0, 2)
         priority = jnp.where(lru_b, prio_lru, prio_ttl).astype(jnp.int32)
+        if recency is not None:
+            # LRU rows rank on access-bumped recency; TTL rows keep write_ts
+            ts = jnp.where(lru_b, recency, ts)
     w_idx = jnp.arange(W, dtype=jnp.int32)
     # rank_ts[b, w] = #{w' : (ts[b, w'], w') < (ts[b, w], w)} — the rank of
     # each way's timestamp within its row, way index as tie-break.
@@ -322,7 +350,9 @@ def plan_insert(state: CacheState, keys: Key64, now_ms, ttl_ms,
             else jnp.ones((B,), bool))
     winner = _dedupe(keys, live, salt=dedupe_salt)
     rank = _bucket_rank(bucket, winner, state.n_buckets)
-    way = _choose_way(match, empty, expired, ts, rank, lru=evict_lru)
+    recency = jnp.maximum(ts, state.last_access_ts[bucket])
+    way = _choose_way(match, empty, expired, ts, rank, lru=evict_lru,
+                      recency=recency)
     winner = _resolve_collisions(winner, bucket, way, state.n_buckets,
                                  state.ways)
     return winner, bucket, way
@@ -331,7 +361,9 @@ def plan_insert(state: CacheState, keys: Key64, now_ms, ttl_ms,
 def _scatter_insert(state: CacheState, keys: Key64, values, ts_vec,
                     winner, bucket, way) -> CacheState:
     """Apply a resolved insert plan. mode='drop': losers get an
-    out-of-range bucket."""
+    out-of-range bucket. A write resets the slot's last_access_ts to the
+    write timestamp — stale touch coordinates from a previous occupant
+    must never boost the new entry's recency."""
     b_w = jnp.where(winner, bucket, jnp.int32(state.n_buckets))
     return CacheState(
         key_hi=state.key_hi.at[b_w, way].set(keys.hi, mode="drop"),
@@ -339,6 +371,8 @@ def _scatter_insert(state: CacheState, keys: Key64, values, ts_vec,
         write_ts=state.write_ts.at[b_w, way].set(ts_vec, mode="drop"),
         values=state.values.at[b_w, way].set(
             values.astype(state.values.dtype), mode="drop"),
+        last_access_ts=state.last_access_ts.at[b_w, way].set(ts_vec,
+                                                             mode="drop"),
     )
 
 
@@ -375,6 +409,33 @@ def insert(state: CacheState, keys: Key64, values: jnp.ndarray,
                            winner, bucket, way)
 
 
+def touch(state: CacheState, bucket, way, ts_ms,
+          live: Optional[jnp.ndarray] = None) -> CacheState:
+    """Bump ``last_access_ts`` at hit coordinates — ONE scatter-max.
+
+    ``bucket``/``way`` are (B,) hit coordinates from :class:`LookupResult`
+    (``way`` < 0 marks a miss and is skipped, as are ``live=False`` rows
+    and bucket sentinels ≥ n_buckets via mode='drop'). ``ts_ms`` is a
+    scalar or (B,) access-timestamp vector.
+
+    Scatter-MAX (not set) makes the bump order irrelevant: however touches
+    are batched, buffered, or reordered before the flush applies them, a
+    slot ends up with the latest access time it ever served. Values, keys,
+    and write_ts are untouched — there is no read-refresh (paper §3.2);
+    only the recency plane moves.
+    """
+    B = bucket.shape[0]
+    ts_vec = jnp.broadcast_to(jnp.asarray(ts_ms, jnp.int32), (B,))
+    ok = way >= 0
+    if live is not None:
+        ok = ok & live
+    b_ok = jnp.where(ok, bucket, jnp.int32(state.n_buckets))
+    w_ok = jnp.maximum(way, 0)        # never a wrapped negative index
+    return state._replace(
+        last_access_ts=state.last_access_ts.at[b_ok, w_ok].max(
+            ts_vec, mode="drop"))
+
+
 def insert_dual(direct: CacheState, failover: CacheState, keys: Key64,
                 values: jnp.ndarray, now_ms, direct_ttl_ms, failover_ttl_ms,
                 write_mask: Optional[jnp.ndarray] = None,
@@ -409,7 +470,9 @@ def insert_dual(direct: CacheState, failover: CacheState, keys: Key64,
     rank_d = _bucket_rank(b_d, winner, direct.n_buckets)
     expired_d = (~empty_d) & ((now_ms - ts_d) > _ttl_cols(direct_ttl_ms))
     way_d = _choose_way(match_d, empty_d, expired_d, ts_d, rank_d,
-                        lru=evict_lru)
+                        lru=evict_lru,
+                        recency=jnp.maximum(ts_d,
+                                            direct.last_access_ts[b_d]))
     win_d = _resolve_collisions(winner, b_d, way_d, direct.n_buckets,
                                 direct.ways)
     new_direct = _scatter_insert(direct, keys, values, ts_vec,
@@ -427,7 +490,9 @@ def insert_dual(direct: CacheState, failover: CacheState, keys: Key64,
         rank_f = _bucket_rank(b_f, winner, failover.n_buckets)
     expired_f = (~empty_f) & ((now_ms - ts_f) > _ttl_cols(failover_ttl_ms))
     way_f = _choose_way(match_f, empty_f, expired_f, ts_f, rank_f,
-                        lru=evict_lru)
+                        lru=evict_lru,
+                        recency=jnp.maximum(ts_f,
+                                            failover.last_access_ts[b_f]))
     win_f = _resolve_collisions(winner, b_f, way_f, failover.n_buckets,
                                 failover.ways)
     new_failover = _scatter_insert(failover, keys, values, ts_vec,
@@ -461,6 +526,7 @@ class ModelPolicy(NamedTuple):
     evict_lru: jnp.ndarray         # (M,) bool — True: LRU-timestamp policy
     bucket_mask_d: jnp.ndarray     # (M,) int32 — direct n_buckets[m] - 1
     bucket_mask_f: jnp.ndarray     # (M,) int32 — failover n_buckets[m] - 1
+    touch: jnp.ndarray             # (M,) bool — record last-access bumps
 
     @property
     def n_models(self) -> int:
@@ -493,6 +559,7 @@ def policy_from_configs(cfgs) -> ModelPolicy:
         evict_lru=jnp.asarray([c.eviction == "lru" for c in cfgs], bool),
         bucket_mask_d=mask_d,
         bucket_mask_f=mask_f,
+        touch=jnp.asarray([c.resolved_touch() for c in cfgs], bool),
     )
 
 
@@ -510,6 +577,7 @@ class MultiCacheState(NamedTuple):
     key_lo: jnp.ndarray    # (M, n_buckets, ways) int32
     write_ts: jnp.ndarray  # (M, n_buckets, ways) int32, ms
     values: jnp.ndarray    # (M, n_buckets, ways, dim)
+    last_access_ts: jnp.ndarray  # (M, n_buckets, ways) int32, ms
 
     @property
     def n_models(self) -> int:
@@ -537,6 +605,7 @@ class MultiCacheState(NamedTuple):
             key_lo=self.key_lo.reshape(M * Nb, W),
             write_ts=self.write_ts.reshape(M * Nb, W),
             values=self.values.reshape(M * Nb, W, self.values.shape[-1]),
+            last_access_ts=self.last_access_ts.reshape(M * Nb, W),
         )
 
     def with_flat(self, flat: CacheState) -> "MultiCacheState":
@@ -547,6 +616,7 @@ class MultiCacheState(NamedTuple):
             key_lo=flat.key_lo.reshape(M, Nb, W),
             write_ts=flat.write_ts.reshape(M, Nb, W),
             values=flat.values.reshape(M, Nb, W, self.values.shape[-1]),
+            last_access_ts=flat.last_access_ts.reshape(M, Nb, W),
         )
 
     def model_view(self, slot: int, n_buckets: Optional[int] = None
@@ -561,6 +631,7 @@ class MultiCacheState(NamedTuple):
             key_lo=self.key_lo[slot, :nb],
             write_ts=self.write_ts[slot, :nb],
             values=self.values[slot, :nb],
+            last_access_ts=self.last_access_ts[slot, :nb],
         )
 
 
@@ -578,6 +649,7 @@ def init_multi_cache(n_buckets: Sequence[int], ways: int, dim: int,
         key_lo=jnp.full(shape, EMPTY_LO, dtype=jnp.int32),
         write_ts=jnp.full(shape, TS_EMPTY, dtype=jnp.int32),
         values=jnp.zeros(shape + (dim,), dtype=dtype),
+        last_access_ts=jnp.full(shape, TS_EMPTY, dtype=jnp.int32),
     )
 
 
@@ -632,12 +704,15 @@ def lookup_dual_multi(direct: MultiCacheState, failover: MultiCacheState,
         from repro.kernels import cache_probe as probe_kernels
 
         fd, ff = direct.flat(), failover.flat()
-        (hd, vd, ad), (hf, vf, af) = probe_kernels.cache_probe_dual_multi(
+        ((hd, vd, ad, wd),
+         (hf, vf, af, wf)) = probe_kernels.cache_probe_dual_multi(
             fd.key_hi, fd.key_lo, fd.write_ts, fd.values,
             ff.key_hi, ff.key_lo, ff.write_ts, ff.values,
             keys.hi, keys.lo, slots, b_d, b_f, policy.table(), now_ms)
-        return (LookupResult(hit=hd, values=vd, age_ms=ad),
-                LookupResult(hit=hf, values=vf, age_ms=af))
+        return (LookupResult(hit=hd, values=vd, age_ms=ad, bucket=b_d,
+                             way=wd),
+                LookupResult(hit=hf, values=vf, age_ms=af, bucket=b_f,
+                             way=wf))
     if backend != "jnp":
         raise ValueError(f"unknown cache backend: {backend!r}")
     return (lookup(direct.flat(), keys, now_ms, policy.ttl_ms[slots],

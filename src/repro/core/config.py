@@ -39,14 +39,22 @@ class CacheConfig:
     # "pallas" (tiled fused probe kernels — DESIGN.md §4).
     backend: str = "jnp"
     # Eviction policy (paper §3.3): "ttl" — TTL-priority (empty > expired >
-    # oldest, the paper's default) or "lru" — LRU-timestamp (empty > oldest
-    # regardless of expiry). Selectable per model in the multi-model tier.
+    # oldest, the paper's default) or "lru" — LRU-timestamp (empty > least-
+    # recently-used). Selectable per model in the multi-model tier.
     eviction: str = "ttl"
+    # Record last-access bumps for this model's hits (the touch buffer →
+    # last_access_ts recency plane). None resolves to (eviction == "lru"):
+    # LRU models need access recency to be LRU at all; TTL-priority models
+    # never rank on it, so recording touches for them is pure overhead.
+    touch: Optional[bool] = None
 
     def __post_init__(self) -> None:
         if self.eviction not in ("ttl", "lru"):
             raise ValueError(
                 f"eviction must be 'ttl' or 'lru', got {self.eviction!r}")
+
+    def resolved_touch(self) -> bool:
+        return (self.eviction == "lru") if self.touch is None else self.touch
 
     def resolved_failover_n_buckets(self) -> int:
         return (self.n_buckets if self.failover_n_buckets is None

@@ -17,6 +17,9 @@ Per serve batch:
      paper's fallback-rate metric.
   4. **Cache update** — computed embeddings are appended to the async write
      buffer (one combined record per user; flushed off the critical path).
+     Hits append their (bucket, way) coordinates to the TOUCH buffer the
+     same way; the flush scatter-maxes them into the last_access_ts
+     recency plane that LRU eviction ranks on (DESIGN.md §3.1).
 
 Every request's provenance is reported (DIRECT/COMPUTED/FAILOVER/FALLBACK) so
 the serving tier can account Tables 2–3 mechanically.
@@ -35,7 +38,7 @@ from repro.core import writebuf as wb_lib
 from repro.core.cache import CacheState
 from repro.core.config import CacheConfig
 from repro.core.hashing import Key64
-from repro.core.writebuf import WriteBuffer
+from repro.core.writebuf import TouchBuffer, WriteBuffer
 
 # Provenance codes (per request)
 SRC_DIRECT = 0
@@ -48,6 +51,7 @@ class ServerState(NamedTuple):
     direct: CacheState
     failover: CacheState
     writebuf: WriteBuffer
+    touchbuf: TouchBuffer
 
 
 class ServeResult(NamedTuple):
@@ -59,10 +63,15 @@ class ServeResult(NamedTuple):
 
 
 def init_server_state(cfg: CacheConfig, dtype=jnp.float32,
-                      writebuf_capacity: int = 4096) -> ServerState:
-    """Allocate both caches + the write buffer. The failover cache is sized
-    from its OWN config knobs (paper §4.4 gives it different capacity/TTL
-    than the direct tier); unset knobs fall back to the direct sizing."""
+                      writebuf_capacity: int = 4096,
+                      touchbuf_capacity: Optional[int] = None) -> ServerState:
+    """Allocate both caches + the write and touch buffers. The failover
+    cache is sized from its OWN config knobs (paper §4.4 gives it different
+    capacity/TTL than the direct tier); unset knobs fall back to the direct
+    sizing. The touch buffer (hit coordinates awaiting last-access bumps)
+    defaults to the write buffer's capacity."""
+    if touchbuf_capacity is None:
+        touchbuf_capacity = writebuf_capacity
     return ServerState(
         direct=cache_lib.init_cache(cfg.n_buckets, cfg.ways, cfg.value_dim,
                                     dtype),
@@ -70,6 +79,7 @@ def init_server_state(cfg: CacheConfig, dtype=jnp.float32,
                                       cfg.resolved_failover_ways(),
                                       cfg.value_dim, dtype),
         writebuf=wb_lib.init_writebuf(writebuf_capacity, cfg.value_dim, dtype),
+        touchbuf=wb_lib.init_touchbuf(touchbuf_capacity),
     )
 
 
@@ -137,10 +147,13 @@ def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
         "failover_hits": jnp.sum(use_fo.astype(jnp.int32)),
         "fallbacks": jnp.sum(fallback.astype(jnp.int32)),
         # float32 accumulation: int32 would wrap on a batch of
-        # hour-scale failover ages (2e3 rows x 7.2e6 ms > 2^31)
-        "mean_age_ms": jnp.sum(jnp.where(age > 0, age, 0)
+        # hour-scale failover ages (2e3 rows x 7.2e6 ms > 2^31).
+        # age >= 0: a hit written and read in the same millisecond is a
+        # legitimate age-0 serve and must count in both numerator and
+        # denominator (misses carry age -1 and stay excluded).
+        "mean_age_ms": jnp.sum(jnp.where(age >= 0, age, 0)
                                .astype(jnp.float32)) /
-            jnp.maximum(jnp.sum((age > 0).astype(jnp.int32)), 1),
+            jnp.maximum(jnp.sum((age >= 0).astype(jnp.int32)), 1),
     }
     if model_slots is not None:
         # per-model (M,) breakdowns for Table-1-style accounting
@@ -186,6 +199,13 @@ class CachedEmbeddingServer:
             state.direct, state.failover, keys, now_ms, cfg.cache_ttl_ms,
             cfg.failover_ttl_ms, backend=cfg.backend)
 
+        # (1b) record hit coordinates for the deferred last-access bump —
+        # an O(B) ring scatter, never a cache-table write on this path.
+        # Statically skipped when the config doesn't track recency.
+        new_tb = state.touchbuf
+        if cfg.resolved_touch():
+            new_tb = wb_lib.touch_append(new_tb, direct, fo, now_ms)
+
         # (2)–(4): shared serve tail
         emb, source, age, new_wb, stats = _serve_tail(
             self.tower_fn, self.miss_budget, self.fallback_value, params,
@@ -194,20 +214,22 @@ class CachedEmbeddingServer:
         return ServeResult(
             embeddings=emb, source=source, age_ms=age,
             state=ServerState(direct=state.direct, failover=state.failover,
-                              writebuf=new_wb),
+                              writebuf=new_wb, touchbuf=new_tb),
             stats=stats)
 
     # ----------------------------------------------------------------- flush
     def flush(self, state: ServerState, now_ms) -> ServerState:
         """Apply the async write buffer to BOTH caches (same embeddings, the
         failover simply keeps them valid longer — paper §4.4) with ONE
-        shared insert plan (wb_lib.flush_dual). Runs off the serving
-        critical path."""
-        direct, failover, wb1 = wb_lib.flush_dual(
+        shared insert plan (wb_lib.flush_dual), bumping the recency planes
+        from the touch buffer first. Runs off the serving critical path."""
+        tb = state.touchbuf if self.cfg.resolved_touch() else None
+        direct, failover, wb1, tb1 = wb_lib.flush_dual(
             state.writebuf, state.direct, state.failover, now_ms,
             self.cfg.cache_ttl_ms, self.cfg.failover_ttl_ms,
-            evict_lru=self.cfg.eviction == "lru")
-        return ServerState(direct=direct, failover=failover, writebuf=wb1)
+            evict_lru=self.cfg.eviction == "lru", touchbuf=tb)
+        return ServerState(direct=direct, failover=failover, writebuf=wb1,
+                           touchbuf=state.touchbuf if tb1 is None else tb1)
 
     # ------------------------------------------------------------------ jit
     # ServerState is DONATED: the caches pass through serve_step unchanged
@@ -229,10 +251,12 @@ class MultiServerState(NamedTuple):
     direct: cache_lib.MultiCacheState     # stacked per-model direct tables
     failover: cache_lib.MultiCacheState   # stacked per-model failover tables
     writebuf: WriteBuffer                 # shared ring, records model-tagged
+    touchbuf: TouchBuffer                 # shared ring of POOLED hit coords
 
 
 def init_multi_server_state(cfgs: Sequence[CacheConfig], dtype=jnp.float32,
-                            writebuf_capacity: int = 4096
+                            writebuf_capacity: int = 4096,
+                            touchbuf_capacity: Optional[int] = None
                             ) -> MultiServerState:
     """Allocate the stacked tier for an ordered model registry.
 
@@ -246,6 +270,8 @@ def init_multi_server_state(cfgs: Sequence[CacheConfig], dtype=jnp.float32,
     dim = dims.pop()
     ways_d = max(c.ways for c in cfgs)
     ways_f = max(c.resolved_failover_ways() for c in cfgs)
+    if touchbuf_capacity is None:
+        touchbuf_capacity = writebuf_capacity
     return MultiServerState(
         direct=cache_lib.init_multi_cache(
             [c.n_buckets for c in cfgs], ways_d, dim, dtype),
@@ -253,6 +279,7 @@ def init_multi_server_state(cfgs: Sequence[CacheConfig], dtype=jnp.float32,
             [c.resolved_failover_n_buckets() for c in cfgs], ways_f, dim,
             dtype),
         writebuf=wb_lib.init_writebuf(writebuf_capacity, dim, dtype),
+        touchbuf=wb_lib.init_touchbuf(touchbuf_capacity),
     )
 
 
@@ -295,6 +322,10 @@ class MultiModelServer:
         # the first jit trace would cache trace-bound tracers (leak).
         object.__setattr__(self, "_policy",
                            cache_lib.policy_from_configs(self.cfgs))
+        # Static python-level gate: skip touch plumbing entirely when no
+        # model in the registry tracks access recency.
+        object.__setattr__(self, "_any_touch",
+                           any(c.resolved_touch() for c in self.cfgs))
 
     @property
     def policy(self) -> cache_lib.ModelPolicy:
@@ -325,6 +356,13 @@ class MultiModelServer:
             state.direct, state.failover, self.policy, slots, keys, now_ms,
             backend=self.backend)
 
+        # (1b) buffer hit coordinates (POOLED bucket indices) for deferred
+        # last-access bumps, gated by each query's per-model touch policy.
+        new_tb = state.touchbuf
+        if self._any_touch:
+            new_tb = wb_lib.touch_append(new_tb, direct, fo, now_ms,
+                                         mask=self.policy.touch[slots])
+
         # (2)–(4): shared serve tail, with model-tagged buffer records
         emb, source, age, new_wb, stats = _serve_tail(
             self.tower_fn, self.miss_budget, self.fallback_value, params,
@@ -334,19 +372,23 @@ class MultiModelServer:
             embeddings=emb, source=source, age_ms=age,
             state=MultiServerState(direct=state.direct,
                                    failover=state.failover,
-                                   writebuf=new_wb),
+                                   writebuf=new_wb, touchbuf=new_tb),
             stats=stats)
 
     # ----------------------------------------------------------------- flush
     def flush(self, state: MultiServerState, now_ms) -> MultiServerState:
         """Apply the mixed-model write buffer to both stacked tiers with
         ONE shared insert plan; each record under its model's TTL and
-        eviction policy. Off the serving critical path."""
-        direct, failover, wb1 = wb_lib.flush_dual_multi(
+        eviction policy, after the touch buffer's recency bumps. Off the
+        serving critical path."""
+        tb = state.touchbuf if self._any_touch else None
+        direct, failover, wb1, tb1 = wb_lib.flush_dual_multi(
             state.writebuf, state.direct, state.failover, self.policy,
-            now_ms)
+            now_ms, touchbuf=tb)
         return MultiServerState(direct=direct, failover=failover,
-                                writebuf=wb1)
+                                writebuf=wb1,
+                                touchbuf=state.touchbuf if tb1 is None
+                                else tb1)
 
     # ------------------------------------------------------------------ jit
     # Same donation contract as CachedEmbeddingServer: MultiServerState is

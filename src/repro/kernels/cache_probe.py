@@ -3,8 +3,10 @@
 Three kernels share one contract (``ref.cache_probe_ref`` /
 ``core.cache.lookup``): for each query key, load its set-associative bucket
 (keys, write timestamps, value rows), do the key-compare + TTL check, and
-emit (hit, value, age) — the cache table never leaves HBM except for the
-probed buckets (DESIGN.md §4).
+emit (hit, value, age, way) — the hit way (-1 on miss) is the coordinate
+the serve path feeds the touch buffer for deferred last-access bumps — and
+the cache table never leaves HBM except for the probed buckets
+(DESIGN.md §4).
 
 * ``cache_probe_tiled`` (the default, exported as ``cache_probe``): processes
   a ``tile_q``-query tile per grid step.  Bucket indices are scalar-prefetched
@@ -16,7 +18,9 @@ probed buckets (DESIGN.md §4).
   so ``serve_step`` does not pay two full-batch kernel dispatches.
 * ``cache_probe_perquery``: the original one-query-per-grid-step kernel
   (``grid=(B,)``, blocks gathered via BlockSpec index_map).  Kept as the
-  dispatch-overhead baseline for ``benchmarks/bench_kernel_probe.py``.
+  dispatch-overhead baseline for ``benchmarks/bench_kernel_probe.py`` —
+  it is NOT on the serve path and keeps the legacy 3-output
+  (hit, value, age) contract, no way coordinate.
 
 ``interpret`` resolves automatically from the active JAX backend (compiled
 on TPU, interpreter elsewhere); ``REPRO_FORCE_INTERPRET=0/1`` overrides.
@@ -65,7 +69,9 @@ def _pick_tile(batch: int, tile_q) -> int:
 
 def _probe_tile(now, ttl, qhi, qlo, khi, klo, ts, vals, out_dtype):
     """Vectorized probe math over a (TQ, W[, D]) tile. Pure jnp — shared by
-    the tiled and dual kernel bodies."""
+    the tiled and dual kernel bodies. Returns (hit, value, age, way) — the
+    hit way (-1 on miss) is the coordinate the serve path feeds the touch
+    buffer for deferred last-access bumps."""
     match = (khi == qhi[:, None]) & (klo == qlo[:, None])
     fresh = (now - ts) <= ttl
     valid = match & fresh
@@ -74,8 +80,12 @@ def _probe_tile(now, ttl, qhi, qlo, khi, klo, ts, vals, out_dtype):
     first = valid & (jnp.cumsum(valid.astype(jnp.int32), axis=-1) == 1)
     val = jnp.sum(jnp.where(first[:, :, None], vals, 0.0), axis=1)
     age = jnp.sum(jnp.where(first, now - ts, 0), axis=-1)
+    # TPU needs ≥2D iota: broadcasted over the (TQ, W) tile, one-hot summed
+    w_iota = jax.lax.broadcasted_iota(jnp.int32, first.shape, 1)
+    way = jnp.sum(jnp.where(first, w_iota, 0), axis=-1)
     return (hit.astype(jnp.int32), val.astype(out_dtype),
-            jnp.where(hit, age, jnp.int32(-1)))
+            jnp.where(hit, age, jnp.int32(-1)),
+            jnp.where(hit, way, jnp.int32(-1)))
 
 
 def _table_dmas(bucket, tables, scratches, sems, sem_base: int, j):
@@ -109,7 +119,7 @@ def _make_tiled_kernel(tq: int):
     def kernel(bucket_ref, scalars_ref,                 # scalar prefetch
                qhi_ref, qlo_ref,                        # (TQ,) VMEM blocks
                khi_hbm, klo_hbm, ts_hbm, val_hbm,       # full tables, ANY/HBM
-               hit_ref, out_ref, age_ref,               # (TQ,) / (TQ, D) out
+               hit_ref, out_ref, age_ref, way_ref,      # (TQ,) / (TQ, D) out
                khi_s, klo_s, ts_s, val_s, sems):        # scratch + DMA sems
         t = pl.program_id(0)
         now = scalars_ref[0]
@@ -123,12 +133,13 @@ def _make_tiled_kernel(tq: int):
 
         _start_then_drain(tq, dmas)
 
-        hit, val, age = _probe_tile(now, ttl, qhi_ref[:], qlo_ref[:],
-                                    khi_s[:], klo_s[:], ts_s[:], val_s[:],
-                                    out_ref.dtype)
+        hit, val, age, way = _probe_tile(now, ttl, qhi_ref[:], qlo_ref[:],
+                                         khi_s[:], klo_s[:], ts_s[:],
+                                         val_s[:], out_ref.dtype)
         hit_ref[:] = hit
         out_ref[:] = val
         age_ref[:] = age
+        way_ref[:] = way
 
     return kernel
 
@@ -163,6 +174,7 @@ def _cache_probe_tiled(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
             pl.BlockSpec((tq,), lambda t, b, s: (t,)),
             pl.BlockSpec((tq, D), lambda t, b, s: (t, 0)),
             pl.BlockSpec((tq,), lambda t, b, s: (t,)),
+            pl.BlockSpec((tq,), lambda t, b, s: (t,)),
         ],
         scratch_shapes=[
             pltpu.VMEM((tq, W), jnp.int32),
@@ -172,17 +184,18 @@ def _cache_probe_tiled(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
             pltpu.SemaphoreType.DMA((4, tq)),
         ],
     )
-    hit, out, age = pl.pallas_call(
+    hit, out, age, way = pl.pallas_call(
         _make_tiled_kernel(tq),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((Bp,), jnp.int32),
             jax.ShapeDtypeStruct((Bp, D), values.dtype),
             jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
         ],
         interpret=interpret,
     )(buckets, scalars, q_hi, q_lo, key_hi, key_lo, write_ts, values)
-    return hit[:B].astype(bool), out[:B], age[:B]
+    return hit[:B].astype(bool), out[:B], age[:B], way[:B]
 
 
 def cache_probe_tiled(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
@@ -190,7 +203,8 @@ def cache_probe_tiled(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
     """Tiled Pallas cache probe. Same contract as ref.cache_probe_ref.
 
     key_hi/key_lo/write_ts: (Nb, W) int32; values: (Nb, W, D);
-    q_hi/q_lo/buckets: (B,). Returns (hit (B,) bool, value (B, D), age (B,)).
+    q_hi/q_lo/buckets: (B,). Returns (hit (B,) bool, value (B, D),
+    age (B,), way (B,) int32 — the hit way, -1 on miss).
     Batch sizes that are not a multiple of ``tile_q`` are padded internally.
     """
     LAUNCHES["tiled"] += 1
@@ -215,8 +229,8 @@ def _make_dual_kernel(tq: int):
                qhi_ref, qlo_ref,
                dkhi, dklo, dts, dval,                    # direct tables (ANY)
                fkhi, fklo, fts, fval,                    # failover tables (ANY)
-               hit_d_ref, out_d_ref, age_d_ref,
-               hit_f_ref, out_f_ref, age_f_ref,
+               hit_d_ref, out_d_ref, age_d_ref, way_d_ref,
+               hit_f_ref, out_f_ref, age_f_ref, way_f_ref,
                dkhi_s, dklo_s, dts_s, dval_s,
                fkhi_s, fklo_s, fts_s, fval_s, sems):
         t = pl.program_id(0)
@@ -238,18 +252,20 @@ def _make_dual_kernel(tq: int):
 
         qhi = qhi_ref[:]
         qlo = qlo_ref[:]
-        hit, val, age = _probe_tile(now, ttl_d, qhi, qlo, dkhi_s[:],
-                                    dklo_s[:], dts_s[:], dval_s[:],
-                                    out_d_ref.dtype)
+        hit, val, age, way = _probe_tile(now, ttl_d, qhi, qlo, dkhi_s[:],
+                                         dklo_s[:], dts_s[:], dval_s[:],
+                                         out_d_ref.dtype)
         hit_d_ref[:] = hit
         out_d_ref[:] = val
         age_d_ref[:] = age
-        hit, val, age = _probe_tile(now, ttl_f, qhi, qlo, fkhi_s[:],
-                                    fklo_s[:], fts_s[:], fval_s[:],
-                                    out_f_ref.dtype)
+        way_d_ref[:] = way
+        hit, val, age, way = _probe_tile(now, ttl_f, qhi, qlo, fkhi_s[:],
+                                         fklo_s[:], fts_s[:], fval_s[:],
+                                         out_f_ref.dtype)
         hit_f_ref[:] = hit
         out_f_ref[:] = val
         age_f_ref[:] = age
+        way_f_ref[:] = way
 
     return kernel
 
@@ -285,7 +301,9 @@ def _cache_probe_dual(d_key_hi, d_key_lo, d_write_ts, d_values,
             pl.BlockSpec((tq, D), lambda t, bd, bf, s: (t, 0)),
             out1d(),
             out1d(),
+            out1d(),
             pl.BlockSpec((tq, D), lambda t, bd, bf, s: (t, 0)),
+            out1d(),
             out1d(),
         ],
         scratch_shapes=[
@@ -308,16 +326,18 @@ def _cache_probe_dual(d_key_hi, d_key_lo, d_write_ts, d_values,
             jax.ShapeDtypeStruct((Bp, D), d_values.dtype),
             jax.ShapeDtypeStruct((Bp,), jnp.int32),
             jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
             jax.ShapeDtypeStruct((Bp, D), f_values.dtype),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
             jax.ShapeDtypeStruct((Bp,), jnp.int32),
         ],
         interpret=interpret,
     )(buckets_d, buckets_f, scalars, q_hi, q_lo,
       d_key_hi, d_key_lo, d_write_ts, d_values,
       f_key_hi, f_key_lo, f_write_ts, f_values)
-    hit_d, out_d, age_d, hit_f, out_f, age_f = outs
-    return ((hit_d[:B].astype(bool), out_d[:B], age_d[:B]),
-            (hit_f[:B].astype(bool), out_f[:B], age_f[:B]))
+    hit_d, out_d, age_d, way_d, hit_f, out_f, age_f, way_f = outs
+    return ((hit_d[:B].astype(bool), out_d[:B], age_d[:B], way_d[:B]),
+            (hit_f[:B].astype(bool), out_f[:B], age_f[:B], way_f[:B]))
 
 
 def cache_probe_dual(d_key_hi, d_key_lo, d_write_ts, d_values,
@@ -327,8 +347,9 @@ def cache_probe_dual(d_key_hi, d_key_lo, d_write_ts, d_values,
                      *, tile_q=None, interpret=None):
     """Probe direct + failover tables for the same queries in ONE launch.
 
-    Returns ((hit_d, value_d, age_d), (hit_f, value_f, age_f)) — each half
-    bit-identical to :func:`cache_probe_tiled` on the respective table.
+    Returns ((hit_d, value_d, age_d, way_d), (hit_f, value_f, age_f,
+    way_f)) — each half bit-identical to :func:`cache_probe_tiled` on the
+    respective table.
     """
     LAUNCHES["dual"] += 1
     return _cache_probe_dual(
@@ -366,8 +387,8 @@ def _make_dual_multi_kernel(tq: int):
                qhi_ref, qlo_ref, slot_ref,                      # (TQ,) blocks
                dkhi, dklo, dts, dval,                    # direct tables (ANY)
                fkhi, fklo, fts, fval,                    # failover tables (ANY)
-               hit_d_ref, out_d_ref, age_d_ref,
-               hit_f_ref, out_f_ref, age_f_ref,
+               hit_d_ref, out_d_ref, age_d_ref, way_d_ref,
+               hit_f_ref, out_f_ref, age_f_ref, way_f_ref,
                dkhi_s, dklo_s, dts_s, dval_s,
                fkhi_s, fklo_s, fts_s, fval_s, sems):
         t = pl.program_id(0)
@@ -388,18 +409,20 @@ def _make_dual_multi_kernel(tq: int):
         qhi = qhi_ref[:]
         qlo = qlo_ref[:]
         ttl_d, ttl_f = _policy_ttls(policy_ref, slot_ref[:])
-        hit, val, age = _probe_tile(now, ttl_d[:, None], qhi, qlo, dkhi_s[:],
-                                    dklo_s[:], dts_s[:], dval_s[:],
-                                    out_d_ref.dtype)
+        hit, val, age, way = _probe_tile(now, ttl_d[:, None], qhi, qlo,
+                                         dkhi_s[:], dklo_s[:], dts_s[:],
+                                         dval_s[:], out_d_ref.dtype)
         hit_d_ref[:] = hit
         out_d_ref[:] = val
         age_d_ref[:] = age
-        hit, val, age = _probe_tile(now, ttl_f[:, None], qhi, qlo, fkhi_s[:],
-                                    fklo_s[:], fts_s[:], fval_s[:],
-                                    out_f_ref.dtype)
+        way_d_ref[:] = way
+        hit, val, age, way = _probe_tile(now, ttl_f[:, None], qhi, qlo,
+                                         fkhi_s[:], fklo_s[:], fts_s[:],
+                                         fval_s[:], out_f_ref.dtype)
         hit_f_ref[:] = hit
         out_f_ref[:] = val
         age_f_ref[:] = age
+        way_f_ref[:] = way
 
     return kernel
 
@@ -435,7 +458,9 @@ def _cache_probe_dual_multi(d_key_hi, d_key_lo, d_write_ts, d_values,
             pl.BlockSpec((tq, D), lambda t, bd, bf, p, s: (t, 0)),
             out1d(),
             out1d(),
+            out1d(),
             pl.BlockSpec((tq, D), lambda t, bd, bf, p, s: (t, 0)),
+            out1d(),
             out1d(),
         ],
         scratch_shapes=[
@@ -458,16 +483,18 @@ def _cache_probe_dual_multi(d_key_hi, d_key_lo, d_write_ts, d_values,
             jax.ShapeDtypeStruct((Bp, D), d_values.dtype),
             jax.ShapeDtypeStruct((Bp,), jnp.int32),
             jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
             jax.ShapeDtypeStruct((Bp, D), f_values.dtype),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
             jax.ShapeDtypeStruct((Bp,), jnp.int32),
         ],
         interpret=interpret,
     )(buckets_d, buckets_f, policy, scalars, q_hi, q_lo, slots,
       d_key_hi, d_key_lo, d_write_ts, d_values,
       f_key_hi, f_key_lo, f_write_ts, f_values)
-    hit_d, out_d, age_d, hit_f, out_f, age_f = outs
-    return ((hit_d[:B].astype(bool), out_d[:B], age_d[:B]),
-            (hit_f[:B].astype(bool), out_f[:B], age_f[:B]))
+    hit_d, out_d, age_d, way_d, hit_f, out_f, age_f, way_f = outs
+    return ((hit_d[:B].astype(bool), out_d[:B], age_d[:B], way_d[:B]),
+            (hit_f[:B].astype(bool), out_f[:B], age_f[:B], way_f[:B]))
 
 
 def cache_probe_dual_multi(d_key_hi, d_key_lo, d_write_ts, d_values,
@@ -482,8 +509,8 @@ def cache_probe_dual_multi(d_key_hi, d_key_lo, d_write_ts, d_values,
     already carry the slot offset (``core.cache.pooled_buckets``), and
     ``policy`` is the (M, 2) int32 [direct_ttl, failover_ttl] table —
     scalar-prefetched so each query's freshness check uses its own model's
-    TTLs. Returns ((hit_d, value_d, age_d), (hit_f, value_f, age_f)),
-    each half bit-identical to a per-model jnp-oracle loop.
+    TTLs. Returns ((hit_d, value_d, age_d, way_d), (hit_f, value_f,
+    age_f, way_f)), each half bit-identical to a per-model jnp-oracle loop.
     """
     LAUNCHES["dual_multi"] += 1
     return _cache_probe_dual_multi(

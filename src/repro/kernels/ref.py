@@ -22,7 +22,7 @@ def cache_probe_ref(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
 
     key_hi/key_lo/write_ts: (Nb, W); values: (Nb, W, D);
     q_hi/q_lo/buckets: (B,). Returns (hit (B,) bool, value (B, D),
-    age (B,) int32 — -1 on miss).
+    age (B,) int32 — -1 on miss, way (B,) int32 — hit way, -1 on miss).
     """
     k_hi = key_hi[buckets]                   # (B, W)
     k_lo = key_lo[buckets]
@@ -36,7 +36,8 @@ def cache_probe_ref(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
     out = jnp.where(hit[:, None], out, 0.0)
     age = jnp.where(hit, jnp.int32(now_ms) - ts[jnp.arange(buckets.shape[0]),
                                                 way], jnp.int32(-1))
-    return hit, out, age
+    return hit, out, age, jnp.where(hit, way.astype(jnp.int32),
+                                    jnp.int32(-1))
 
 
 # ----------------------------------------------------------- embedding bag

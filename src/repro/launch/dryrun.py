@@ -359,12 +359,15 @@ def run_ercache_cell(arch: str = "tinyllama-1.1b", batch: int = 4096,
         direct=type(state_abs.direct)(
             key_hi=P(("data", "model")), key_lo=P(("data", "model")),
             write_ts=P(("data", "model")),
-            values=P(("data", "model"), None, None)),
+            values=P(("data", "model"), None, None),
+            last_access_ts=P(("data", "model"))),
         failover=type(state_abs.failover)(
             key_hi=P(("data", "model")), key_lo=P(("data", "model")),
             write_ts=P(("data", "model")),
-            values=P(("data", "model"), None, None)),
-        writebuf=jax.tree_util.tree_map(lambda _: P(), state_abs.writebuf))
+            values=P(("data", "model"), None, None),
+            last_access_ts=P(("data", "model"))),
+        writebuf=jax.tree_util.tree_map(lambda _: P(), state_abs.writebuf),
+        touchbuf=jax.tree_util.tree_map(lambda _: P(), state_abs.touchbuf))
     keys_abs = Key64(hi=jax.ShapeDtypeStruct((batch,), jnp.int32),
                      lo=jax.ShapeDtypeStruct((batch,), jnp.int32))
     toks_abs = jax.ShapeDtypeStruct((batch, seq), jnp.int32)

@@ -61,16 +61,17 @@ def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
                 ttl_min: float = 5.0, failover_ttl_h: float = 1.0,
                 batch: int = 256, miss_budget_frac: float = 0.75,
                 failure_rate: float = 0.0, use_cache: bool = True,
-                backend: str = "jnp", seed: int = 0, log=print):
+                backend: str = "jnp", eviction: str = "ttl",
+                n_buckets: int = 1 << 14, seed: int = 0, log=print):
     tower_cfg, params, tower_fn, features_of = build_tower(arch)
     cache_cfg = CacheConfig(
         model_id=1, model_type="ctr",
         cache_ttl_ms=int(ttl_min * MINUTE_MS),
         failover_ttl_ms=int(failover_ttl_h * HOUR_MS),
-        n_buckets=1 << 14, ways=8,
+        n_buckets=n_buckets, ways=8,
         value_dim=tower_cfg.user_embed_dim,
         miss_budget_frac=miss_budget_frac,
-        backend=backend)
+        backend=backend, eviction=eviction)
     server = srv_lib.CachedEmbeddingServer(
         cfg=cache_cfg, tower_fn=tower_fn,
         miss_budget=max(int(batch * miss_budget_frac), 1))
@@ -119,7 +120,8 @@ def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
     d["batches"] = n_batches
     d["power_savings_at_0.8_tower_share"] = round(
         power_savings(counters.hit_rate, 0.8), 4)
-    log(f"[serve {arch}] ttl={ttl_min}min cache={'on' if use_cache else 'off'}"
+    log(f"[serve {arch}] ttl={ttl_min}min evict={eviction}"
+        f" cache={'on' if use_cache else 'off'}"
         f" requests={d['requests']} hit_rate={d['hit_rate']:.3f}"
         f" fallback_rate={d['fallback_rate']:.4f}"
         f" tower_inferences={d['tower_inferences']}"
@@ -234,6 +236,10 @@ def main():
                          "multi-model tier (mixed-model batches, one "
                          "dispatch per batch)")
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--eviction", default="ttl", choices=["ttl", "lru"],
+                    help="direct/failover victim order (paper §3.3); lru "
+                         "enables access-recency touches (incompatible "
+                         "with --multi: the registry sets it per model)")
     ap.add_argument("--multi-buckets", type=int, default=1 << 12,
                     help="per-model direct-cache buckets in --multi mode")
     args = ap.parse_args()
@@ -245,6 +251,9 @@ def main():
         if args.ttl_min is not None:
             ap.error("--ttl-min is per-model in --multi mode (see "
                      "docs/model_registry.md); it cannot be overridden")
+        if args.eviction != "ttl":
+            ap.error("--eviction is per-model in --multi mode (registry "
+                     "second-stage models already run lru)")
         run_serving_multi(arch=args.arch, minutes=args.minutes,
                           users=args.users, batch=args.batch,
                           n_buckets=args.multi_buckets,
@@ -255,7 +264,7 @@ def main():
                     ttl_min=5.0 if args.ttl_min is None else args.ttl_min,
                     failure_rate=args.failure_rate,
                     batch=args.batch, use_cache=not args.no_cache,
-                    backend=args.backend)
+                    backend=args.backend, eviction=args.eviction)
 
 
 if __name__ == "__main__":

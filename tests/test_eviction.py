@@ -1,0 +1,327 @@
+"""True LRU: the access-bumped recency plane end to end (ISSUE 3).
+
+What PR 2 proved impossible with write-ts recency — the §3.3 eviction
+switch producing different victims on a reachable state — must now happen:
+a re-accessed-but-old key survives LRU eviction (its touch bumped
+``last_access_ts``) and is evicted under TTL-priority, all the way through
+``serve_step`` → touch buffer → ``flush``. Plus the flush-path policy
+bugfixes that ride along: ``flush`` honoring ``evict_lru``, deterministic
+last-cap-wins ring appends, and the age-0 ``mean_age_ms`` fix.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as C
+from repro.core import server as S
+from repro.core import writebuf as wb_lib
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64
+
+MIN = 60_000
+DIM = 4
+
+
+def keys_of(ids):
+    return Key64.from_int(np.asarray(ids, np.int64))
+
+
+def tower(params, feats):
+    return feats @ params
+
+
+def feats_of(ids):
+    return jnp.asarray(np.asarray(ids)[:, None] * np.ones(DIM), jnp.float32)
+
+
+def key_present(state: C.CacheState, ids) -> np.ndarray:
+    """Membership regardless of TTL state (probe with an infinite budget)."""
+    res = C.lookup(state, keys_of(ids), now_ms=0, ttl_ms=C.INT32_MAX)
+    return np.asarray(res.hit)
+
+
+# ---------------------------------------------------------- recency plane unit
+def test_touch_bumps_only_hit_coordinates():
+    state = C.init_cache(16, 2, DIM)
+    k = keys_of([1, 2, 3])
+    state = C.insert(state, k, jnp.ones((3, DIM)), now_ms=0, ttl_ms=MIN)
+    res = C.lookup(state, keys_of([1, 2, 99]), now_ms=1000, ttl_ms=MIN)
+    state2 = C.touch(state, res.bucket, res.way, 1000, live=res.hit)
+    la, la2 = np.asarray(state.last_access_ts), np.asarray(state2.last_access_ts)
+    assert (la2 == 1000).sum() == 2                   # the two hits
+    # write_ts / values untouched — touches are recency-only, no read-refresh
+    np.testing.assert_array_equal(state2.write_ts, state.write_ts)
+    np.testing.assert_array_equal(state2.values, state.values)
+    # the miss (key 99) bumped nothing
+    np.testing.assert_array_equal(la2 >= la, True)
+
+
+def test_touch_is_scatter_max_order_irrelevant():
+    """Applying bumps in any order (or any batching) gives the same plane."""
+    state = C.init_cache(4, 2, DIM)
+    k = keys_of([5])
+    state = C.insert(state, k, jnp.ones((1, DIM)), now_ms=0, ttl_ms=MIN)
+    res = C.lookup(state, k, now_ms=10, ttl_ms=MIN)
+    a = C.touch(C.touch(state, res.bucket, res.way, 500, res.hit),
+                res.bucket, res.way, 100, res.hit)
+    b = C.touch(C.touch(state, res.bucket, res.way, 100, res.hit),
+                res.bucket, res.way, 500, res.hit)
+    np.testing.assert_array_equal(a.last_access_ts, b.last_access_ts)
+
+
+def test_insert_resets_last_access_of_overwritten_slot():
+    state = C.init_cache(1, 1, DIM)                   # one slot total
+    a, b = keys_of([1]), keys_of([2])
+    state = C.insert(state, a, jnp.ones((1, DIM)), now_ms=0, ttl_ms=MIN)
+    res = C.lookup(state, a, now_ms=40_000, ttl_ms=MIN)
+    state = C.touch(state, res.bucket, res.way, 40_000, res.hit)
+    state = C.insert(state, b, jnp.ones((1, DIM)), now_ms=50_000, ttl_ms=MIN)
+    # b's slot must not inherit a's 40s access bump
+    assert int(state.last_access_ts[0, 0]) == 50_000
+
+
+def test_choose_way_lru_ranks_on_bumped_recency():
+    """Cache-level divergence: A(old write, fresh access) vs B(newer write,
+    no access). TTL-priority evicts expired A; LRU evicts stale B."""
+    def build():
+        state = C.init_cache(1, 2, DIM)
+        state = C.insert(state, keys_of([1]), jnp.ones((1, DIM)),
+                         now_ms=0, ttl_ms=MIN)          # A
+        state = C.insert(state, keys_of([2]), jnp.ones((1, DIM)),
+                         now_ms=30_000, ttl_ms=MIN)     # B
+        res = C.lookup(state, keys_of([1]), now_ms=50_000, ttl_ms=MIN)
+        assert bool(res.hit[0])
+        return C.touch(state, res.bucket, res.way, 50_000, res.hit)
+
+    # t=70s: A expired by write age (70s > 60s) but touched at 50s
+    s_ttl = C.insert(build(), keys_of([3]), jnp.ones((1, DIM)),
+                     now_ms=70_000, ttl_ms=MIN, evict_lru=False)
+    s_lru = C.insert(build(), keys_of([3]), jnp.ones((1, DIM)),
+                     now_ms=70_000, ttl_ms=MIN, evict_lru=True)
+    np.testing.assert_array_equal(key_present(s_ttl, [1, 2, 3]),
+                                  [False, True, True])   # expired A out
+    np.testing.assert_array_equal(key_present(s_lru, [1, 2, 3]),
+                                  [True, False, True])   # LRU keeps hot A
+
+
+# ------------------------------------------------ satellite 1: flush policy
+def test_flush_honors_evict_lru_and_matches_flush_dual():
+    """The single-model flush path must thread evict_lru to the insert plan
+    (it silently ran TTL-priority before) — and agree with flush_dual under
+    BOTH policies, on a state where the two victim orders differ."""
+    def warmed():
+        state = C.init_cache(1, 2, DIM)
+        state = C.insert(state, keys_of([1]), jnp.ones((1, DIM)), 0, MIN)
+        state = C.insert(state, keys_of([2]), jnp.ones((1, DIM)),
+                         30_000, MIN)
+        res = C.lookup(state, keys_of([1]), 50_000, MIN)
+        return C.touch(state, res.bucket, res.way, 50_000, res.hit)
+
+    buf = wb_lib.init_writebuf(8, DIM)
+    buf = wb_lib.append(buf, keys_of([3]), jnp.ones((1, DIM)), 70_000,
+                        mask=jnp.ones((1,), bool))
+    results = {}
+    for lru in (False, True):
+        got, _, _ = wb_lib.flush(buf, warmed(), 70_000, MIN, evict_lru=lru)
+        want = C.insert(warmed(), keys_of([3]), jnp.ones((1, DIM)),
+                        70_000, MIN, ts_ms=jnp.asarray([70_000], jnp.int32),
+                        evict_lru=lru)
+        np.testing.assert_array_equal(got.key_hi, want.key_hi)
+        np.testing.assert_array_equal(got.key_lo, want.key_lo)
+        got_d, _, _, _ = wb_lib.flush_dual(buf, warmed(), warmed(), 70_000,
+                                           MIN, MIN, evict_lru=lru)
+        np.testing.assert_array_equal(got_d.key_hi, got.key_hi)
+        results[lru] = key_present(got, [1, 2, 3])
+    # ...and the policy actually changes the victim on this state
+    np.testing.assert_array_equal(results[False], [False, True, True])
+    np.testing.assert_array_equal(results[True], [True, False, True])
+
+
+# ------------------------------------- satellite 2: ring overflow determinism
+def test_writebuf_append_overflow_keeps_last_cap_records():
+    """One append with more live records than the ring: the LAST `cap`
+    records win deterministically (no duplicate-slot scatter race)."""
+    cap, B = 4, 11
+    buf = wb_lib.init_writebuf(cap, DIM)
+    ids = np.arange(B, dtype=np.int64) + 100
+    vals = jnp.asarray(np.arange(B, dtype=np.float32)[:, None]
+                       * np.ones(DIM, np.float32))
+    buf = wb_lib.append(buf, keys_of(ids), vals, 1000,
+                        mask=jnp.ones((B,), bool))
+    assert int(buf.count) == B
+    state, _, _ = wb_lib.flush(buf, C.init_cache(64, 8, DIM), 1000, MIN)
+    present = key_present(state, ids)
+    np.testing.assert_array_equal(present, np.arange(B) >= B - cap)
+    # bit-identical to appending only the surviving suffix
+    buf2 = wb_lib.init_writebuf(cap, DIM)
+    buf2 = wb_lib.append(buf2, keys_of(ids[-cap:]), vals[-cap:], 1000,
+                         mask=jnp.ones((cap,), bool))
+    state2, _, _ = wb_lib.flush(buf2, C.init_cache(64, 8, DIM), 1000, MIN)
+    np.testing.assert_array_equal(state.key_hi, state2.key_hi)
+    np.testing.assert_array_equal(state.values, state2.values)
+
+
+def test_touchbuf_append_overflow_keeps_last_cap_records():
+    cap, B = 4, 10
+    tb = wb_lib.init_touchbuf(cap)
+    mk = lambda bkt, way, hit: C.LookupResult(
+        hit=jnp.asarray(hit, bool), values=jnp.zeros((B, DIM)),
+        age_ms=jnp.zeros((B,), jnp.int32),
+        bucket=jnp.asarray(bkt, jnp.int32), way=jnp.asarray(way, jnp.int32))
+    hits = np.ones(B, bool)
+    direct = mk(np.arange(B), np.zeros(B, np.int64), hits)
+    fo = mk(np.zeros(B), -np.ones(B, np.int64), np.zeros(B, bool))
+    tb = wb_lib.touch_append(tb, direct, fo, 1000)
+    assert int(tb.count) == B
+    state = C.init_cache(16, 2, DIM)
+    state2, _, tb2 = wb_lib.flush(wb_lib.init_writebuf(4, DIM), state, 1000,
+                                  MIN, touchbuf=tb)
+    assert int(tb2.count) == 0
+    la = np.asarray(state2.last_access_ts)[:, 0]
+    # only the LAST cap coordinates (buckets B-cap..B-1) were bumped
+    np.testing.assert_array_equal(la[:B] == 1000,
+                                  np.arange(B) >= B - cap)
+
+
+def test_touch_append_masks_and_compacts(rng):
+    """Rows hitting neither cache (or masked off per-model) never consume
+    ring slots; failover-only hits still record their failover coords."""
+    B = 6
+    tb = wb_lib.init_touchbuf(16)
+    hit_d = np.asarray([1, 0, 0, 1, 0, 0], bool)
+    hit_f = np.asarray([1, 1, 0, 0, 0, 1], bool)
+    mask = np.asarray([1, 1, 1, 1, 1, 0], bool)       # row 5 policy-gated
+    mk = lambda hits: C.LookupResult(
+        hit=jnp.asarray(hits, bool), values=jnp.zeros((B, DIM)),
+        age_ms=jnp.zeros((B,), jnp.int32),
+        bucket=jnp.asarray(np.arange(B), jnp.int32),
+        way=jnp.where(jnp.asarray(hits), 0, -1).astype(jnp.int32))
+    tb = wb_lib.touch_append(tb, mk(hit_d), mk(hit_f), 777,
+                             mask=jnp.asarray(mask))
+    assert int(tb.count) == 3                         # rows 0, 1, 3
+    bd = np.asarray(tb.bucket_d[:3])
+    bf = np.asarray(tb.bucket_f[:3])
+    np.testing.assert_array_equal(bd, [0, -1, 3])     # d-miss rows are -1
+    np.testing.assert_array_equal(bf, [0, 1, -1])
+
+
+# ------------------------------------------------- satellite 3: age-0 stats
+def test_mean_age_counts_same_millisecond_hits():
+    """A key written and read in the same ms serves with age 0 — it must
+    enter the mean_age_ms average (old code dropped it from numerator
+    count AND denominator, skewing the mean high)."""
+    cfg = CacheConfig(model_id=1, model_type="ctr", n_buckets=64, ways=4,
+                      value_dim=DIM, cache_ttl_ms=5 * MIN)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower, miss_budget=4)
+    state = S.init_server_state(cfg)
+    params = jnp.eye(DIM)
+    r = srv.serve_step(params, state, keys_of([1]), feats_of([1]), 0)
+    state = srv.flush(r.state, 0)
+    r = srv.serve_step(params, state, keys_of([2]), feats_of([2]), 1000)
+    state = srv.flush(r.state, 1000)
+    # both hit at t=1000: ages are 1000 (key 1) and 0 (key 2, same ms)
+    r = srv.serve_step(params, state, keys_of([1, 2]), feats_of([1, 2]),
+                       1000)
+    assert int(r.stats["direct_hits"]) == 2
+    np.testing.assert_array_equal(np.asarray(r.age_ms), [1000, 0])
+    assert float(r.stats["mean_age_ms"]) == pytest.approx(500.0)
+
+
+# --------------------------------------- satellite 4 / tentpole: end to end
+def lru_server(backend, eviction, n_buckets=1, ways=2):
+    cfg = CacheConfig(model_id=1, model_type="ctr", n_buckets=n_buckets,
+                      ways=ways, value_dim=DIM, cache_ttl_ms=MIN,
+                      failover_ttl_ms=60 * MIN, backend=backend,
+                      eviction=eviction)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower, miss_budget=2)
+    return srv, S.init_server_state(cfg, writebuf_capacity=16), jnp.eye(DIM)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("eviction,survivors",
+                         [("ttl", [False, True, True]),
+                          ("lru", [True, False, True])])
+def test_serve_flush_lru_vs_ttl_divergence(backend, eviction, survivors):
+    """The acceptance scenario, through the REAL serve path (serve_step →
+    touch buffer → flush): key A (written at 0, re-accessed at 50s) vs
+    key B (written at 30s, never re-read), capacity pressure from key C
+    at 70s. TTL-priority sacrifices expired-A; LRU keeps the re-accessed
+    key and evicts cold B — on both backends."""
+    srv, state, params = lru_server(backend, eviction)
+    A, B_, C_ = [1], [2], [3]
+    for ids, t in [(A, 0), (B_, 30_000)]:
+        res = srv.serve_step(params, state, keys_of(ids), feats_of(ids), t)
+        state = srv.flush(res.state, t)
+    res = srv.serve_step(params, state, keys_of(A), feats_of(A), 50_000)
+    assert int(res.stats["direct_hits"]) == 1         # the touch source
+    state = srv.flush(res.state, 50_000)              # bump applied here
+    res = srv.serve_step(params, state, keys_of(C_), feats_of(C_), 70_000)
+    state = srv.flush(res.state, 70_000)              # eviction happens here
+    np.testing.assert_array_equal(key_present(state.direct, [1, 2, 3]),
+                                  survivors)
+
+
+def test_multi_model_per_slab_policy_divergence():
+    """Two models, identical sizing, opposite eviction policies, identical
+    request streams: ONE stacked tier serves both, and after the same
+    pressure the LRU slab kept the re-accessed key while the TTL slab
+    evicted it — the per-model switch is now behaviorally distinct."""
+    base = dict(model_type="ctr", n_buckets=1, ways=2, value_dim=DIM,
+                cache_ttl_ms=MIN, failover_ttl_ms=60 * MIN)
+    cfgs = (CacheConfig(model_id=0, eviction="ttl", **base),
+            CacheConfig(model_id=1, eviction="lru", **base))
+    srv = S.MultiModelServer(cfgs=cfgs, tower_fn=tower, miss_budget=4)
+    state = S.init_multi_server_state(cfgs, writebuf_capacity=16)
+    params = jnp.eye(DIM)
+    slots2 = jnp.asarray([0, 1], jnp.int32)
+    for ids, t in [([1, 1], 0), ([2, 2], 30_000)]:
+        res = srv.serve_step(params, state, slots2, keys_of(ids),
+                             feats_of(ids), t)
+        state = srv.flush(res.state, t)
+    res = srv.serve_step(params, state, slots2, keys_of([1, 1]),
+                         feats_of([1, 1]), 50_000)
+    assert int(res.stats["direct_hits"]) == 2
+    state = srv.flush(res.state, 50_000)
+    res = srv.serve_step(params, state, slots2, keys_of([3, 3]),
+                         feats_of([3, 3]), 70_000)
+    state = srv.flush(res.state, 70_000)
+    np.testing.assert_array_equal(
+        key_present(state.direct.model_view(0), [1, 2, 3]),
+        [False, True, True])                          # TTL slab: A evicted
+    np.testing.assert_array_equal(
+        key_present(state.direct.model_view(1), [1, 2, 3]),
+        [True, False, True])                          # LRU slab: A survives
+
+
+def test_touch_disabled_restores_write_ts_lru(rng):
+    """touch=False (or the TTL default) leaves last_access_ts at TS_EMPTY,
+    so LRU degrades to the PR-2 write-ts ranking — the locked equivalence
+    (tests/test_multi_model.py) keeps holding for untouched caches."""
+    cfg = CacheConfig(model_id=1, model_type="ctr", n_buckets=1, ways=2,
+                      value_dim=DIM, cache_ttl_ms=MIN,
+                      failover_ttl_ms=60 * MIN, eviction="lru", touch=False)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower, miss_budget=2)
+    state = S.init_server_state(cfg, writebuf_capacity=16)
+    params = jnp.eye(DIM)
+    for ids, t in [([1], 0), ([2], 30_000)]:
+        res = srv.serve_step(params, state, keys_of(ids), feats_of(ids), t)
+        state = srv.flush(res.state, t)
+    res = srv.serve_step(params, state, keys_of([1]), feats_of([1]), 50_000)
+    state = srv.flush(res.state, 50_000)              # hit, but NOT recorded
+    assert int(state.touchbuf.count) == 0
+    res = srv.serve_step(params, state, keys_of([3]), feats_of([3]), 70_000)
+    state = srv.flush(res.state, 70_000)
+    # without the bump, write-ts LRU evicts A (oldest write) — not B
+    np.testing.assert_array_equal(key_present(state.direct, [1, 2, 3]),
+                                  [False, True, True])
+
+
+def test_config_resolved_touch_defaults():
+    base = dict(model_id=1, model_type="ctr")
+    assert not CacheConfig(**base).resolved_touch()              # ttl → off
+    assert CacheConfig(eviction="lru", **base).resolved_touch()  # lru → on
+    assert CacheConfig(touch=True, **base).resolved_touch()
+    assert not CacheConfig(eviction="lru", touch=False,
+                           **base).resolved_touch()

@@ -101,7 +101,7 @@ def test_writebuf_roundtrip_with_ring_overflow():
         buf = WB.append(buf, Key64.from_int(ids),
                         jnp.full((4, 4), float(i)), ts_ms=i * 100,
                         mask=jnp.ones(4, bool))
-    state, buf = WB.flush(buf, state, now_ms=300, ttl_ms=60_000)
+    state, buf, _ = WB.flush(buf, state, now_ms=300, ttl_ms=60_000)
     assert int(buf.count) == 0
     # newest 8 ids (4..11) survive; 0..3 overwritten
     res = C.lookup(state, Key64.from_int(np.arange(12, dtype=np.int64)),

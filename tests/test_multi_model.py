@@ -87,12 +87,19 @@ def test_mixed_batch_matches_per_model_oracle_loop(backend, rng):
         want_f = C.lookup(failover.model_view(
             m, cfg.resolved_failover_n_buckets()), sub, now,
             cfg.failover_ttl_ms)
-        for got, want in [(got_d, want_d), (got_f, want_f)]:
+        for got, want, stack in [(got_d, want_d, direct),
+                                 (got_f, want_f, failover)]:
             np.testing.assert_array_equal(np.asarray(got.hit)[sel], want.hit)
             np.testing.assert_array_equal(np.asarray(got.values)[sel],
                                           want.values)
             np.testing.assert_array_equal(np.asarray(got.age_ms)[sel],
                                           want.age_ms)
+            # hit coordinates: pooled bucket = slot offset + local bucket,
+            # same way as the per-model oracle (-1 on miss included)
+            np.testing.assert_array_equal(np.asarray(got.way)[sel], want.way)
+            np.testing.assert_array_equal(
+                np.asarray(got.bucket)[sel],
+                m * stack.n_buckets + np.asarray(want.bucket))
     # per-model TTLs actually differentiate: the 1-min model lost its
     # entries at now=90s while the 5-min model kept them
     hit = np.asarray(got_d.hit)
@@ -350,8 +357,8 @@ def test_writebuf_model_tags_round_trip(rng):
                         model_ids=slots)
     live_slots = np.asarray(slots)[np.asarray(mask)]
     np.testing.assert_array_equal(np.asarray(buf.model_id[:6]), live_slots)
-    d2, f2, buf2 = wb_lib.flush_dual_multi(buf, direct, failover, policy,
-                                           2000)
+    d2, f2, buf2, _ = wb_lib.flush_dual_multi(buf, direct, failover, policy,
+                                              2000)
     assert int(buf2.count) == 0
     r, _ = C.lookup_dual_multi(
         d2, f2, policy, slots, keys_of(ids), 2000)

@@ -54,6 +54,12 @@ def assert_lookup_equal(got: C.LookupResult, want: C.LookupResult):
     np.testing.assert_array_equal(got.hit, want.hit)
     np.testing.assert_array_equal(got.values, want.values)  # copies: exact
     np.testing.assert_array_equal(got.age_ms, want.age_ms)
+    # hit coordinates (the touch-buffer feed) must agree bit for bit too
+    if got.bucket is not None and want.bucket is not None:
+        np.testing.assert_array_equal(got.bucket, want.bucket)
+        np.testing.assert_array_equal(got.way, want.way)
+        np.testing.assert_array_equal(np.asarray(got.way) >= 0,
+                                      np.asarray(got.hit))
 
 
 # ------------------------------------------------------------- tiled kernel
@@ -79,10 +85,11 @@ def test_tiled_probe_tile_size_invariance(tile_q, rng):
     k = keys_of(ids)
     b = bucket_index(k, state.n_buckets)
     want = C.lookup(state, k, now_ms=2 * MIN, ttl_ms=MIN)
-    hit, vals, age = pk.cache_probe_tiled(
+    hit, vals, age, way = pk.cache_probe_tiled(
         state.key_hi, state.key_lo, state.write_ts, state.values,
         k.hi, k.lo, b, 2 * MIN, MIN, tile_q=tile_q)
-    assert_lookup_equal(C.LookupResult(hit, vals, age), want)
+    assert_lookup_equal(C.LookupResult(hit, vals, age, bucket=b, way=way),
+                        want)
 
 
 def test_tiled_probe_empty_cache(rng):
@@ -103,7 +110,7 @@ def test_tiled_matches_perquery_kernel(rng):
     args = (state.key_hi, state.key_lo, state.write_ts, state.values,
             k.hi, k.lo, b, 2 * MIN, MIN)
     got = pk.cache_probe_tiled(*args)
-    want = pk.cache_probe_perquery(*args)
+    want = pk.cache_probe_perquery(*args)   # legacy 3-output contract
     np.testing.assert_array_equal(got[0], want[0])
     np.testing.assert_array_equal(got[1], want[1])
     np.testing.assert_array_equal(got[2], want[2])
@@ -167,10 +174,10 @@ def test_flush_dual_matches_two_flushes(rng):
         vals = jnp.asarray(rng.standard_normal((16, DIM)), jnp.float32)
         mask = jnp.asarray(rng.uniform(size=16) < 0.8)
         buf = wb_lib.append(buf, keys_of(ids), vals, t, mask=mask)
-    want_d, _ = wb_lib.flush(buf, direct, 3000, MIN)
-    want_f, _ = wb_lib.flush(buf, failover, 3000, 10 * MIN)
-    got_d, got_f, buf2 = wb_lib.flush_dual(buf, direct, failover, 3000,
-                                           MIN, 10 * MIN)
+    want_d, _, _ = wb_lib.flush(buf, direct, 3000, MIN)
+    want_f, _, _ = wb_lib.flush(buf, failover, 3000, 10 * MIN)
+    got_d, got_f, buf2, _ = wb_lib.flush_dual(buf, direct, failover, 3000,
+                                              MIN, 10 * MIN)
     assert int(buf2.count) == 0
     for got, want in [(got_d, want_d), (got_f, want_f)]:
         np.testing.assert_array_equal(got.key_hi, want.key_hi)
