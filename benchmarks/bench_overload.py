@@ -1,0 +1,160 @@
+"""SLA-aware admission control under overload: does the failover tier
+earn its name?
+
+The paper's failover cache exists for exactly one scenario: inference
+capacity is exhausted or unavailable, and serving a STALE embedding beats
+serving none (PAPER.md; the binding constraint is inference capacity, not
+cache capacity). This bench drives the REAL serve path (serve_step →
+admission token bucket → degradation chain → flush_dual, jnp backend)
+through a capacity crunch:
+
+1. **Warm phase** — an unconstrained server (no ``infer_budget_per_step``)
+   serves a uniform re-access stream over a closed user population until
+   every user has been computed at least once; ``flush_dual`` writes every
+   embedding to BOTH tiers, so the failover slab ends warm. The
+   steady-state misses/step of this phase is the measured inference
+   demand, ``base_miss``.
+2. **Crunch phase** — admission-controlled servers continue from the
+   warmed state with ``infer_budget_per_step = base_miss / pressure`` for
+   pressure 1 / 2 / 4 (capacity at 1×, 1/2, 1/4 of demand) and
+   ``failover_ttl_relax=None`` (serve any staleness). Misses over budget
+   are deferred down the chain: direct → relaxed failover → default.
+
+The SLA claim under test (ISSUE 4 acceptance): at pressure 2 and 4 the
+total served fraction (everything except default embeddings) stays
+≥ 99% while default serves stay BELOW failover serves — i.e. the
+degradation chain absorbs the capacity shortfall with staleness, not
+with blown SLAs. Writes ``BENCH_overload.json``
+(schema ``ercache-bench-overload/1``), asserted by the CI docs job.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import server as S
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64
+
+DIM = 16
+STEP_MS = 2_000
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_overload.json")
+
+
+def _tower(params, feats):
+    return feats @ params
+
+
+def _cfg(n_buckets: int, users: int, budget=None) -> CacheConfig:
+    # Direct TTL = one step: steady-state misses are the re-access tail.
+    # Failover sized to hold the whole population at load factor ~1/8 so
+    # warm entries are never evicted out from under the crunch.
+    return CacheConfig(model_id=1, model_type="ctr", n_buckets=n_buckets,
+                      ways=4, value_dim=DIM, cache_ttl_ms=STEP_MS,
+                      failover_ttl_ms=10 * STEP_MS,
+                      failover_n_buckets=max(users, 64), failover_ways=8,
+                      infer_budget_per_step=budget,
+                      failover_ttl_relax=None)
+
+
+def _serve_rounds(srv, state, params, rng, users, batch, rounds, t0):
+    """Drive `rounds` uniform-access batches; accumulate the overload
+    ledger. Returns (state, totals dict, next t)."""
+    tot = {k: 0 for k in ("requests", "direct_hits", "tower_inferences",
+                          "admitted", "deferred", "failover_serves",
+                          "fallbacks")}
+    stale_sum = 0.0
+    t = t0
+    for _ in range(rounds):
+        ids = rng.integers(0, users, size=batch).astype(np.int64)
+        keys = Key64.from_int(ids)
+        feats = jnp.asarray(rng.standard_normal((batch, DIM)), jnp.float32)
+        res = srv.jit_serve_step(params, state, keys, feats, t)
+        state = res.state
+        for k in tot:
+            tot[k] += int(res.stats[k])
+        stale_sum += (float(res.stats["failover_stale_ms"])
+                      * int(res.stats["failover_serves"]))
+        state = srv.jit_flush(state, t)
+        t += STEP_MS
+    tot["mean_failover_stale_ms"] = stale_sum / max(tot["failover_serves"], 1)
+    return state, tot, t
+
+
+def run(report):
+    quick = getattr(common, "QUICK", False)
+    users = 256 if quick else 512
+    n_buckets = 64 if quick else 128
+    batch = 128 if quick else 256
+    warm_rounds = 16 if quick else 24
+    crunch_rounds = 12 if quick else 24
+    pressures = [1.0, 2.0, 4.0]
+
+    params = jnp.eye(DIM, dtype=jnp.float32)
+
+    # warm arm: measure steady inference demand with capacity unconstrained
+    cfg_w = _cfg(n_buckets, users)
+    srv_w = S.CachedEmbeddingServer(cfg=cfg_w, tower_fn=_tower,
+                                    miss_budget=batch)
+    state = S.init_server_state(cfg_w, writebuf_capacity=2 * batch)
+    rng = np.random.default_rng(0)
+    state, warm, t = _serve_rounds(srv_w, state, params, rng, users, batch,
+                                   warm_rounds, 0)
+    base_miss = (warm["requests"] - warm["direct_hits"]) / warm_rounds
+
+    per_pressure = {}
+    for p in pressures:
+        budget = max(base_miss / p, 1.0)
+        cfg_p = _cfg(n_buckets, users, budget=budget)
+        srv_p = S.CachedEmbeddingServer(cfg=cfg_p, tower_fn=_tower,
+                                        miss_budget=batch)
+        # fresh warm-up per arm (deterministic), then the capacity crunch
+        st = S.init_server_state(cfg_w, writebuf_capacity=2 * batch)
+        rng = np.random.default_rng(0)
+        st, _, t = _serve_rounds(srv_w, st, params, rng, users, batch,
+                                 warm_rounds, 0)
+        st, tot, _ = _serve_rounds(srv_p, st, params, rng, users, batch,
+                                   crunch_rounds, t)
+        req = max(tot["requests"], 1)
+        sla = 1.0 - tot["fallbacks"] / req
+        per_pressure[f"{p:g}"] = {
+            "budget_per_step": round(budget, 2),
+            "requests": tot["requests"],
+            "direct_hit_rate": round(tot["direct_hits"] / req, 4),
+            "tower_inferences": tot["tower_inferences"],
+            "admitted": tot["admitted"],
+            "deferred": tot["deferred"],
+            "failover_serves": tot["failover_serves"],
+            "default_serves": tot["fallbacks"],
+            "sla_served_frac": round(sla, 4),
+            "failover_served_frac": round(tot["failover_serves"] / req, 4),
+            "mean_failover_stale_ms": round(
+                tot["mean_failover_stale_ms"], 1),
+        }
+        report.add(f"overload_p{p:g}", 0.0,
+                   f"sla={sla:.4f}_fo={tot['failover_serves']}"
+                   f"_def={tot['fallbacks']}_deferred={tot['deferred']}")
+
+    metrics = {
+        "schema": "ercache-bench-overload/1",
+        "quick": quick,
+        "users": users,
+        "batch": batch,
+        "n_buckets": n_buckets,
+        "warm_rounds": warm_rounds,
+        "crunch_rounds": crunch_rounds,
+        "base_miss_per_step": round(base_miss, 2),
+        "per_pressure": per_pressure,
+    }
+    if getattr(common, "WRITE_JSON", True):
+        with open(JSON_PATH, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        print(f"# wrote {JSON_PATH}")
+    # BENCH_overload.json is this axis's single source of truth (same
+    # rationale as bench_eviction): don't duplicate into BENCH_serve.json.
+    return None

@@ -33,10 +33,12 @@ BENCHES = [
     ("serve_path", "benchmarks.bench_serve"),
     ("multi_model", "benchmarks.bench_multi_model"),
     ("eviction", "benchmarks.bench_eviction"),
+    ("overload", "benchmarks.bench_overload"),
 ]
 
 # the fast, serve-path-focused subset run by CI (--quick with no --only)
-QUICK_BENCHES = ("kernel_probe", "serve_path", "multi_model", "eviction")
+QUICK_BENCHES = ("kernel_probe", "serve_path", "multi_model", "eviction",
+                 "overload")
 
 
 def main() -> None:

@@ -3,6 +3,11 @@
 * ``docs/model_registry.md`` — the per-model cache registry (paper
   Table 1): name, model id/type, stage, TTLs, eviction policy, sizing.
   Always rendered (the registry lives in ``repro.core.config``).
+* ``docs/benchmarks.md`` — the tracked benchmark artifacts
+  (``BENCH_*.json``) as one readable page: run metadata plus a one-line
+  interpretation per axis. Deterministic from the committed JSONs — the
+  CI docs job renders and ``git diff``s it, so a PR that regenerates a
+  BENCH file without re-rendering fails.
 * ``EXPERIMENTS.md`` §Roofline — from ``experiments/dryrun_results.json``
   when a dry-run sweep has been run; skipped (with a note) otherwise.
 
@@ -17,6 +22,7 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 RESULTS = os.path.join(ROOT, "experiments", "dryrun_results.json")
 REGISTRY_MD = os.path.join(ROOT, "docs", "model_registry.md")
+BENCHMARKS_MD = os.path.join(ROOT, "docs", "benchmarks.md")
 MARK_BEGIN = "<!-- AUTOGEN:ROOFLINE BEGIN -->"
 MARK_END = "<!-- AUTOGEN:ROOFLINE END -->"
 
@@ -69,6 +75,164 @@ def render_registry() -> None:
     print(f"wrote {os.path.relpath(REGISTRY_MD, ROOT)}")
 
 
+# ----------------------------------------------------------- benchmarks.md
+def _load(name):
+    path = os.path.join(ROOT, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _meta_line(m) -> str:
+    bits = []
+    if "backend" in m:
+        bits.append(f"backend `{m['backend']}`")
+    if "platform" in m:
+        bits.append(f"`{m['platform']}`")
+    bits.append("quick (CI-smoke) shapes" if m.get("quick")
+                else "full shapes")
+    if "wall_s" in m:
+        bits.append(f"{m['wall_s']} s wall")
+    return "Run metadata: " + ", ".join(bits) + "."
+
+
+def _fmt_serve(m):
+    b = m.get("benches", {})
+    kp, sp = b.get("kernel_probe", {}), b.get("serve_path", {})
+    lines = ["## Serve path — `BENCH_serve.json`", "", _meta_line(m), ""]
+    if kp.get("probe_us"):
+        lines += [
+            "| probe | µs/call | QPS |", "|---|---|---|",
+            *(f"| {k} | {kp['probe_us'][k]:.1f} "
+              f"| {kp['probe_qps'][k]:,.0f} |"
+              for k in sorted(kp["probe_us"])),
+            "",
+            f"Tiled-vs-per-query speedup "
+            f"**{kp.get('tiled_vs_perquery_speedup', 0):.1f}×** "
+            f"(B={kp.get('batch')}, parity "
+            f"{kp.get('tiled_parity_with_lookup', '?')}).",
+            "",
+        ]
+    if sp.get("serve_step_us"):
+        lines += [
+            "| serve_step backend | µs/step | req/s |", "|---|---|---|",
+            *(f"| {k} | {sp['serve_step_us'][k]:.1f} "
+              f"| {sp['serve_step_req_per_s'][k]:,.0f} |"
+              for k in sorted(sp["serve_step_us"])),
+            "",
+            f"Dual flush vs two passes: "
+            f"**{sp.get('flush_dual_speedup', 0):.2f}×** "
+            f"(one shared insert plan, DESIGN.md §3).",
+            "",
+        ]
+    lines += ["*Interpretation:* on CPU these numbers measure the Pallas "
+              "**interpreter**, so jnp-vs-pallas ratios are only "
+              "meaningful on a TPU backend; the file pins the trajectory "
+              "PR over PR (DESIGN.md §7).", ""]
+    return lines
+
+
+def _fmt_multi(m):
+    pm = m.get("per_model_hit_rate", {})
+    lines = [
+        "## Multi-model tier — `BENCH_multi_model.json`", "", _meta_line(m),
+        "",
+        f"One mixed-model dispatch (B={m.get('batch')}, "
+        f"M={m.get('n_models')}) vs a per-model loop: "
+        f"**{m.get('single_dispatch_speedup', 0):.1f}×** "
+        f"({m.get('single_dispatch_us', 0):.0f} µs vs "
+        f"{m.get('per_model_loop_us', 0):.0f} µs).",
+        "",
+        "| model id | hit rate |", "|---|---|",
+        *(f"| {k} | {pm[k]:.3f} |" for k in sorted(pm, key=int)),
+        "",
+        "*Interpretation:* the whole Table-1 registry is served by ONE "
+        "probe/insert dispatch with per-model TTL/capacity/eviction "
+        "policies (DESIGN.md §5); per-model hit rates differ because "
+        "policies do.", "",
+    ]
+    return lines
+
+
+def _fmt_evict(m):
+    pp = m.get("per_pressure", {})
+    lines = [
+        "## Eviction policy — `BENCH_eviction.json`", "", _meta_line(m), "",
+        f"Zipf(a={m.get('zipf_a')}) re-access through the real serve path, "
+        f"capacity {m.get('capacity')} slots, steady-state direct hit "
+        "rate:", "",
+        "| pressure | TTL-priority | LRU | LRU gap |", "|---|---|---|---|",
+        *(f"| {p} | {pp[p]['hit_rate_ttl']:.4f} "
+          f"| {pp[p]['hit_rate_lru']:.4f} "
+          f"| **{pp[p]['lru_gap']:+.4f}** |"
+          for p in sorted(pp, key=float)),
+        "",
+        "*Interpretation:* the access-bumped recency plane (DESIGN.md "
+        "§3.1) keeps hot-but-old keys alive under LRU, so the §3.3 "
+        "policy switch pays off exactly when capacity pressure forces "
+        "evictions; CI asserts the gap stays positive.", "",
+    ]
+    return lines
+
+
+def _fmt_overload(m):
+    pp = m.get("per_pressure", {})
+    lines = [
+        "## SLA admission control — `BENCH_overload.json`", "",
+        _meta_line(m), "",
+        f"Capacity crunch over a warmed {m.get('users')}-user population "
+        f"(measured demand {m.get('base_miss_per_step')} misses/step); "
+        "budget = demand / pressure:", "",
+        "| pressure | budget/step | deferred | failover serves "
+        "| defaults | SLA-served | mean staleness |",
+        "|---|---|---|---|---|---|---|",
+        *(f"| {p} | {pp[p]['budget_per_step']:g} | {pp[p]['deferred']} "
+          f"| {pp[p]['failover_serves']} | {pp[p]['default_serves']} "
+          f"| **{pp[p]['sla_served_frac']:.4f}** "
+          f"| {pp[p]['mean_failover_stale_ms'] / 1e3:.1f} s |"
+          for p in sorted(pp, key=float)),
+        "",
+        "*Interpretation:* with inference capacity cut to 1/2 and 1/4 of "
+        "demand, the degradation chain (direct → relaxed-TTL failover → "
+        "default, DESIGN.md §8) absorbs the shortfall with *staleness* "
+        "instead of blown SLAs — the failover tier provably engages "
+        "(CI asserts failover serves > defaults and SLA ≥ 0.99 under "
+        "pressure).", "",
+    ]
+    return lines
+
+
+def fmt_benchmarks() -> str:
+    lines = [
+        "# Benchmark artifacts",
+        "",
+        "Rendered from the tracked `BENCH_*.json` files by",
+        "`scripts/render_experiments.py` — do not edit by hand. Regenerate",
+        "the artifacts with `PYTHONPATH=src python -m benchmarks.run",
+        "--quick` (or the full run), then re-render. The CI docs job",
+        "fails if this page is stale relative to the committed JSONs.",
+        "",
+    ]
+    for name, fmt in (("BENCH_serve.json", _fmt_serve),
+                      ("BENCH_multi_model.json", _fmt_multi),
+                      ("BENCH_eviction.json", _fmt_evict),
+                      ("BENCH_overload.json", _fmt_overload)):
+        m = _load(name)
+        if m is None:
+            lines += [f"## `{name}` — not yet generated", ""]
+        else:
+            lines += fmt(m)
+    return "\n".join(lines)
+
+
+def render_benchmarks() -> None:
+    os.makedirs(os.path.dirname(BENCHMARKS_MD), exist_ok=True)
+    with open(BENCHMARKS_MD, "w") as f:
+        f.write(fmt_benchmarks())
+    print(f"wrote {os.path.relpath(BENCHMARKS_MD, ROOT)}")
+
+
 # ---------------------------------------------------------------- roofline
 def fmt_table(results):
     rows = []
@@ -117,6 +281,7 @@ def render_roofline() -> None:
 
 def main():
     render_registry()
+    render_benchmarks()
     render_roofline()
 
 

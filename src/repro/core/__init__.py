@@ -9,7 +9,8 @@ Public surface:
   combiner     — grouped update combination across models × stages (Fig. 5)
   writebuf     — asynchronous write + touch buffers (§3.5), model-tagged
                  records, deferred last-access recency bumps
-  ratelimit    — regional token buckets (§3.7)
+  ratelimit    — regional token buckets (§3.7) + the vectorized per-model
+                 inference budget behind SLA admission control (§8)
   regions      — 13-region sticky routing + drain-test harness (§3.6, Fig. 10)
   metrics      — hit rate / fallback rate / power savings / NE
 """
@@ -21,6 +22,9 @@ from repro.core.config import (CacheConfig, CacheConfigRegistry, StageConfig,
                                multi_model_tier_configs,
                                paper_production_configs)
 from repro.core.hashing import Key64
+from repro.core.ratelimit import (InferBudget, RegionalRateLimiter,
+                                  TokenBucket, admit_step, budget_table,
+                                  init_infer_budget)
 from repro.core.server import (CachedEmbeddingServer, MultiModelServer,
                                MultiServerState, ServerState, ServeResult,
                                init_multi_server_state, init_server_state,
@@ -38,4 +42,6 @@ __all__ = [
     "MultiModelServer", "MultiServerState", "init_multi_server_state",
     "init_server_state", "serve_step_no_cache",
     "SRC_COMPUTED", "SRC_DIRECT", "SRC_FAILOVER", "SRC_FALLBACK",
+    "InferBudget", "RegionalRateLimiter", "TokenBucket", "admit_step",
+    "budget_table", "init_infer_budget",
 ]

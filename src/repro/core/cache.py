@@ -527,6 +527,13 @@ class ModelPolicy(NamedTuple):
     bucket_mask_d: jnp.ndarray     # (M,) int32 — direct n_buckets[m] - 1
     bucket_mask_f: jnp.ndarray     # (M,) int32 — failover n_buckets[m] - 1
     touch: jnp.ndarray             # (M,) bool — record last-access bumps
+    # SLA admission control (DESIGN.md §8): per-model tower-inference
+    # budget (tokens/step; 0 where unlimited — see budget_limited) and the
+    # relaxed TTL the failover serves at on the degradation path (equals
+    # failover_ttl_ms for models without admission control).
+    infer_budget: jnp.ndarray      # (M,) float32 — tokens per serve step
+    budget_limited: jnp.ndarray    # (M,) bool — admission control on
+    failover_relax_ttl_ms: jnp.ndarray  # (M,) int32
 
     @property
     def n_models(self) -> int:
@@ -547,6 +554,9 @@ def policy_from_configs(cfgs) -> ModelPolicy:
     marker ``insert_dual_multi`` uses to share the insert plan's rank
     sort across both tiers (it survives jit tracing, unlike a value
     comparison on traced arrays)."""
+    from repro.core.ratelimit import budget_table
+
+    rates, _, limited = budget_table(cfgs)
     masks_d = [c.n_buckets - 1 for c in cfgs]
     masks_f = [c.resolved_failover_n_buckets() - 1 for c in cfgs]
     mask_d = jnp.asarray(masks_d, jnp.int32)
@@ -560,6 +570,10 @@ def policy_from_configs(cfgs) -> ModelPolicy:
         bucket_mask_d=mask_d,
         bucket_mask_f=mask_f,
         touch=jnp.asarray([c.resolved_touch() for c in cfgs], bool),
+        infer_budget=rates,
+        budget_limited=limited,
+        failover_relax_ttl_ms=jnp.asarray(
+            [c.resolved_failover_relax_ttl_ms() for c in cfgs], jnp.int32),
     )
 
 

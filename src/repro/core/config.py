@@ -13,6 +13,9 @@ from typing import Dict, List, Optional
 
 MINUTE_MS = 60_000
 HOUR_MS = 3_600_000
+# "No TTL" sentinel for the relaxed failover probe: int32 max, so the
+# freshness check `now - write_ts <= ttl` passes for every real entry.
+NO_TTL_MS = 0x7FFFFFFF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,11 +50,53 @@ class CacheConfig:
     # LRU models need access recency to be LRU at all; TTL-priority models
     # never rank on it, so recording touches for them is pure overhead.
     touch: Optional[bool] = None
+    # SLA-aware admission control (DESIGN.md §8). ``infer_budget_per_step``
+    # is this model's tower-inference token budget per serve step (the
+    # paper's inference capacity as a provisioned rate; fractional rates
+    # accumulate — 0.25 grants one inference every 4th step). None disables
+    # admission control: every miss inside the miss-budget window runs the
+    # tower, exactly the pre-admission behavior.
+    infer_budget_per_step: Optional[float] = None
+    # TTL (ms) the failover tier serves at on the admission degradation
+    # path (deferred / failed / overflowed misses). None = no TTL: any
+    # entry the failover still holds is served, however stale — trading
+    # staleness for SLA compliance, the paper's failover rationale. Only
+    # consulted when admission control is on; must be >= failover_ttl_ms.
+    failover_ttl_relax: Optional[int] = None
+    # Which tiers the async flush populates: "dual" (default — every
+    # computed embedding warms BOTH the direct and the failover slab, so
+    # the failover can actually assist) or "off" (direct-only; the
+    # failover slab stays cold). "off" is a deliberate opt-out for
+    # probe-only experiments; combining it with admission control is a
+    # configuration error — the degradation chain would silently degrade
+    # straight to default embeddings.
+    failover_write: str = "dual"
 
     def __post_init__(self) -> None:
         if self.eviction not in ("ttl", "lru"):
             raise ValueError(
                 f"eviction must be 'ttl' or 'lru', got {self.eviction!r}")
+        if self.failover_write not in ("dual", "off"):
+            raise ValueError("failover_write must be 'dual' or 'off', "
+                             f"got {self.failover_write!r}")
+        if self.infer_budget_per_step is not None:
+            if self.infer_budget_per_step <= 0:
+                raise ValueError("infer_budget_per_step must be > 0 "
+                                 f"(got {self.infer_budget_per_step}); use "
+                                 "None to disable admission control")
+            if self.failover_write == "off":
+                raise ValueError(
+                    "admission control (infer_budget_per_step="
+                    f"{self.infer_budget_per_step}) requires "
+                    "failover_write='dual': with the failover slab never "
+                    "written, deferred misses would silently degrade "
+                    "straight to default embeddings")
+        if (self.failover_ttl_relax is not None
+                and self.failover_ttl_relax < self.failover_ttl_ms):
+            raise ValueError(
+                f"failover_ttl_relax ({self.failover_ttl_relax}) must be >= "
+                f"failover_ttl_ms ({self.failover_ttl_ms}): the relaxed "
+                "degradation-path TTL can only loosen the strict one")
 
     def resolved_touch(self) -> bool:
         return (self.eviction == "lru") if self.touch is None else self.touch
@@ -62,6 +107,21 @@ class CacheConfig:
 
     def resolved_failover_ways(self) -> int:
         return self.ways if self.failover_ways is None else self.failover_ways
+
+    def resolved_failover_relax_ttl_ms(self) -> int:
+        """The TTL the failover tier is PROBED at on the serve path.
+
+        Without admission control the degradation path doesn't exist, so
+        the probe validates at the strict failover TTL. With it, deferred
+        misses serve at ``failover_ttl_relax`` (None → no TTL at all,
+        ``NO_TTL_MS``); strict-TTL hits are recovered from the relaxed
+        probe's age, so one dual dispatch still covers both.
+        """
+        if self.infer_budget_per_step is None:
+            return self.failover_ttl_ms
+        if self.failover_ttl_relax is None:
+            return NO_TTL_MS
+        return self.failover_ttl_relax
 
 
 @dataclasses.dataclass(frozen=True)

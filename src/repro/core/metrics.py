@@ -25,6 +25,13 @@ class ServingCounters:
                                     # "model fallback rate"
     cache_writes: int = 0
     combined_writes: int = 0
+    # SLA admission-control ledger (DESIGN.md §8). Without a configured
+    # inference budget every miss is admitted: `admitted` then equals the
+    # miss count and `deferred`/`failover_serves` stay zero.
+    admitted: int = 0               # misses granted a tower inference
+    deferred: int = 0               # misses the budget gated off
+    failover_serves: int = 0        # degradation-chain failover serves
+                                    # (incl. beyond the strict failover TTL)
 
     def merge(self, o: "ServingCounters") -> None:
         for f in dataclasses.fields(self):
@@ -38,10 +45,18 @@ class ServingCounters:
     def fallback_rate(self) -> float:
         return self.fallbacks / max(self.requests, 1)
 
+    @property
+    def sla_served_rate(self) -> float:
+        """Fraction served with a REAL embedding (direct, computed, or
+        failover — everything except the default-embedding fallback): the
+        SLA-compliance number the admission degradation chain defends."""
+        return 1.0 - self.fallback_rate
+
     def as_dict(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
         d["hit_rate"] = self.hit_rate
         d["fallback_rate"] = self.fallback_rate
+        d["sla_served_rate"] = self.sla_served_rate
         return d
 
 

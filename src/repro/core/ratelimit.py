@@ -1,14 +1,27 @@
-"""Regional token-bucket rate limiter (paper §3.7).
+"""Token-bucket rate limiting: regional QPS thresholds + per-model
+inference admission (paper §3.7 and the failover story of §4.4).
 
-ERCache "filters requests based on regional thresholds if there is a sudden
-spike in QPS" — protecting the cache tier from cascading effects during
-traffic oscillations / regional outages / site events. Deterministic,
-sim-clock driven; lives in the (Python) serving tier, not inside jitted
-programs, exactly like the production placement.
+Two limiters live here:
+
+* :class:`TokenBucket` / :class:`RegionalRateLimiter` — the paper's
+  regional QPS filter ("filters requests based on regional thresholds if
+  there is a sudden spike in QPS"). Deterministic, sim-clock driven;
+  lives in the (Python) serving tier, not inside jitted programs, exactly
+  like the production placement.
+* :class:`InferBudget` + :func:`admit_step` — the SAME partial-admission
+  token-bucket math, vectorized over the model registry and jit-resident:
+  one ``jnp`` update refills every model's bucket and grants each model's
+  share of tower inferences for the serve step (DESIGN.md §8). This is
+  what makes cache misses *admission-controlled*: misses over a model's
+  budget are deferred to the failover degradation chain instead of
+  queueing on exhausted inference capacity.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple, Sequence, Tuple
+
+import jax.numpy as jnp
 
 
 @dataclasses.dataclass
@@ -59,3 +72,96 @@ class RegionalRateLimiter:
 
     def stats(self):
         return {r: (b.admitted, b.rejected) for r, b in self.buckets.items()}
+
+
+# ==================================================== per-model infer budget
+# The jit-resident, registry-vectorized twin of TokenBucket: one (M,) float32
+# tokens array, refilled by ``infer_budget_per_step`` tokens per SERVE STEP
+# (step-clocked, not wall-clocked — inference capacity is provisioned per
+# dispatch, paper's "constrained computational resources"). Fractional rates
+# are meaningful: 0.25 tokens/step grants one inference every 4th step, and
+# the partial-refill accumulation is exact under jit for binary fractions
+# (locked by tests/test_overload.py).
+
+class InferBudget(NamedTuple):
+    """Vectorized per-model inference token bucket — lives inside the
+    donated server state so the budget survives across jitted steps."""
+
+    tokens: jnp.ndarray      # (M,) float32 — fractional tokens available
+
+
+def bursts_of(rates: jnp.ndarray, limited: jnp.ndarray) -> jnp.ndarray:
+    """Bucket capacity per model: ``rate + 1`` for limited models — one
+    step's budget plus the in-flight fractional grant, so the sub-1
+    residue left by ``floor`` is NEVER clipped by the next refill and the
+    long-run admitted rate equals the provisioned rate exactly (a
+    ``max(rate, 1)`` cap would floor-quantize fractional rates under
+    sustained demand). Unlimited models never read their tokens; 1 keeps
+    the array well-formed."""
+    return jnp.where(limited, rates + 1.0, 1.0)
+
+
+def budget_table(cfgs: Sequence) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                          jnp.ndarray]:
+    """(rates, bursts, limited) (M,) device arrays from an ordered
+    CacheConfig sequence — THE single derivation of the admission tables
+    (``cache.policy_from_configs`` reuses it for the policy columns).
+
+    ``rate`` is ``infer_budget_per_step`` (0 for unlimited models, which
+    ``limited`` masks off); ``burst`` is :func:`bursts_of`.
+    """
+    rates = jnp.asarray([0.0 if c.infer_budget_per_step is None
+                         else float(c.infer_budget_per_step)
+                         for c in cfgs], jnp.float32)
+    limited = jnp.asarray([c.infer_budget_per_step is not None
+                           for c in cfgs], bool)
+    return rates, bursts_of(rates, limited), limited
+
+
+def init_infer_budget(cfgs: Sequence) -> InferBudget:
+    """Buckets start full (one burst's worth) — same contract as
+    ``TokenBucket.__post_init__``."""
+    _, bursts, _ = budget_table(cfgs)
+    return InferBudget(tokens=bursts)
+
+
+def refill(budget: InferBudget, rates: jnp.ndarray, bursts: jnp.ndarray
+           ) -> InferBudget:
+    """Add one serve step's tokens, capped at the burst."""
+    return InferBudget(tokens=jnp.minimum(bursts, budget.tokens + rates))
+
+
+def grant_from(budget: InferBudget, limited: jnp.ndarray,
+               demand: jnp.ndarray) -> jnp.ndarray:
+    """Per-model grant against a REFILLED bucket: ``min(demand,
+    floor(tokens))`` for limited models (trim-don't-drop, the
+    :meth:`TokenBucket.admit` contract), demand passthrough otherwise.
+    Does NOT spend — callers may tighten the grant further (e.g. the
+    serve path's global ``miss_budget`` window) and then :func:`spend`
+    exactly what ran."""
+    demand = jnp.asarray(demand, jnp.int32)
+    cap = jnp.floor(budget.tokens).astype(jnp.int32)
+    return jnp.where(limited, jnp.minimum(demand, cap), demand)
+
+
+def spend(budget: InferBudget, limited: jnp.ndarray, used: jnp.ndarray
+          ) -> InferBudget:
+    """Charge the bucket for inferences that actually ran (failed
+    attempts included — they consumed capacity). Unlimited models' tokens
+    never move."""
+    used = jnp.asarray(used, jnp.int32)
+    return InferBudget(tokens=budget.tokens
+                       - jnp.where(limited, used, 0).astype(jnp.float32))
+
+
+def admit_step(budget: InferBudget, rates: jnp.ndarray, bursts: jnp.ndarray,
+               limited: jnp.ndarray, demand: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, InferBudget]:
+    """One refill → grant → spend round, every model at once: the
+    vectorized analogue of :meth:`TokenBucket.admit` for callers without
+    a tighter execution cap (the servers compose the primitives directly
+    so tokens are only charged for inferences that actually run).
+    Returns (grant (M,) int32, new budget)."""
+    b = refill(budget, rates, bursts)
+    grant = grant_from(b, limited, demand)
+    return grant, spend(b, limited, grant)

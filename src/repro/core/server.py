@@ -23,6 +23,19 @@ Per serve batch:
 
 Every request's provenance is reported (DIRECT/COMPUTED/FAILOVER/FALLBACK) so
 the serving tier can account Tables 2–3 mechanically.
+
+**SLA-aware admission control** (DESIGN.md §8): when
+``CacheConfig.infer_budget_per_step`` is set, a jit-resident per-model
+token bucket (``ratelimit.InferBudget``, part of the donated server
+state) gates which misses are ADMITTED to model inference each step.
+Misses over budget are *deferred* and fall through the degradation
+chain — direct hit → failover hit at the RELAXED TTL
+(``failover_ttl_relax``; None = any staleness) → default embedding —
+with distinct ``admitted`` / ``deferred`` / ``failover_serves`` /
+``failover_stale_ms`` counters so SLA compliance and staleness cost are
+both observable. Admitted inferences still write back to BOTH tiers on
+flush, which is what keeps the failover slab warm enough to catch the
+deferred traffic.
 """
 from __future__ import annotations
 
@@ -34,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cache as cache_lib
+from repro.core import ratelimit as rl_lib
 from repro.core import writebuf as wb_lib
 from repro.core.cache import CacheState
 from repro.core.config import CacheConfig
@@ -52,6 +66,10 @@ class ServerState(NamedTuple):
     failover: CacheState
     writebuf: WriteBuffer
     touchbuf: TouchBuffer
+    # Per-model inference token bucket ((1,) on the single-model server).
+    # Allocated unconditionally so the pytree structure doesn't depend on
+    # whether admission control is configured; untouched when it is off.
+    budget: rl_lib.InferBudget
 
 
 class ServeResult(NamedTuple):
@@ -80,41 +98,66 @@ def init_server_state(cfg: CacheConfig, dtype=jnp.float32,
                                       cfg.value_dim, dtype),
         writebuf=wb_lib.init_writebuf(writebuf_capacity, cfg.value_dim, dtype),
         touchbuf=wb_lib.init_touchbuf(touchbuf_capacity),
+        budget=rl_lib.init_infer_budget([cfg]),
     )
+
+
+def _per_model_miss_rank(slots, miss, n_models: int) -> jnp.ndarray:
+    """(B,) batch-order rank of each miss among ITS model's misses — the
+    per-model admission cutoff index (reuses the insert plan's segmented
+    rank sort). Garbage where ``miss`` is False; callers gate on it."""
+    return cache_lib._bucket_rank(slots, miss, n_models)
 
 
 def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
                 params, features, keys: Key64, now_ms, failure_mask,
                 direct, fo, writebuf: WriteBuffer,
-                model_slots=None, n_models: Optional[int] = None):
+                model_slots=None, n_models: Optional[int] = None,
+                admit: Optional[jnp.ndarray] = None,
+                fo_strict_hit: Optional[jnp.ndarray] = None):
     """Steps (2)–(4) of the Fig. 3 serve sequence, shared by the single-
     and multi-model servers (step (1), the dual probe, differs):
 
     miss-budget compaction + tower, failover assistance / model fallback,
     provenance + counters, write-buffer append. ``model_slots``/
     ``n_models`` (multi-model tier) tag buffered records and add per-model
-    (M,) stat breakdowns. Returns (embeddings, source, age, new_writebuf,
-    stats).
+    (M,) stat breakdowns.
+
+    ``admit`` (B,) bool marks the misses ADMITTED to model inference by
+    the per-model token budget (None → every miss, the pre-admission
+    behavior); deferred misses (miss & ~admit) skip the tower and fall
+    through the degradation chain. ``fo`` is then the RELAXED-TTL failover
+    probe and ``fo_strict_hit`` (B,) its strict-TTL subset (None → same as
+    ``fo.hit``), so ``failover_hits`` keeps its strict meaning while
+    ``failover_serves`` counts every failover-tier serve on the chain.
+    Returns (embeddings, source, age, new_writebuf, stats).
     """
     B = keys.hi.shape[0]
+    miss = ~direct.hit
+    if admit is None:
+        admit = miss
+    if fo_strict_hit is None:
+        fo_strict_hit = fo.hit
 
-    # (2) compaction: misses first, stable --------------------------------
-    order = jnp.argsort(direct.hit, stable=True)        # False (miss) first
+    # (2) compaction: ADMITTED misses first, stable -----------------------
+    order = jnp.argsort(~admit, stable=True)            # admitted first
     sel = order[:miss_budget]                           # batch indices
-    sel_is_miss = ~direct.hit[sel]                      # tail may be hits
+    sel_is_adm = admit[sel]                             # tail may be hits
 
     sel_features = jax.tree_util.tree_map(lambda x: x[sel], features)
     towered = tower_fn(params, sel_features)            # (miss_budget, D)
     towered = towered.astype(direct.values.dtype)
 
     sel_failed = failure_mask[sel]
-    sel_ok = sel_is_miss & ~sel_failed                  # produced embedding
+    sel_ok = sel_is_adm & ~sel_failed                   # produced embedding
 
-    # (3) scatter computed rows back; find who still needs help -----------
+    # (3) scatter computed rows back; the degradation chain for the rest —
+    # deferred (over budget) ∪ overflow (over miss_budget) ∪ failed all
+    # consult the failover probe, then the default embedding.
     computed = jnp.zeros((B,), bool).at[sel].set(sel_ok)
     emb = direct.values
     emb = emb.at[sel].set(jnp.where(sel_ok[:, None], towered, emb[sel]))
-    unresolved = ~direct.hit & ~computed                # overflow ∪ failed
+    unresolved = miss & ~computed
     use_fo = unresolved & fo.hit
     emb = jnp.where(use_fo[:, None], fo.values.astype(emb.dtype), emb)
     fallback = unresolved & ~fo.hit
@@ -136,18 +179,30 @@ def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
         writebuf, sel_keys, towered, now_ms, mask=sel_ok,
         model_ids=None if model_slots is None else model_slots[sel])
 
+    def count(flag):
+        return jnp.sum(flag.astype(jnp.int32))
+
+    # Staleness accounting of the failover serves (float32: int32 would
+    # wrap on a batch of hour-scale ages) — the SLA trade's cost side.
+    fo_age_sum = jnp.sum(jnp.where(use_fo, fo.age_ms, 0)
+                         .astype(jnp.float32))
     stats = {
         "requests": jnp.int32(B),
-        "direct_hits": jnp.sum(direct.hit.astype(jnp.int32)),
-        "tower_inferences": jnp.sum(sel_is_miss.astype(jnp.int32)),
-        "tower_failures": jnp.sum((sel_is_miss & sel_failed).astype(jnp.int32)),
-        # misses beyond the provisioned budget (never attempted)
-        "overflow": jnp.sum((~direct.hit).astype(jnp.int32))
-            - jnp.sum(sel_is_miss.astype(jnp.int32)),
-        "failover_hits": jnp.sum(use_fo.astype(jnp.int32)),
-        "fallbacks": jnp.sum(fallback.astype(jnp.int32)),
-        # float32 accumulation: int32 would wrap on a batch of
-        # hour-scale failover ages (2e3 rows x 7.2e6 ms > 2^31).
+        "direct_hits": count(direct.hit),
+        "tower_inferences": count(sel_is_adm),
+        "tower_failures": count(sel_is_adm & sel_failed),
+        # admitted misses beyond the miss-budget window (never attempted)
+        "overflow": count(admit) - count(sel_is_adm),
+        # admission-control ledger: deferred = misses the budget gated off
+        "admitted": count(admit),
+        "deferred": count(miss) - count(admit),
+        # strict-TTL failover recoveries (the pre-admission meaning) vs
+        # ALL failover-tier serves on the degradation chain
+        "failover_hits": count(use_fo & fo_strict_hit),
+        "failover_serves": count(use_fo),
+        "fallbacks": count(fallback),
+        "failover_stale_ms": fo_age_sum /
+            jnp.maximum(count(use_fo), 1).astype(jnp.float32),
         # age >= 0: a hit written and read in the same millisecond is a
         # legitimate age-0 serve and must count in both numerator and
         # denominator (misses carry age -1 and stay excluded).
@@ -157,14 +212,20 @@ def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
     }
     if model_slots is not None:
         # per-model (M,) breakdowns for Table-1-style accounting
-        def per_model(flag):
-            return (jnp.zeros((n_models,), jnp.int32)
-                    .at[model_slots].add(flag.astype(jnp.int32)))
+        def per_model(flag, dtype=jnp.int32):
+            return (jnp.zeros((n_models,), dtype)
+                    .at[model_slots].add(flag.astype(dtype)))
 
         stats["per_model_requests"] = per_model(jnp.ones((B,), bool))
         stats["per_model_direct_hits"] = per_model(direct.hit)
-        stats["per_model_failover_hits"] = per_model(use_fo)
+        stats["per_model_failover_hits"] = per_model(use_fo & fo_strict_hit)
         stats["per_model_fallbacks"] = per_model(fallback)
+        stats["per_model_admitted"] = per_model(admit)
+        stats["per_model_deferred"] = per_model(miss) - per_model(admit)
+        stats["per_model_failover_serves"] = per_model(use_fo)
+        stats["per_model_failover_stale_ms"] = (
+            per_model(jnp.where(use_fo, fo.age_ms, 0), jnp.float32)
+            / jnp.maximum(per_model(use_fo), 1).astype(jnp.float32))
     return emb, source, age.astype(jnp.int32), new_wb, stats
 
 
@@ -181,6 +242,18 @@ class CachedEmbeddingServer:
     miss_budget: int
     fallback_value: float = 0.0   # default embedding on total fallback
 
+    def __post_init__(self) -> None:
+        # Admission-control tables, materialized EAGERLY (same rationale as
+        # MultiModelServer's policy table: never build constants inside a
+        # jit trace). (1,)-shaped: the single-model tier is the M=1 case
+        # of the vectorized bucket.
+        object.__setattr__(self, "_admission",
+                           self.cfg.infer_budget_per_step is not None)
+        rates, bursts, limited = rl_lib.budget_table([self.cfg])
+        object.__setattr__(self, "_budget_rates", rates)
+        object.__setattr__(self, "_budget_bursts", bursts)
+        object.__setattr__(self, "_budget_limited", limited)
+
     # ----------------------------------------------------------------- serve
     def serve_step(self, params, state: ServerState, keys: Key64,
                    features, now_ms, failure_mask: Optional[jnp.ndarray] = None,
@@ -194,10 +267,14 @@ class CachedEmbeddingServer:
         # (1) direct + failover cache check — ONE dispatch ----------------
         # Both probes read the pre-step state, so they fuse into a single
         # kernel launch on the pallas backend (cache_probe_dual); the
-        # failover result is only consulted in step (3).
+        # failover result is only consulted in step (3). With admission
+        # control on, the failover validates at the RELAXED TTL (the
+        # degradation chain may serve past the strict TTL) and the strict
+        # hit set is recovered from the probe's age below.
+        fo_ttl = cfg.resolved_failover_relax_ttl_ms()
         direct, fo = cache_lib.lookup_dual(
             state.direct, state.failover, keys, now_ms, cfg.cache_ttl_ms,
-            cfg.failover_ttl_ms, backend=cfg.backend)
+            fo_ttl, backend=cfg.backend)
 
         # (1b) record hit coordinates for the deferred last-access bump —
         # an O(B) ring scatter, never a cache-table write on this path.
@@ -206,30 +283,70 @@ class CachedEmbeddingServer:
         if cfg.resolved_touch():
             new_tb = wb_lib.touch_append(new_tb, direct, fo, now_ms)
 
+        # (1c) admission control: refill the token bucket, grant this
+        # step's tower inferences, defer the rest (statically skipped —
+        # admit=None — when no budget is configured). The grant is capped
+        # by the miss-budget compaction window too, and tokens are only
+        # charged for inferences that actually RUN (failed attempts
+        # included) — never for grants the window clips.
+        admit = fo_strict = None
+        new_budget = state.budget
+        if self._admission:
+            fo_strict = fo.hit & (fo.age_ms <= jnp.int32(cfg.failover_ttl_ms))
+            miss = ~direct.hit
+            demand = jnp.sum(miss.astype(jnp.int32))[None]       # (1,)
+            refilled = rl_lib.refill(state.budget, self._budget_rates,
+                                     self._budget_bursts)
+            grant = rl_lib.grant_from(refilled, self._budget_limited,
+                                      demand)
+            # batch-order rank of each miss: first grant[0] are admitted,
+            # clipped to the tower's execution window
+            m_i = miss.astype(jnp.int32)
+            rank = jnp.cumsum(m_i) - m_i                         # exclusive
+            admit = miss & (rank < jnp.minimum(grant[0],
+                                               jnp.int32(self.miss_budget)))
+            spent = jnp.sum(admit.astype(jnp.int32))[None]
+            new_budget = rl_lib.spend(refilled, self._budget_limited, spent)
+
         # (2)–(4): shared serve tail
         emb, source, age, new_wb, stats = _serve_tail(
             self.tower_fn, self.miss_budget, self.fallback_value, params,
             features, keys, now_ms, failure_mask, direct, fo,
-            state.writebuf)
+            state.writebuf, admit=admit, fo_strict_hit=fo_strict)
         return ServeResult(
             embeddings=emb, source=source, age_ms=age,
             state=ServerState(direct=state.direct, failover=state.failover,
-                              writebuf=new_wb, touchbuf=new_tb),
+                              writebuf=new_wb, touchbuf=new_tb,
+                              budget=new_budget),
             stats=stats)
 
     # ----------------------------------------------------------------- flush
     def flush(self, state: ServerState, now_ms) -> ServerState:
-        """Apply the async write buffer to BOTH caches (same embeddings, the
-        failover simply keeps them valid longer — paper §4.4) with ONE
-        shared insert plan (wb_lib.flush_dual), bumping the recency planes
-        from the touch buffer first. Runs off the serving critical path."""
+        """Apply the async write buffer to the cache tier(s), bumping the
+        recency planes from the touch buffer first. Runs off the serving
+        critical path.
+
+        ``CacheConfig.failover_write`` makes the tier choice EXPLICIT:
+        ``"dual"`` (default) flushes BOTH caches with ONE shared insert
+        plan (wb_lib.flush_dual — same embeddings, the failover simply
+        keeps them valid longer, paper §4.4); ``"off"`` flushes the direct
+        cache only (wb_lib.flush) and deliberately leaves the failover
+        slab cold — a combination CacheConfig rejects when admission
+        control needs the failover warm."""
         tb = state.touchbuf if self.cfg.resolved_touch() else None
-        direct, failover, wb1, tb1 = wb_lib.flush_dual(
-            state.writebuf, state.direct, state.failover, now_ms,
-            self.cfg.cache_ttl_ms, self.cfg.failover_ttl_ms,
-            evict_lru=self.cfg.eviction == "lru", touchbuf=tb)
+        if self.cfg.failover_write == "off":
+            direct, wb1, tb1 = wb_lib.flush(
+                state.writebuf, state.direct, now_ms, self.cfg.cache_ttl_ms,
+                evict_lru=self.cfg.eviction == "lru", touchbuf=tb)
+            failover = state.failover
+        else:
+            direct, failover, wb1, tb1 = wb_lib.flush_dual(
+                state.writebuf, state.direct, state.failover, now_ms,
+                self.cfg.cache_ttl_ms, self.cfg.failover_ttl_ms,
+                evict_lru=self.cfg.eviction == "lru", touchbuf=tb)
         return ServerState(direct=direct, failover=failover, writebuf=wb1,
-                           touchbuf=state.touchbuf if tb1 is None else tb1)
+                           touchbuf=state.touchbuf if tb1 is None else tb1,
+                           budget=state.budget)
 
     # ------------------------------------------------------------------ jit
     # ServerState is DONATED: the caches pass through serve_step unchanged
@@ -252,6 +369,7 @@ class MultiServerState(NamedTuple):
     failover: cache_lib.MultiCacheState   # stacked per-model failover tables
     writebuf: WriteBuffer                 # shared ring, records model-tagged
     touchbuf: TouchBuffer                 # shared ring of POOLED hit coords
+    budget: rl_lib.InferBudget            # (M,) per-model inference tokens
 
 
 def init_multi_server_state(cfgs: Sequence[CacheConfig], dtype=jnp.float32,
@@ -280,6 +398,7 @@ def init_multi_server_state(cfgs: Sequence[CacheConfig], dtype=jnp.float32,
             dtype),
         writebuf=wb_lib.init_writebuf(writebuf_capacity, dim, dtype),
         touchbuf=wb_lib.init_touchbuf(touchbuf_capacity),
+        budget=rl_lib.init_infer_budget(cfgs),
     )
 
 
@@ -318,6 +437,13 @@ class MultiModelServer:
                     f"configs disagree on backend {sorted(backends)}; pass "
                     "MultiModelServer(backend=...) explicitly")
             object.__setattr__(self, "backend", backends.pop())
+        off = [c.model_id for c in self.cfgs if c.failover_write == "off"]
+        if off:
+            raise ValueError(
+                f"models {off} set failover_write='off': the stacked tier's "
+                "shared flush (flush_dual_multi) always writes both slabs — "
+                "a per-model cold failover would be silently overwritten. "
+                "Serve those models on a single-model server instead.")
         # Materialize the policy table EAGERLY: building it lazily inside
         # the first jit trace would cache trace-bound tracers (leak).
         object.__setattr__(self, "_policy",
@@ -326,6 +452,29 @@ class MultiModelServer:
         # model in the registry tracks access recency.
         object.__setattr__(self, "_any_touch",
                            any(c.resolved_touch() for c in self.cfgs))
+        # Admission control (DESIGN.md §8): static gate + eager budget
+        # tables. When ANY model has a budget, the failover is probed at
+        # the per-model RELAXED TTLs (strict for budget-less models, so
+        # their behavior is unchanged) via a policy whose failover column
+        # is swapped — _replace keeps the bucket-mask aliasing that
+        # _pooled_bucket_pair's identity test relies on.
+        any_budget = any(c.infer_budget_per_step is not None
+                         for c in self.cfgs)
+        object.__setattr__(self, "_any_admission", any_budget)
+        # rates/limited come FROM the policy table (its budget columns are
+        # built by ratelimit.budget_table) so there is exactly one
+        # derivation of the admission tables.
+        rates = self._policy.infer_budget
+        limited = self._policy.budget_limited
+        object.__setattr__(self, "_budget_rates", rates)
+        object.__setattr__(self, "_budget_bursts",
+                           rl_lib.bursts_of(rates, limited))
+        object.__setattr__(self, "_budget_limited", limited)
+        probe_policy = self._policy
+        if any_budget:
+            probe_policy = probe_policy._replace(
+                failover_ttl_ms=probe_policy.failover_relax_ttl_ms)
+        object.__setattr__(self, "_probe_policy", probe_policy)
 
     @property
     def policy(self) -> cache_lib.ModelPolicy:
@@ -352,9 +501,11 @@ class MultiModelServer:
             failure_mask = jnp.zeros((B,), bool)
 
         # (1) direct + failover check, ALL models — ONE dispatch ----------
+        # (the probe policy carries each model's RELAXED failover TTL when
+        # any model runs admission control; strict == relaxed otherwise)
         direct, fo = cache_lib.lookup_dual_multi(
-            state.direct, state.failover, self.policy, slots, keys, now_ms,
-            backend=self.backend)
+            state.direct, state.failover, self._probe_policy, slots, keys,
+            now_ms, backend=self.backend)
 
         # (1b) buffer hit coordinates (POOLED bucket indices) for deferred
         # last-access bumps, gated by each query's per-model touch policy.
@@ -363,16 +514,47 @@ class MultiModelServer:
             new_tb = wb_lib.touch_append(new_tb, direct, fo, now_ms,
                                          mask=self.policy.touch[slots])
 
+        # (1c) admission control: ONE vectorized bucket update grants every
+        # model's tower share; each model's misses are admitted in batch
+        # order up to its grant, the rest deferred to the degradation
+        # chain. The total admission is additionally clipped to the
+        # miss-budget execution window (batch order across models), and
+        # each model's tokens are charged only for inferences that RUN.
+        # Statically skipped when no model has a budget.
+        admit = fo_strict = None
+        new_budget = state.budget
+        if self._any_admission:
+            fo_strict = fo.hit & (fo.age_ms
+                                  <= self.policy.failover_ttl_ms[slots])
+            miss = ~direct.hit
+            demand = (jnp.zeros((self.n_models,), jnp.int32)
+                      .at[slots].add(miss.astype(jnp.int32)))
+            refilled = rl_lib.refill(state.budget, self._budget_rates,
+                                     self._budget_bursts)
+            grant = rl_lib.grant_from(refilled, self._budget_limited,
+                                      demand)
+            rank = _per_model_miss_rank(slots, miss, self.n_models)
+            admit0 = miss & (rank < grant[slots])
+            a_i = admit0.astype(jnp.int32)
+            global_rank = jnp.cumsum(a_i) - a_i              # exclusive
+            admit = admit0 & (global_rank < jnp.int32(self.miss_budget))
+            spent = (jnp.zeros((self.n_models,), jnp.int32)
+                     .at[slots].add(admit.astype(jnp.int32)))
+            new_budget = rl_lib.spend(refilled, self._budget_limited,
+                                      spent)
+
         # (2)–(4): shared serve tail, with model-tagged buffer records
         emb, source, age, new_wb, stats = _serve_tail(
             self.tower_fn, self.miss_budget, self.fallback_value, params,
             features, keys, now_ms, failure_mask, direct, fo,
-            state.writebuf, model_slots=slots, n_models=self.n_models)
+            state.writebuf, model_slots=slots, n_models=self.n_models,
+            admit=admit, fo_strict_hit=fo_strict)
         return ServeResult(
             embeddings=emb, source=source, age_ms=age,
             state=MultiServerState(direct=state.direct,
                                    failover=state.failover,
-                                   writebuf=new_wb, touchbuf=new_tb),
+                                   writebuf=new_wb, touchbuf=new_tb,
+                                   budget=new_budget),
             stats=stats)
 
     # ----------------------------------------------------------------- flush
@@ -388,7 +570,8 @@ class MultiModelServer:
         return MultiServerState(direct=direct, failover=failover,
                                 writebuf=wb1,
                                 touchbuf=state.touchbuf if tb1 is None
-                                else tb1)
+                                else tb1,
+                                budget=state.budget)
 
     # ------------------------------------------------------------------ jit
     # Same donation contract as CachedEmbeddingServer: MultiServerState is

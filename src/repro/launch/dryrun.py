@@ -367,7 +367,8 @@ def run_ercache_cell(arch: str = "tinyllama-1.1b", batch: int = 4096,
             values=P(("data", "model"), None, None),
             last_access_ts=P(("data", "model"))),
         writebuf=jax.tree_util.tree_map(lambda _: P(), state_abs.writebuf),
-        touchbuf=jax.tree_util.tree_map(lambda _: P(), state_abs.touchbuf))
+        touchbuf=jax.tree_util.tree_map(lambda _: P(), state_abs.touchbuf),
+        budget=jax.tree_util.tree_map(lambda _: P(), state_abs.budget))
     keys_abs = Key64(hi=jax.ShapeDtypeStruct((batch,), jnp.int32),
                      lo=jax.ShapeDtypeStruct((batch,), jnp.int32))
     toks_abs = jax.ShapeDtypeStruct((batch, seq), jnp.int32)

@@ -10,14 +10,24 @@ Table 2/3 accounting; results print as a report.
 mixed-model batch served by a single MultiModelServer dispatch, and the
 report breaks hit rates down per model.
 
+``--overload`` replays the stream against a CONSTRAINED inference budget
+(SLA-aware admission control, DESIGN.md §8): the server's per-step token
+budget is provisioned at ``--budget-frac`` of the stream's steady-state
+miss demand, and a mid-run re-access burst (a flash crowd drawn from the
+same user population) pushes demand further over capacity. The report
+shows the degradation chain engaging phase by phase: deferred misses,
+failover serves (with staleness), and the SLA-served fraction.
+
 Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --arch sasrec \
-        --minutes 120 --users 5000 --ttl-min 5 [--no-cache] [--multi]
+        --minutes 120 --users 5000 --ttl-min 5 \
+        [--no-cache] [--multi] [--overload]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -31,7 +41,8 @@ from repro.core.config import (CacheConfig, MINUTE_MS, HOUR_MS,
 from repro.core.hashing import Key64
 from repro.core.metrics import ServingCounters, power_savings
 from repro.data.access_patterns import (FIG6_KNOTS, InterArrivalDist,
-                                        StreamConfig, generate_stream_fast)
+                                        StreamConfig, generate_stream_fast,
+                                        simulate_hit_rate)
 from repro.ft.failure import FailureInjector
 from repro.models import recsys as rec_lib
 
@@ -127,6 +138,114 @@ def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
         f" tower_inferences={d['tower_inferences']}"
         f" ({wall:.1f}s)")
     return d
+
+
+def run_serving_overload(arch: str = "sasrec", minutes: int = 60,
+                         users: int = 2000, batch: int = 256,
+                         ttl_min: float = 5.0, failover_ttl_h: float = 1.0,
+                         budget_frac: float = 0.5,
+                         burst_start_frac: float = 0.4,
+                         burst_len_frac: float = 0.2,
+                         n_buckets: int = 1 << 14, backend: str = "jnp",
+                         seed: int = 0, log=print):
+    """The capacity-outage / overload scenario, end to end.
+
+    Timeline: the run starts at FULL capacity (no admission gate) so the
+    dual-tier caches warm the way production would; at
+    ``burst_start_frac`` the capacity OUTAGE begins — the serving tier is
+    swapped for one whose per-step token budget is ``budget_frac`` × the
+    stream's own steady-state miss demand (measured with the exact
+    TTL-cache simulator on the generated stream, the bench_hit_rate
+    calibration tool) while a flash crowd of uniform re-accesses from the
+    same population spikes demand — and after ``burst_len_frac`` capacity
+    recovers. Deferred misses degrade through the relaxed-TTL failover
+    tier (``failover_ttl_relax=None`` → staleness unbounded, SLA
+    defended); the per-phase report shows the chain engaging during the
+    outage and draining after it.
+    """
+    tower_cfg, params, tower_fn, features_of = build_tower(arch)
+    stream_cfg = StreamConfig(n_users=users, horizon_s=minutes * 60.0,
+                              seed=seed)
+    times_ms, uids = generate_stream_fast(
+        stream_cfg, InterArrivalDist(FIG6_KNOTS))
+    ttl_ms = int(ttl_min * MINUTE_MS)
+    # provision: steady-state miss demand per batch, from the exact
+    # infinite-capacity TTL simulation of THIS stream (warm-up excluded)
+    warm_ms = int(times_ms[len(times_ms) // 4]) if len(times_ms) else 0
+    miss_rate = 1.0 - simulate_hit_rate(times_ms, uids, ttl_ms,
+                                        measure_from_ms=warm_ms)
+    budget = max(budget_frac * miss_rate * batch, 1.0)
+
+    cache_cfg = CacheConfig(
+        model_id=1, model_type="ctr", cache_ttl_ms=ttl_ms,
+        failover_ttl_ms=int(failover_ttl_h * HOUR_MS),
+        n_buckets=n_buckets, ways=8, value_dim=tower_cfg.user_embed_dim,
+        backend=backend, infer_budget_per_step=budget,
+        failover_ttl_relax=None)
+    outage_srv = srv_lib.CachedEmbeddingServer(
+        cfg=cache_cfg, tower_fn=tower_fn, miss_budget=batch)
+    full_srv = srv_lib.CachedEmbeddingServer(
+        cfg=dataclasses.replace(cache_cfg, infer_budget_per_step=None),
+        tower_fn=tower_fn, miss_budget=batch)
+    state = srv_lib.init_server_state(cache_cfg, writebuf_capacity=batch * 4)
+
+    n_batches_total = max(len(uids) // batch, 1)
+    burst_lo = int(n_batches_total * burst_start_frac)
+    burst_hi = int(n_batches_total * (burst_start_frac + burst_len_frac))
+    burst_rng = np.random.default_rng(seed + 1)
+
+    phases = {p: ServingCounters() for p in ("pre", "outage", "post")}
+    stale = {p: [0.0, 0] for p in phases}          # [age sum, serve count]
+    t0 = time.perf_counter()
+    for b, lo in enumerate(range(0, len(uids) - batch + 1, batch)):
+        in_outage = burst_lo <= b < burst_hi
+        phase = ("outage" if in_outage
+                 else ("pre" if b < burst_lo else "post"))
+        server = outage_srv if in_outage else full_srv
+        ids = uids[lo:lo + batch]
+        if in_outage:
+            # flash crowd: same population, arrival order decorrelated —
+            # re-access demand beyond what the renewal stream carries
+            ids = burst_rng.integers(0, users, size=batch).astype(np.int64)
+        now = int(times_ms[lo + batch - 1])
+        keys = Key64.from_int(ids)
+        feats = features_of(ids, now)
+        res = server.jit_serve_step(params, state, keys, feats, now)
+        state = res.state
+        s = res.stats
+        phases[phase].merge(ServingCounters(
+            requests=int(s["requests"]), direct_hits=int(s["direct_hits"]),
+            tower_inferences=int(s["tower_inferences"]),
+            overflow=int(s["overflow"]),
+            failover_hits=int(s["failover_hits"]),
+            fallbacks=int(s["fallbacks"]), admitted=int(s["admitted"]),
+            deferred=int(s["deferred"]),
+            failover_serves=int(s["failover_serves"]), combined_writes=1))
+        n_fo = int(s["failover_serves"])
+        stale[phase][0] += float(s["failover_stale_ms"]) * n_fo
+        stale[phase][1] += n_fo
+        state = server.jit_flush(state, now)
+    wall = time.perf_counter() - t0
+
+    out = {"budget_per_step": round(budget, 2),
+           "budget_frac": budget_frac,
+           "provisioned_miss_rate": round(miss_rate, 4),
+           "wall_s": round(wall, 2), "phases": {}}
+    log(f"[serve-overload {arch}] budget={budget:.1f}/step "
+        f"({budget_frac:g}x of {miss_rate:.3f} miss demand) "
+        f"burst=batches[{burst_lo}:{burst_hi}] ({wall:.1f}s)")
+    for p, c in phases.items():
+        d = c.as_dict()
+        d["mean_failover_stale_ms"] = round(stale[p][0] / max(stale[p][1], 1),
+                                            1)
+        out["phases"][p] = d
+        log(f"  {p:>5}: requests={d['requests']} hit={d['hit_rate']:.3f}"
+            f" deferred={d['deferred']}"
+            f" failover_serves={d['failover_serves']}"
+            f" (stale {d['mean_failover_stale_ms']:.0f}ms)"
+            f" defaults={d['fallbacks']}"
+            f" sla_served={d['sla_served_rate']:.4f}")
+    return out
 
 
 def run_serving_multi(arch: str = "sasrec", minutes: int = 60,
@@ -235,6 +354,14 @@ def main():
                     help="serve the whole per-model registry as one "
                          "multi-model tier (mixed-model batches, one "
                          "dispatch per batch)")
+    ap.add_argument("--overload", action="store_true",
+                    help="SLA admission-control scenario: constrained "
+                         "inference budget + mid-run re-access burst; "
+                         "deferred misses degrade through the relaxed-TTL "
+                         "failover tier (DESIGN.md §8)")
+    ap.add_argument("--budget-frac", type=float, default=0.5,
+                    help="--overload: inference budget as a fraction of "
+                         "the stream's steady-state miss demand")
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--eviction", default="ttl", choices=["ttl", "lru"],
                     help="direct/failover victim order (paper §3.3); lru "
@@ -243,7 +370,22 @@ def main():
     ap.add_argument("--multi-buckets", type=int, default=1 << 12,
                     help="per-model direct-cache buckets in --multi mode")
     args = ap.parse_args()
-    if args.multi:
+    if args.overload:
+        if args.multi:
+            ap.error("--overload drives the single-model server; the "
+                     "multi-model registry sets budgets per model "
+                     "(CacheConfig.infer_budget_per_step)")
+        if args.no_cache:
+            ap.error("--overload is a cache-tier scenario; drop --no-cache")
+        if args.eviction != "ttl":
+            ap.error("--overload fixes eviction=ttl (the scenario "
+                     "isolates admission, not victim order)")
+        run_serving_overload(
+            arch=args.arch, minutes=args.minutes, users=args.users,
+            batch=args.batch,
+            ttl_min=5.0 if args.ttl_min is None else args.ttl_min,
+            budget_frac=args.budget_frac, backend=args.backend)
+    elif args.multi:
         # fail loudly on flags the multi tier cannot honor: TTLs come from
         # the per-model registry and the tier has no cache-off baseline.
         if args.no_cache:

@@ -1,0 +1,377 @@
+"""SLA-aware admission control (ISSUE 4): the degradation chain
+direct → relaxed-TTL failover → default embedding, the vectorized
+inference token bucket, and the failover_write config contract.
+
+The scenarios run the REAL serve path (serve_step → admission → chain →
+flush_dual) on both backends and check it against hand-computed oracles:
+the admission cutoff is deterministic (batch order within each model), so
+every row's provenance is predictable exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as C
+from repro.core import ratelimit as RL
+from repro.core import server as S
+from repro.core import writebuf as wb_lib
+from repro.core.config import NO_TTL_MS, CacheConfig
+from repro.core.hashing import Key64
+
+DIM = 4
+MIN = 60_000
+
+
+def keys_of(ids):
+    return Key64.from_int(np.asarray(ids, np.int64))
+
+
+def tower(params, feats):
+    return feats @ params
+
+
+def feats_of(ids):
+    return jnp.asarray(np.asarray(ids)[:, None] * np.ones(DIM), jnp.float32)
+
+
+def make_server(backend="jnp", budget=2, relax=None, **over):
+    cfg = CacheConfig(model_id=1, model_type="ctr", n_buckets=64, ways=4,
+                      value_dim=DIM, cache_ttl_ms=1000,
+                      failover_ttl_ms=5000, backend=backend,
+                      infer_budget_per_step=budget,
+                      failover_ttl_relax=relax, **over)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower, miss_budget=8)
+    return srv, S.init_server_state(cfg, writebuf_capacity=32), jnp.eye(DIM)
+
+
+# ===================================================== vectorized TokenBucket
+def test_infer_budget_partial_refill_exact_under_jit():
+    """Fractional refill is EXACT under jit: rate 0.25/step settles into
+    one grant exactly every 4th step (0.25 is a binary fraction —
+    float32 accumulation must not drift, and the rate+1 burst must never
+    clip the sub-1 carry)."""
+    cfg = CacheConfig(model_id=1, model_type="ctr",
+                      infer_budget_per_step=0.25)
+    rates, bursts, limited = RL.budget_table([cfg])
+    assert float(bursts[0]) == 1.25                    # rate + 1
+    budget = RL.init_infer_budget([cfg])
+
+    @jax.jit
+    def step(b):
+        return RL.admit_step(b, rates, bursts, limited,
+                             jnp.asarray([1], jnp.int32))
+
+    grants = []
+    for _ in range(16):
+        g, budget = step(budget)
+        grants.append(int(g[0]))
+    # starts full (1.25): grant at step 0 leaves the 0.25 carry, so the
+    # second grant lands at step 3; every 4th after that, exactly
+    assert grants == [1, 0, 0, 1] + [0, 0, 0, 1] * 3
+    assert float(budget.tokens[0]) == 0.0              # no residue drift
+
+
+def test_infer_budget_sustained_demand_delivers_exact_rate():
+    """Under sustained demand a fractional rate must deliver EXACTLY
+    rate × steps in the long run (a max(rate, 1) burst would clip the
+    carry and floor-quantize: 0.75/step would deliver only 0.5/step)."""
+    cfg = CacheConfig(model_id=1, model_type="ctr",
+                      infer_budget_per_step=0.75)
+    rates, bursts, limited = RL.budget_table([cfg])
+    budget = RL.init_infer_budget([cfg])
+    total = 0
+    for _ in range(40):
+        g, budget = RL.admit_step(budget, rates, bursts, limited,
+                                  jnp.asarray([10], jnp.int32))
+        total += int(g[0])
+    # initial bank 1.75 + 40 × 0.75 inflow − 0.75 clipped at the full
+    # bucket's first refill = 31 granted, zero residue
+    assert total == 31
+    assert float(budget.tokens[0]) == 0.0
+
+
+def test_infer_budget_burst_caps_and_unlimited_passthrough():
+    cfgs = [CacheConfig(model_id=0, model_type="a",
+                        infer_budget_per_step=3),
+            CacheConfig(model_id=1, model_type="b")]        # unlimited
+    rates, bursts, limited = RL.budget_table(cfgs)
+    np.testing.assert_array_equal(np.asarray(limited), [True, False])
+    budget = RL.init_infer_budget(cfgs)
+    # idle steps must not accrue beyond one burst (rate + 1) of tokens
+    for _ in range(5):
+        g, budget = RL.admit_step(budget, rates, bursts, limited,
+                                  jnp.asarray([0, 0], jnp.int32))
+    g, budget = RL.admit_step(budget, rates, bursts, limited,
+                              jnp.asarray([10, 10], jnp.int32))
+    assert int(g[0]) == 4                  # burst's worth, not 5 steps' worth
+    assert int(g[1]) == 10                 # unlimited: demand passes through
+    assert float(budget.tokens[1]) == 1.0  # ...and its tokens never move
+
+
+def test_infer_budget_trims_not_drops():
+    """Partial admission (the TokenBucket contract): a 5-demand step
+    against a 3-token bucket grants 3, not 0."""
+    cfg = CacheConfig(model_id=1, model_type="ctr", infer_budget_per_step=2)
+    rates, bursts, limited = RL.budget_table([cfg])
+    g, b = RL.admit_step(RL.init_infer_budget([cfg]), rates, bursts,
+                         limited, jnp.asarray([5], jnp.int32))
+    assert int(g[0]) == 3 and float(b.tokens[0]) == 0.0
+
+
+# ========================================================= degradation chain
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_degradation_chain_provenance_oracle(backend):
+    """The acceptance scenario with every row's provenance hand-computed.
+
+    Warm keys {0, 1, 2} (budget 2 starts with a full rate+1=3 bucket:
+    the t=0 batch admits three, computed+flushed into both tiers), then
+    at t=10s — direct TTL (1s) AND strict failover TTL (5s) both long
+    expired — serve keys 5..0 with a refilled grant of 2: the first two
+    misses in batch order (5, 4) are admitted and computed; deferred 3
+    was never cached → default; deferred 2, 1, 0 serve STALE from the
+    relaxed failover (age 10s > strict TTL), counted as failover_serves
+    but NOT strict failover_hits."""
+    srv, state, params = make_server(backend=backend, budget=2)
+    r = srv.serve_step(params, state, keys_of(range(6)), feats_of(range(6)),
+                       0)
+    assert int(r.stats["admitted"]) == 3          # full bucket = rate + 1
+    state = srv.flush(r.state, 0)
+
+    rev = [5, 4, 3, 2, 1, 0]
+    r = srv.serve_step(params, state, keys_of(rev), feats_of(rev), 10_000)
+    np.testing.assert_array_equal(
+        np.asarray(r.source),
+        [S.SRC_COMPUTED, S.SRC_COMPUTED, S.SRC_FALLBACK, S.SRC_FAILOVER,
+         S.SRC_FAILOVER, S.SRC_FAILOVER])
+    np.testing.assert_array_equal(np.asarray(r.age_ms),
+                                  [0, 0, -1, 10_000, 10_000, 10_000])
+    st = r.stats
+    assert int(st["admitted"]) == 2 and int(st["deferred"]) == 4
+    assert int(st["failover_serves"]) == 3
+    assert int(st["failover_hits"]) == 0          # beyond the strict TTL
+    assert int(st["fallbacks"]) == 1
+    assert float(st["failover_stale_ms"]) == pytest.approx(10_000.0)
+    # failover values are the stale embeddings computed at t=0
+    np.testing.assert_allclose(np.asarray(r.embeddings[3:]),
+                               np.asarray(feats_of([2, 1, 0])), rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_backend_parity_under_admission(backend):
+    """jnp and pallas agree bit-exactly through the admission chain (the
+    relaxed-TTL dual probe is still ONE kernel launch)."""
+    srv_j, state_j, params = make_server(backend="jnp", budget=3)
+    srv_b, state_b, _ = make_server(backend=backend, budget=3)
+    rng = np.random.default_rng(7)
+    for t in (0, 3000, 12_000):
+        ids = rng.integers(0, 24, size=16).astype(np.int64)
+        rj = srv_j.serve_step(params, state_j, keys_of(ids), feats_of(ids), t)
+        rb = srv_b.serve_step(params, state_b, keys_of(ids), feats_of(ids), t)
+        np.testing.assert_array_equal(np.asarray(rj.source),
+                                      np.asarray(rb.source))
+        np.testing.assert_array_equal(np.asarray(rj.age_ms),
+                                      np.asarray(rb.age_ms))
+        np.testing.assert_array_equal(np.asarray(rj.embeddings),
+                                      np.asarray(rb.embeddings))
+        for k in ("admitted", "deferred", "failover_serves",
+                  "failover_hits", "fallbacks"):
+            assert int(rj.stats[k]) == int(rb.stats[k]), k
+        state_j = srv_j.flush(rj.state, t)
+        state_b = srv_b.flush(rb.state, t)
+
+
+def test_budget_exhaustion_is_deterministic():
+    """Two identical runs produce identical grants, sources, and token
+    trajectories — admission is a pure function of (state, batch)."""
+    def run():
+        srv, state, params = make_server(budget=1.5)
+        out = []
+        for t in range(0, 10_000, 2000):
+            ids = [t // 2000, 0, 1, 2]
+            r = srv.jit_serve_step(params, state, keys_of(ids),
+                                   feats_of(ids), t)
+            out.append((np.asarray(r.source).tolist(),
+                        int(r.stats["admitted"]),
+                        float(r.state.budget.tokens[0])))
+            state = srv.jit_flush(r.state, t)
+        return out
+
+    assert run() == run()
+
+
+def test_relaxed_ttl_is_bounded_when_configured():
+    """failover_ttl_relax caps degradation-path staleness: an entry older
+    than the relax TTL defaults instead of serving."""
+    srv, state, params = make_server(budget=1, relax=8000)
+    # drain the full (rate+1 = 2 token) bucket: both t=0 keys computed
+    r = srv.serve_step(params, state, keys_of([1, 90]), feats_of([1, 90]),
+                       0)
+    assert int(r.stats["admitted"]) == 2
+    state = srv.flush(r.state, 0)
+    # t=7s, grant 1: key 2 computed; key 1 deferred — within relax (8s),
+    # beyond strict (5s) → stale failover serve
+    r = srv.serve_step(params, state, keys_of([2, 1]), feats_of([2, 1]),
+                       7000)
+    assert np.asarray(r.source).tolist() == [S.SRC_COMPUTED, S.SRC_FAILOVER]
+    assert int(r.stats["failover_hits"]) == 0
+    state = srv.flush(r.state, 7000)
+    # t=9s, grant 1: key 3 computed; deferred key 1's entry (t=0) is now
+    # beyond the relax TTL too → default embedding
+    r = srv.serve_step(params, state, keys_of([3, 1]), feats_of([3, 1]),
+                       9000)
+    assert np.asarray(r.source).tolist() == [S.SRC_COMPUTED, S.SRC_FALLBACK]
+
+
+def test_no_budget_keeps_legacy_behavior():
+    """infer_budget_per_step=None: every miss is admitted, nothing is
+    deferred, and the failover still validates at the STRICT TTL."""
+    srv, state, params = make_server(budget=None)
+    assert srv.cfg.resolved_failover_relax_ttl_ms() == 5000   # strict
+    r = srv.serve_step(params, state, keys_of(range(5)), feats_of(range(5)),
+                       0)
+    st = r.stats
+    assert int(st["admitted"]) == 5 and int(st["deferred"]) == 0
+    assert int(st["failover_serves"]) == int(st["failover_hits"]) == 0
+    state = srv.flush(r.state, 0)
+    # at t=10s the failover entries are past the strict TTL → NOT served
+    r = srv.serve_step(params, state, keys_of([9, 0]), feats_of([9, 0]),
+                       10_000)
+    assert S.SRC_FAILOVER not in np.asarray(r.source).tolist()
+
+
+# ========================================================== multi-model tier
+def test_multi_model_per_model_budgets_and_stats():
+    """One model budget-limited, one unlimited, one mixed batch: the (M,)
+    overload stats split exactly, and the unlimited model's failover
+    stays strict-TTL (its behavior is admission-free)."""
+    base = dict(model_type="ctr", n_buckets=64, ways=4, value_dim=DIM,
+                cache_ttl_ms=1000, failover_ttl_ms=5000)
+    cfgs = (CacheConfig(model_id=0, infer_budget_per_step=1, **base),
+            CacheConfig(model_id=1, **base))
+    srv = S.MultiModelServer(cfgs=cfgs, tower_fn=tower, miss_budget=8)
+    state = S.init_multi_server_state(cfgs, writebuf_capacity=32)
+    params = jnp.eye(DIM)
+    # relaxed probe column: NO_TTL for the budgeted model, strict for the
+    # unlimited one
+    np.testing.assert_array_equal(
+        np.asarray(srv._probe_policy.failover_ttl_ms), [NO_TTL_MS, 5000])
+
+    slots = jnp.asarray([0, 0, 0, 1, 1], jnp.int32)
+    ids = [10, 11, 12, 10, 11]
+    r = srv.serve_step(params, state, slots, keys_of(ids), feats_of(ids), 0)
+    st = r.stats
+    # model 0's full bucket holds rate+1 = 2 tokens → {10, 11} admitted,
+    # 12 deferred; unlimited model 1 admits everything
+    np.testing.assert_array_equal(np.asarray(st["per_model_admitted"]),
+                                  [2, 2])
+    np.testing.assert_array_equal(np.asarray(st["per_model_deferred"]),
+                                  [1, 0])
+    state = srv.flush(r.state, 0)
+
+    # t=10s, reversed batch order, model 0 refilled to 1 token: its first
+    # miss in batch order (id 12 — deferred at t=0, never computed) is
+    # admitted and computed; deferred {11, 10} were BOTH computed at t=0
+    # → two stale failover serves. Model 1 (unlimited): both recomputed.
+    slots2 = jnp.asarray([0, 0, 0, 1, 1], jnp.int32)
+    ids2 = [12, 11, 10, 10, 11]
+    r = srv.serve_step(params, state, slots2, keys_of(ids2), feats_of(ids2),
+                       10_000)
+    st = r.stats
+    np.testing.assert_array_equal(np.asarray(st["per_model_admitted"]),
+                                  [1, 2])
+    np.testing.assert_array_equal(
+        np.asarray(st["per_model_failover_serves"]), [2, 0])
+    np.testing.assert_array_equal(np.asarray(st["per_model_fallbacks"]),
+                                  [0, 0])
+    assert float(st["per_model_failover_stale_ms"][0]) == pytest.approx(
+        10_000.0)
+    src = np.asarray(r.source).tolist()
+    assert src == [S.SRC_COMPUTED, S.SRC_FAILOVER, S.SRC_FAILOVER,
+                   S.SRC_COMPUTED, S.SRC_COMPUTED]
+
+
+def test_multi_model_unlimited_registry_unchanged():
+    """A registry with NO budgets takes the admission-free path: probe
+    policy is the strict policy object itself and stats report zero
+    deferrals."""
+    base = dict(model_type="ctr", n_buckets=64, ways=4, value_dim=DIM,
+                cache_ttl_ms=1000, failover_ttl_ms=5000)
+    cfgs = (CacheConfig(model_id=0, **base), CacheConfig(model_id=1, **base))
+    srv = S.MultiModelServer(cfgs=cfgs, tower_fn=tower, miss_budget=8)
+    assert srv._probe_policy is srv.policy
+    state = S.init_multi_server_state(cfgs, writebuf_capacity=32)
+    r = srv.serve_step(jnp.eye(DIM), state, jnp.asarray([0, 1], jnp.int32),
+                       keys_of([5, 6]), feats_of([5, 6]), 0)
+    assert int(r.stats["deferred"]) == 0
+    assert int(r.stats["admitted"]) == 2
+
+
+# =========================================== failover_write config contract
+def test_failover_write_off_leaves_failover_cold():
+    """failover_write='off' flushes the direct tier only — explicitly, not
+    by accident — and matches wb_lib.flush bit-exactly."""
+    srv_off, state, params = make_server(budget=None, failover_write="off")
+    srv_dual, state_d, _ = make_server(budget=None)
+    r = srv_off.serve_step(params, state, keys_of(range(4)),
+                           feats_of(range(4)), 0)
+    state = srv_off.flush(r.state, 0)
+    rd = srv_dual.serve_step(params, state_d, keys_of(range(4)),
+                             feats_of(range(4)), 0)
+    state_d = srv_dual.flush(rd.state, 0)
+    # direct tiers agree; the off-server's failover is still empty
+    np.testing.assert_array_equal(state.direct.key_hi, state_d.direct.key_hi)
+    assert float(state.failover.occupancy()) == 0.0
+    assert float(state_d.failover.occupancy()) > 0.0
+
+
+def test_misconfiguration_errors():
+    base = dict(model_id=1, model_type="ctr")
+    with pytest.raises(ValueError, match="failover_write='dual'"):
+        CacheConfig(infer_budget_per_step=1, failover_write="off", **base)
+    with pytest.raises(ValueError, match="must be 'dual' or 'off'"):
+        CacheConfig(failover_write="single", **base)
+    with pytest.raises(ValueError, match="failover_ttl_relax"):
+        CacheConfig(failover_ttl_ms=5000, failover_ttl_relax=4000, **base)
+    with pytest.raises(ValueError, match="must be > 0"):
+        CacheConfig(infer_budget_per_step=0, **base)
+    cfg_off = CacheConfig(model_id=0, model_type="x", failover_write="off")
+    with pytest.raises(ValueError, match="failover_write='off'"):
+        S.MultiModelServer(cfgs=(cfg_off,), tower_fn=tower, miss_budget=2)
+
+
+def test_budget_state_survives_donation_and_flush():
+    """The token bucket lives in the donated ServerState: jit serve/flush
+    round-trips must carry the spent tokens, not reset them."""
+    srv, state, params = make_server(budget=2)
+    r = srv.jit_serve_step(params, state, keys_of(range(4)),
+                           feats_of(range(4)), 0)
+    assert float(r.state.budget.tokens[0]) == 0.0  # full 3-token bank spent
+    state = srv.jit_flush(r.state, 0)
+    assert float(state.budget.tokens[0]) == 0.0          # flush: untouched
+    r = srv.jit_serve_step(params, state, keys_of([7]), feats_of([7]), 2000)
+    # one step's refill (2 tokens), one miss admitted → 1 token left
+    assert float(r.state.budget.tokens[0]) == 1.0
+
+
+def test_grant_clipped_by_miss_budget_spends_nothing_extra():
+    """Tokens are charged only for inferences that RUN: a grant larger
+    than the miss-budget execution window is clipped BEFORE spending, and
+    the clipped rows count as deferred (they went down the chain), not as
+    admitted/overflow."""
+    cfg = CacheConfig(model_id=1, model_type="ctr", n_buckets=64, ways=4,
+                      value_dim=DIM, cache_ttl_ms=1000, failover_ttl_ms=5000,
+                      infer_budget_per_step=8)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower, miss_budget=2)
+    state = S.init_server_state(cfg, writebuf_capacity=32)
+    r = srv.serve_step(jnp.eye(DIM), state, keys_of(range(8)),
+                       feats_of(range(8)), 0)
+    st = r.stats
+    assert int(st["admitted"]) == 2                # the window's worth only
+    assert int(st["tower_inferences"]) == 2
+    assert int(st["overflow"]) == 0
+    assert int(st["deferred"]) == 6
+    # bucket: started full at rate+1=9, charged exactly the 2 that ran
+    assert float(r.state.budget.tokens[0]) == 7.0
