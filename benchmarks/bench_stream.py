@@ -1,0 +1,215 @@
+"""Streaming serve driver: scan-vs-loop dispatch overhead + coalescing.
+
+Two questions ISSUE 5 asks of the hot loop (DESIGN.md §9):
+
+* **Dispatch amortization** — the same Zipf stream served by the
+  per-step Python loop (one ``jit_serve_step`` dispatch + one stats
+  ``jax.device_get`` per step, the pre-scan driver) vs ``serve_many``
+  (S steps per dispatch, counters fetched once per dispatch). Sustained
+  req/s of both arms; the scan must win at S ≥ 64.
+* **In-batch inference coalescing** — tower calls saved per Zipf skew:
+  the same stream served with ``coalesce_misses`` off vs on, counting
+  actual tower forward passes. With skew a = 1.2 the coalesced tower
+  must run strictly less than once per request, and the coalesced
+  embeddings must match the uncoalesced ones bit for bit.
+
+Writes ``BENCH_stream.json`` (schema ``ercache-bench-stream/1``) — the
+trajectory file for the streaming axis; ``scripts/render_experiments.py``
+renders it into docs/benchmarks.md and CI asserts the two gates above.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import server as S
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64
+from repro.core.metrics import ServingCounters
+
+DIM = 32
+MIN = 60_000
+ZIPF_SKEWS = (1.1, 1.2, 1.5)
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_stream.json")
+
+
+def _tower(params, feats):
+    return feats @ params
+
+
+def _make_server(batch, n_buckets, coalesce=False):
+    cfg = CacheConfig(model_id=1, model_type="ctr", n_buckets=n_buckets,
+                      ways=8, value_dim=DIM, cache_ttl_ms=60 * MIN,
+                      failover_ttl_ms=120 * MIN, coalesce_misses=coalesce)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=_tower,
+                                  miss_budget=batch)
+    return srv
+
+
+def _zipf_stream(rng, a, n_users, n_steps, batch):
+    """(n_steps, batch) Zipf-skewed user ids — duplicate-heavy at high a."""
+    ids = (rng.zipf(a, size=(n_steps, batch)) - 1) % n_users
+    return ids.astype(np.int64)
+
+
+def _stage(ids):
+    n_steps, batch = ids.shape
+    flat = Key64.from_int(ids.reshape(-1))
+    keys = Key64(hi=flat.hi.reshape(n_steps, batch),
+                 lo=flat.lo.reshape(n_steps, batch))
+    # features as a function of the user: coalescing's broadcast premise
+    feats = jnp.asarray(
+        (ids[..., None] * np.arange(1, DIM + 1)) % 97, jnp.float32)
+    now = jnp.arange(n_steps, dtype=jnp.int32) * 100
+    return keys, feats, now
+
+
+def _run_loop(srv, keys, feats, now, batch, flush_every):
+    """The pre-scan driver: one dispatch + one stats fetch PER STEP."""
+    state = S.init_server_state(srv.cfg, writebuf_capacity=batch * 8)
+    params = jnp.eye(DIM, dtype=jnp.float32)
+    n_steps = keys.hi.shape[0]
+    counters = ServingCounters()
+    t0 = time.perf_counter()
+    for i in range(n_steps):
+        k = Key64(hi=keys.hi[i], lo=keys.lo[i])
+        res = srv.jit_serve_step(params, state, k, feats[i], now[i])
+        state = res.state
+        # batched transfer: ONE device_get for the step's stats dict
+        # (not per-key int() conversions) — still a sync every step
+        counters.merge(ServingCounters.from_stats(
+            jax.device_get(res.stats)))
+        if (i + 1) % flush_every == 0:
+            state = srv.jit_flush(state, now[i])
+    state = srv.jit_flush(state, now[-1])
+    jax.block_until_ready(jax.tree_util.tree_leaves(state))
+    return time.perf_counter() - t0, counters
+
+
+def _run_scan(srv, keys, feats, now, batch, flush_every, chunk_steps):
+    """The scan driver: chunk_steps steps per dispatch, ONE fetch each."""
+    state = S.init_server_state(srv.cfg, writebuf_capacity=batch * 8)
+    params = jnp.eye(DIM, dtype=jnp.float32)
+    n_steps = keys.hi.shape[0]
+    counters = ServingCounters()
+    t0 = time.perf_counter()
+    for lo in range(0, n_steps, chunk_steps):
+        hi = min(lo + chunk_steps, n_steps)
+        sl = slice(lo, hi)
+        k = Key64(hi=keys.hi[sl], lo=keys.lo[sl])
+        state, acc, _ = srv.jit_serve_many(
+            params, state, k, feats[sl], now[sl],
+            flush_every=flush_every, collect=False)
+        counters.merge(ServingCounters.from_stats(jax.device_get(acc)))
+    jax.block_until_ready(jax.tree_util.tree_leaves(state))
+    return time.perf_counter() - t0, counters
+
+
+def run(report):
+    quick = getattr(common, "QUICK", False)
+    batch = 128 if quick else 256
+    chunk_steps = 64
+    n_steps = 128 if quick else 256
+    n_users = batch * 8
+    flush_every = 4
+    n_buckets = 1 << 12
+    rng = np.random.default_rng(0)
+
+    # ---------------------------------------------- scan vs loop (a=1.2)
+    ids = _zipf_stream(rng, 1.2, n_users, n_steps, batch)
+    keys, feats, now = _stage(ids)
+    srv = _make_server(batch, n_buckets)
+    # warm both jits on a throwaway state (first chunk shape + tail shape)
+    _run_loop(srv, keys, feats, now, batch, flush_every)
+    _run_scan(srv, keys, feats, now, batch, flush_every, chunk_steps)
+    loop_s, c_loop = _run_loop(srv, keys, feats, now, batch, flush_every)
+    scan_s, c_scan = _run_scan(srv, keys, feats, now, batch, flush_every,
+                               chunk_steps)
+    assert c_scan.requests == c_loop.requests == n_steps * batch
+    # identical stream + flush schedule ⇒ identical serving outcome
+    assert c_scan.direct_hits == c_loop.direct_hits
+    reqs = n_steps * batch
+    loop_rps = reqs / loop_s
+    scan_rps = reqs / scan_s
+    speedup = scan_rps / loop_rps
+    report.add(f"stream_loop_B{batch}", loop_s / n_steps * 1e6,
+               f"{loop_rps:.0f}_req_per_s")
+    report.add(f"stream_scan_S{chunk_steps}_B{batch}",
+               scan_s / n_steps * 1e6,
+               f"{scan_rps:.0f}_req_per_s;speedup={speedup:.2f}x")
+
+    # ------------------------------- coalescing: tower calls vs Zipf skew
+    srv_on = _make_server(batch, n_buckets, coalesce=True)
+    per_skew = {}
+    for a in ZIPF_SKEWS:
+        ids_a = _zipf_stream(np.random.default_rng(1), a, n_users,
+                             n_steps, batch)
+        keys_a, feats_a, now_a = _stage(ids_a)
+        _, c_off = _run_scan(srv, keys_a, feats_a, now_a, batch,
+                             flush_every, chunk_steps)
+        _, c_on = _run_scan(srv_on, keys_a, feats_a, now_a, batch,
+                            flush_every, chunk_steps)
+        assert c_on.requests == c_off.requests
+        assert c_on.direct_hits == c_off.direct_hits
+        saved = c_off.tower_inferences - c_on.tower_inferences
+        per_skew[f"{a:g}"] = {
+            "tower_inferences_uncoalesced": c_off.tower_inferences,
+            "tower_inferences_coalesced": c_on.tower_inferences,
+            "tower_calls_saved": saved,
+            "infer_per_request_uncoalesced":
+                c_off.tower_inferences / c_off.requests,
+            "infer_per_request_coalesced":
+                c_on.tower_inferences / c_on.requests,
+        }
+        report.add(f"stream_coalesce_zipf{a:g}", 0.0,
+                   f"saved={saved}_tower_calls"
+                   f";per_req={c_on.tower_inferences / c_on.requests:.3f}")
+
+    # --------------------------- coalesced-vs-uncoalesced output parity
+    par_ids = _zipf_stream(np.random.default_rng(2), 1.2, n_users, 8,
+                           batch)
+    par_keys, par_feats, par_now = _stage(par_ids)
+    params = jnp.eye(DIM, dtype=jnp.float32)
+    _, _, ys_off = srv.serve_many(
+        params, S.init_server_state(srv.cfg, writebuf_capacity=batch * 8),
+        par_keys, par_feats, par_now, flush_every=flush_every)
+    _, _, ys_on = srv_on.serve_many(
+        params,
+        S.init_server_state(srv_on.cfg, writebuf_capacity=batch * 8),
+        par_keys, par_feats, par_now, flush_every=flush_every)
+    try:
+        for x, y in zip(jax.tree_util.tree_leaves(ys_off),
+                        jax.tree_util.tree_leaves(ys_on)):
+            np.testing.assert_array_equal(x, y)
+        parity = "exact"
+    except AssertionError:
+        parity = "MISMATCH"          # recorded; the CI gate fails on it
+
+    metrics = {
+        "schema": "ercache-bench-stream/1",
+        "quick": quick,
+        "backend": jax.default_backend(),
+        "batch": batch,
+        "chunk_steps": chunk_steps,
+        "n_steps": n_steps,
+        "users": n_users,
+        "flush_every": flush_every,
+        "zipf_a": 1.2,
+        "loop_req_per_s": loop_rps,
+        "scan_req_per_s": scan_rps,
+        "scan_vs_loop_speedup": speedup,
+        "per_skew": per_skew,
+        "coalesce_parity": parity,
+    }
+    if getattr(common, "WRITE_JSON", True):
+        with open(JSON_PATH, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+    return metrics

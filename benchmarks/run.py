@@ -34,11 +34,12 @@ BENCHES = [
     ("multi_model", "benchmarks.bench_multi_model"),
     ("eviction", "benchmarks.bench_eviction"),
     ("overload", "benchmarks.bench_overload"),
+    ("stream", "benchmarks.bench_stream"),
 ]
 
 # the fast, serve-path-focused subset run by CI (--quick with no --only)
 QUICK_BENCHES = ("kernel_probe", "serve_path", "multi_model", "eviction",
-                 "overload")
+                 "overload", "stream")
 
 
 def main() -> None:

@@ -229,6 +229,64 @@ def _dedupe(keys: Key64, live: jnp.ndarray, salt=None) -> jnp.ndarray:
     return jnp.zeros((B,), bool).at[order].set(winner_sorted)
 
 
+def dedupe_first_groups(keys: Key64, live: jnp.ndarray, salt=None):
+    """ONE lexsort: first-occurrence dedupe + duplicate-group broadcast map.
+
+    The serve path's in-batch inference coalescing (DESIGN.md §9): among
+    the ``live`` rows (cache misses), pick the FIRST occurrence of each
+    distinct key as the group's *representative* — the row whose tower
+    inference every duplicate reuses — and return the broadcast map.
+
+    First (not last, as :func:`_dedupe`'s last-writer-wins) because
+    admission control grants inferences in batch arrival order: a user's
+    place in the queue is where they FIRST appeared.
+
+    ``salt`` widens key identity exactly as in :func:`_dedupe` (the
+    multi-model tier passes model slots: the same user queried for two
+    models is two inferences, not one).
+
+    Returns ``(rep, src_row)``:
+
+    * ``rep`` (B,) bool — True on each group's representative row;
+    * ``src_row`` (B,) int32 — for every live row, the batch index of its
+      representative (its own index on rep rows); -1 on dead rows.
+    """
+    B = keys.hi.shape[0]
+    idx = jnp.arange(B, dtype=jnp.int32)
+    dead = (~live).astype(jnp.int32)
+    # Reversed index column: the sort's within-group "last" is then the
+    # smallest original index — the first occurrence.
+    cols = [B - 1 - idx, keys.lo, keys.hi]
+    if salt is not None:
+        salt = jnp.asarray(salt, jnp.int32)
+        cols.append(salt)
+    cols.append(dead)
+    order = jnp.lexsort(tuple(cols))
+    s_d = dead[order]
+    s_hi = keys.hi[order]
+    s_lo = keys.lo[order]
+    nxt = lambda a, fill: jnp.concatenate([a[1:], jnp.full((1,), fill,
+                                                           a.dtype)])
+    same_as_next = ((s_d == nxt(s_d, -1)) & (s_hi == nxt(s_hi, 0))
+                    & (s_lo == nxt(s_lo, 0)))
+    if salt is not None:
+        s_s = salt[order]
+        same_as_next = same_as_next & (s_s == nxt(s_s, -1))
+    rep_sorted = (~same_as_next) & (s_d == 0)
+    rep = jnp.zeros((B,), bool).at[order].set(rep_sorted)
+    # Broadcast map: groups are contiguous in sorted order; scatter each
+    # group's (unique) representative index by dense group id, gather
+    # back. A row starts a group iff its predecessor didn't match it —
+    # the one-position shift of same_as_next.
+    is_start = jnp.concatenate([jnp.ones((1,), bool), ~same_as_next[:-1]])
+    gid = jnp.cumsum(is_start.astype(jnp.int32)) - 1
+    s_idx = idx[order]
+    rep_of_g = (jnp.full((B,), -1, jnp.int32)
+                .at[gid].max(jnp.where(rep_sorted, s_idx, -1)))
+    src_row = jnp.zeros((B,), jnp.int32).at[order].set(rep_of_g[gid])
+    return rep, jnp.where(live, src_row, jnp.int32(-1))
+
+
 def _bucket_rank(bucket: jnp.ndarray, winner: jnp.ndarray,
                  n_buckets: int) -> jnp.ndarray:
     """Per-bucket rank of the winners (batch order within each bucket), via
@@ -534,6 +592,9 @@ class ModelPolicy(NamedTuple):
     infer_budget: jnp.ndarray      # (M,) float32 — tokens per serve step
     budget_limited: jnp.ndarray    # (M,) bool — admission control on
     failover_relax_ttl_ms: jnp.ndarray  # (M,) int32
+    # In-batch inference coalescing (DESIGN.md §9): dedupe this model's
+    # admitted misses within a batch, one tower run per distinct user.
+    coalesce: jnp.ndarray          # (M,) bool
 
     @property
     def n_models(self) -> int:
@@ -574,6 +635,7 @@ def policy_from_configs(cfgs) -> ModelPolicy:
         budget_limited=limited,
         failover_relax_ttl_ms=jnp.asarray(
             [c.resolved_failover_relax_ttl_ms() for c in cfgs], jnp.int32),
+        coalesce=jnp.asarray([c.coalesce_misses for c in cfgs], bool),
     )
 
 

@@ -63,6 +63,15 @@ class CacheConfig:
     # staleness for SLA compliance, the paper's failover rationale. Only
     # consulted when admission control is on; must be >= failover_ttl_ms.
     failover_ttl_relax: Optional[int] = None
+    # In-batch inference coalescing (DESIGN.md §9): dedupe this model's
+    # admitted-miss keys within each serve batch, run the user tower ONCE
+    # per distinct user, and broadcast the embedding to the duplicate
+    # queries. Tower FLOPs and budget tokens are charged per UNIQUE
+    # inference, so skewed (Zipf) traffic pays sublinearly. Off by
+    # default: the uncoalesced path is the bit-exact legacy behavior,
+    # and coalescing assumes user-tower features are a function of the
+    # user (duplicates serve the representative's embedding).
+    coalesce_misses: bool = False
     # Which tiers the async flush populates: "dual" (default — every
     # computed embedding warms BOTH the direct and the failover slab, so
     # the failover can actually assist) or "off" (direct-only; the

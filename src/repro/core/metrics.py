@@ -37,6 +37,27 @@ class ServingCounters:
         for f in dataclasses.fields(self):
             setattr(self, f.name, getattr(self, f.name) + getattr(o, f.name))
 
+    @classmethod
+    def from_stats(cls, stats) -> "ServingCounters":
+        """Build counters from a ``serve_step`` stats dict or a
+        ``serve_many`` device-resident accumulator (DESIGN.md §9).
+
+        Callers fetch the whole pytree with ONE ``jax.device_get`` and
+        hand it over — no per-key host syncs. ``steps`` (the scan
+        driver's iteration count) maps to ``combined_writes``: one
+        grouped async write per serve step, the paper's §3.5 combining
+        unit.
+        """
+        g = lambda k: int(stats[k]) if k in stats else 0
+        return cls(
+            requests=g("requests"), direct_hits=g("direct_hits"),
+            tower_inferences=g("tower_inferences"),
+            tower_failures=g("tower_failures"), overflow=g("overflow"),
+            failover_hits=g("failover_hits"), fallbacks=g("fallbacks"),
+            admitted=g("admitted"), deferred=g("deferred"),
+            failover_serves=g("failover_serves"),
+            combined_writes=g("steps") or g("combined_writes"))
+
     @property
     def hit_rate(self) -> float:
         return self.direct_hits / max(self.requests, 1)

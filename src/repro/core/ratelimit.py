@@ -15,6 +15,14 @@ Two limiters live here:
   what makes cache misses *admission-controlled*: misses over a model's
   budget are deferred to the failover degradation chain instead of
   queueing on exhausted inference capacity.
+
+Tokens are denominated in ACTUAL tower forward passes: the servers
+compose refill → grant_from → spend so a token is charged only for an
+inference that runs, and — with in-batch coalescing on (DESIGN.md §9) —
+once per DISTINCT user: demand, grants, and charges all count unique
+inferences, so duplicates of an admitted user ride token-free and a
+skewed batch never starves distinct users by burning tokens on
+duplicates.
 """
 from __future__ import annotations
 

@@ -36,6 +36,18 @@ with distinct ``admitted`` / ``deferred`` / ``failover_serves`` /
 both observable. Admitted inferences still write back to BOTH tiers on
 flush, which is what keeps the failover slab warm enough to catch the
 deferred traffic.
+
+**Streaming serve** (DESIGN.md §9): ``serve_many`` runs S serve steps in
+ONE dispatch — a ``lax.scan`` over a pre-staged (S, B) stream with the
+async flush folded in every F steps and a device-resident additive
+counter pytree threaded through the carry, fetched ONCE per dispatch
+instead of per step. **In-batch coalescing**
+(``CacheConfig.coalesce_misses``) dedupes the admitted-miss keys inside
+each step (the ``cache._dedupe`` lexsort machinery, first occurrence
+wins), runs the tower once per distinct user, broadcasts the embedding
+to the duplicates, and charges the inference token budget per UNIQUE
+inference — tower FLOPs drop with traffic skew while the
+``admitted``/``sla_served_rate`` ledger keeps its per-request meaning.
 """
 from __future__ import annotations
 
@@ -109,12 +121,83 @@ def _per_model_miss_rank(slots, miss, n_models: int) -> jnp.ndarray:
     return cache_lib._bucket_rank(slots, miss, n_models)
 
 
+# ------------------------------------------------- serve_many accumulators
+# The additive subset of serve_step's stats dict: what the scan driver's
+# device-resident counter pytree carries across steps (DESIGN.md §9).
+# Means are NOT additive, so the *_sum_ms / *_count raw keys ride instead
+# and ServingCounters / the launchers derive means after the single
+# per-dispatch fetch.
+_ACC_I32 = ("requests", "direct_hits", "tower_inferences", "tower_failures",
+            "overflow", "admitted", "deferred", "failover_hits",
+            "failover_serves", "fallbacks", "served_age_count")
+_ACC_F32 = ("failover_stale_sum_ms", "served_age_sum_ms")
+_ACC_PM_I32 = ("per_model_requests", "per_model_direct_hits",
+               "per_model_failover_hits", "per_model_fallbacks",
+               "per_model_admitted", "per_model_deferred",
+               "per_model_failover_serves")
+_ACC_PM_F32 = ("per_model_failover_stale_sum_ms",)
+
+
+def _zero_acc(n_models: Optional[int] = None) -> dict:
+    """The scan carry's zeroed counter pytree. ``steps`` counts scan
+    iterations (one grouped async write per step — the combined_writes
+    analogue)."""
+    acc = {k: jnp.int32(0) for k in _ACC_I32}
+    acc.update({k: jnp.float32(0) for k in _ACC_F32})
+    acc["steps"] = jnp.int32(0)
+    if n_models is not None:
+        acc.update({k: jnp.zeros((n_models,), jnp.int32)
+                    for k in _ACC_PM_I32})
+        acc.update({k: jnp.zeros((n_models,), jnp.float32)
+                    for k in _ACC_PM_F32})
+    return acc
+
+
+def _acc_add(acc: dict, stats: dict) -> dict:
+    """One scan step's counter contribution — device adds, no host sync."""
+    out = {k: acc[k] + stats[k] for k in acc if k != "steps"}
+    out["steps"] = acc["steps"] + jnp.int32(1)
+    return out
+
+
+def _serve_many_scan(step_fn, flush_fn, state, payload, now_ms,
+                     failure_mask, acc0, *, flush_every: int, collect: bool):
+    """The scan driver shared by both servers' ``serve_many``: scan
+    ``step_fn(state, payload_row, now, fail) -> ServeResult`` over the
+    staged stream, accumulating counters in the carry, folding the flush
+    in every ``flush_every`` steps (statically inlined at 1, ``lax.cond``
+    otherwise, 0 = tail only) and always tail-flushing."""
+    S = now_ms.shape[0]
+    flush_every = int(flush_every)
+
+    def body(carry, x):
+        st, acc = carry
+        i, pay, now, fail = x
+        res = step_fn(st, pay, now, fail)
+        acc = _acc_add(acc, res.stats)
+        st = res.state
+        if flush_every == 1:
+            st = flush_fn(st, now)
+        elif flush_every > 1:
+            st = jax.lax.cond((i + 1) % flush_every == 0,
+                              lambda s: flush_fn(s, now), lambda s: s, st)
+        ys = ((res.embeddings, res.source, res.age_ms) if collect
+              else None)
+        return (st, acc), ys
+
+    xs = (jnp.arange(S, dtype=jnp.int32), payload, now_ms, failure_mask)
+    (state, acc), ys = jax.lax.scan(body, (state, acc0), xs)
+    return flush_fn(state, now_ms[-1]), acc, ys
+
+
 def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
                 params, features, keys: Key64, now_ms, failure_mask,
                 direct, fo, writebuf: WriteBuffer,
                 model_slots=None, n_models: Optional[int] = None,
                 admit: Optional[jnp.ndarray] = None,
-                fo_strict_hit: Optional[jnp.ndarray] = None):
+                fo_strict_hit: Optional[jnp.ndarray] = None,
+                infer: Optional[jnp.ndarray] = None,
+                src_row: Optional[jnp.ndarray] = None):
     """Steps (2)–(4) of the Fig. 3 serve sequence, shared by the single-
     and multi-model servers (step (1), the dual probe, differs):
 
@@ -130,33 +213,54 @@ def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
     probe and ``fo_strict_hit`` (B,) its strict-TTL subset (None → same as
     ``fo.hit``), so ``failover_hits`` keeps its strict meaning while
     ``failover_serves`` counts every failover-tier serve on the chain.
+
+    In-batch coalescing (DESIGN.md §9) splits "runs the tower" from "is
+    served by the tower": ``infer`` (B,) bool marks the rows that RUN a
+    tower inference (the duplicate-group representatives; None → same as
+    ``admit``) and ``src_row`` (B,) int32 maps every admitted row to the
+    batch row whose tower output serves it (None → the identity, the
+    uncoalesced bit-exact legacy path). ``admit`` then covers every
+    duplicate of an admitted representative while the tower and the token
+    budget pay once per distinct user.
+
     Returns (embeddings, source, age, new_writebuf, stats).
     """
     B = keys.hi.shape[0]
     miss = ~direct.hit
     if admit is None:
         admit = miss
+    if infer is None:
+        infer = admit
     if fo_strict_hit is None:
         fo_strict_hit = fo.hit
 
-    # (2) compaction: ADMITTED misses first, stable -----------------------
-    order = jnp.argsort(~admit, stable=True)            # admitted first
+    # (2) compaction: rows that RUN the tower first, stable ---------------
+    order = jnp.argsort(~infer, stable=True)            # inference rows first
     sel = order[:miss_budget]                           # batch indices
-    sel_is_adm = admit[sel]                             # tail may be hits
+    sel_is_inf = infer[sel]                             # tail may be hits
 
     sel_features = jax.tree_util.tree_map(lambda x: x[sel], features)
     towered = tower_fn(params, sel_features)            # (miss_budget, D)
     towered = towered.astype(direct.values.dtype)
 
     sel_failed = failure_mask[sel]
-    sel_ok = sel_is_adm & ~sel_failed                   # produced embedding
+    sel_ok = sel_is_inf & ~sel_failed                   # produced embedding
 
-    # (3) scatter computed rows back; the degradation chain for the rest —
-    # deferred (over budget) ∪ overflow (over miss_budget) ∪ failed all
-    # consult the failover probe, then the default embedding.
-    computed = jnp.zeros((B,), bool).at[sel].set(sel_ok)
-    emb = direct.values
-    emb = emb.at[sel].set(jnp.where(sel_ok[:, None], towered, emb[sel]))
+    # (3) scatter computed rows back (broadcast to duplicates when
+    # coalescing); the degradation chain for the rest — deferred (over
+    # budget) ∪ overflow (over miss_budget) ∪ failed all consult the
+    # failover probe, then the default embedding.
+    if src_row is None:
+        computed = jnp.zeros((B,), bool).at[sel].set(sel_ok)
+        emb = direct.values
+        emb = emb.at[sel].set(jnp.where(sel_ok[:, None], towered, emb[sel]))
+    else:
+        src = jnp.maximum(src_row, 0)     # -1 (no group) rows gated below
+        ok_row = jnp.zeros((B,), bool).at[sel].set(sel_ok)
+        computed = admit & ok_row[src]
+        tower_rows = jnp.zeros_like(direct.values).at[sel].set(
+            jnp.where(sel_is_inf[:, None], towered, 0))
+        emb = jnp.where(computed[:, None], tower_rows[src], direct.values)
     unresolved = miss & ~computed
     use_fo = unresolved & fo.hit
     emb = jnp.where(use_fo[:, None], fo.values.astype(emb.dtype), emb)
@@ -186,14 +290,23 @@ def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
     # wrap on a batch of hour-scale ages) — the SLA trade's cost side.
     fo_age_sum = jnp.sum(jnp.where(use_fo, fo.age_ms, 0)
                          .astype(jnp.float32))
+    # age >= 0: a hit written and read in the same millisecond is a
+    # legitimate age-0 serve and must count in both numerator and
+    # denominator (misses carry age -1 and stay excluded).
+    age_sum = jnp.sum(jnp.where(age >= 0, age, 0).astype(jnp.float32))
+    age_served = jnp.sum((age >= 0).astype(jnp.int32))
     stats = {
         "requests": jnp.int32(B),
         "direct_hits": count(direct.hit),
-        "tower_inferences": count(sel_is_adm),
-        "tower_failures": count(sel_is_adm & sel_failed),
-        # admitted misses beyond the miss-budget window (never attempted)
-        "overflow": count(admit) - count(sel_is_adm),
-        # admission-control ledger: deferred = misses the budget gated off
+        # actual tower forward passes: one per UNIQUE admitted user when
+        # coalescing, one per admitted miss row otherwise
+        "tower_inferences": count(sel_is_inf),
+        "tower_failures": count(sel_is_inf & sel_failed),
+        # wanted inferences beyond the miss-budget window (never attempted)
+        "overflow": count(infer) - count(sel_is_inf),
+        # admission-control ledger: admitted counts every COVERED request
+        # row (duplicates of an admitted user included, so deferred keeps
+        # its per-request meaning); deferred = misses the budget gated off
         "admitted": count(admit),
         "deferred": count(miss) - count(admit),
         # strict-TTL failover recoveries (the pre-admission meaning) vs
@@ -203,12 +316,15 @@ def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
         "fallbacks": count(fallback),
         "failover_stale_ms": fo_age_sum /
             jnp.maximum(count(use_fo), 1).astype(jnp.float32),
-        # age >= 0: a hit written and read in the same millisecond is a
-        # legitimate age-0 serve and must count in both numerator and
-        # denominator (misses carry age -1 and stay excluded).
-        "mean_age_ms": jnp.sum(jnp.where(age >= 0, age, 0)
-                               .astype(jnp.float32)) /
-            jnp.maximum(jnp.sum((age >= 0).astype(jnp.int32)), 1),
+        "mean_age_ms": age_sum /
+            jnp.maximum(age_served, 1).astype(jnp.float32),
+        # Additive twins of the mean keys above: means cannot be summed
+        # across steps, so serve_many's device-resident accumulator
+        # (DESIGN.md §9) carries the raw sums and derives means on the
+        # host after the single per-dispatch fetch.
+        "failover_stale_sum_ms": fo_age_sum,
+        "served_age_sum_ms": age_sum,
+        "served_age_count": age_served,
     }
     if model_slots is not None:
         # per-model (M,) breakdowns for Table-1-style accounting
@@ -223,9 +339,12 @@ def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
         stats["per_model_admitted"] = per_model(admit)
         stats["per_model_deferred"] = per_model(miss) - per_model(admit)
         stats["per_model_failover_serves"] = per_model(use_fo)
+        pm_stale_sum = per_model(jnp.where(use_fo, fo.age_ms, 0),
+                                 jnp.float32)
         stats["per_model_failover_stale_ms"] = (
-            per_model(jnp.where(use_fo, fo.age_ms, 0), jnp.float32)
+            pm_stale_sum
             / jnp.maximum(per_model(use_fo), 1).astype(jnp.float32))
+        stats["per_model_failover_stale_sum_ms"] = pm_stale_sum
     return emb, source, age.astype(jnp.int32), new_wb, stats
 
 
@@ -283,42 +402,106 @@ class CachedEmbeddingServer:
         if cfg.resolved_touch():
             new_tb = wb_lib.touch_append(new_tb, direct, fo, now_ms)
 
-        # (1c) admission control: refill the token bucket, grant this
+        # (1c) in-batch coalescing (DESIGN.md §9): dedupe the missed keys
+        # so admission and the tower operate on UNIQUE users — the first
+        # occurrence of each distinct key is the group's representative,
+        # duplicates reuse its embedding. Statically skipped (src_row
+        # None, the bit-exact legacy path) when the config doesn't opt in.
+        miss = ~direct.hit
+        infer = src_row = None
+        if cfg.coalesce_misses:
+            rep, src_row = cache_lib.dedupe_first_groups(keys, miss)
+            unit = rep                       # unit of inference demand
+        else:
+            unit = miss
+
+        # (1d) admission control: refill the token bucket, grant this
         # step's tower inferences, defer the rest (statically skipped —
         # admit=None — when no budget is configured). The grant is capped
         # by the miss-budget compaction window too, and tokens are only
         # charged for inferences that actually RUN (failed attempts
-        # included) — never for grants the window clips.
+        # included) — never for grants the window clips. With coalescing
+        # on, demand / grants / charges are all per UNIQUE user; an
+        # admitted user's duplicates ride along token-free.
         admit = fo_strict = None
         new_budget = state.budget
         if self._admission:
             fo_strict = fo.hit & (fo.age_ms <= jnp.int32(cfg.failover_ttl_ms))
-            miss = ~direct.hit
-            demand = jnp.sum(miss.astype(jnp.int32))[None]       # (1,)
+            demand = jnp.sum(unit.astype(jnp.int32))[None]       # (1,)
             refilled = rl_lib.refill(state.budget, self._budget_rates,
                                      self._budget_bursts)
             grant = rl_lib.grant_from(refilled, self._budget_limited,
                                       demand)
-            # batch-order rank of each miss: first grant[0] are admitted,
-            # clipped to the tower's execution window
-            m_i = miss.astype(jnp.int32)
-            rank = jnp.cumsum(m_i) - m_i                         # exclusive
-            admit = miss & (rank < jnp.minimum(grant[0],
+            # batch-order rank of each inference unit: first grant[0] are
+            # admitted, clipped to the tower's execution window
+            u_i = unit.astype(jnp.int32)
+            rank = jnp.cumsum(u_i) - u_i                         # exclusive
+            infer = unit & (rank < jnp.minimum(grant[0],
                                                jnp.int32(self.miss_budget)))
-            spent = jnp.sum(admit.astype(jnp.int32))[None]
+            spent = jnp.sum(infer.astype(jnp.int32))[None]
             new_budget = rl_lib.spend(refilled, self._budget_limited, spent)
+            if cfg.coalesce_misses:
+                # covered rows: every duplicate of an admitted user
+                admit = miss & infer[jnp.maximum(src_row, 0)]
+            else:
+                admit = infer
+        elif cfg.coalesce_misses:
+            infer = rep          # window clipping happens in the tail
 
         # (2)–(4): shared serve tail
         emb, source, age, new_wb, stats = _serve_tail(
             self.tower_fn, self.miss_budget, self.fallback_value, params,
             features, keys, now_ms, failure_mask, direct, fo,
-            state.writebuf, admit=admit, fo_strict_hit=fo_strict)
+            state.writebuf, admit=admit, fo_strict_hit=fo_strict,
+            infer=infer, src_row=src_row)
         return ServeResult(
             embeddings=emb, source=source, age_ms=age,
             state=ServerState(direct=state.direct, failover=state.failover,
                               writebuf=new_wb, touchbuf=new_tb,
                               budget=new_budget),
             stats=stats)
+
+    # ------------------------------------------------------------ serve_many
+    def serve_many(self, params, state: ServerState, keys: Key64,
+                   features, now_ms, failure_mask: Optional[jnp.ndarray] = None,
+                   *, flush_every: int = 1, collect: bool = True):
+        """Device-resident streaming driver (DESIGN.md §9): run S serve
+        steps in ONE dispatch via ``lax.scan`` over a pre-staged (S, B)
+        stream, flush folded in, counters accumulated on device.
+
+        ``keys`` is an (S, B) Key64, ``features`` a pytree with leading
+        (S, B) axes, ``now_ms`` (S,) the per-step clock, ``failure_mask``
+        (S, B) bool (None → no failures). ``flush_every=F`` folds the
+        async flush into the scan every F steps (``lax.cond``); 0 defers
+        every write to the tail — deferred records beyond the write
+        buffer's capacity drop oldest-first (the ring contract), so size
+        the buffer for F (or S) steps of misses. A tail flush ALWAYS
+        runs (a no-op on a drained buffer), so the returned state's
+        buffers are empty; with ``flush_every=1`` (the launcher default)
+        a stream split across serve_many dispatches is bit-identical to
+        the unsplit run — at other cadences the tail flush lands where
+        the dispatch boundary falls, exactly as a Python loop flushing
+        at chunk ends would.
+
+        Returns ``(state, counters, outputs)``: ``counters`` is the
+        additive device-resident accumulator (fetch with ONE
+        ``jax.device_get``; feed :meth:`ServingCounters.from_stats`) and
+        ``outputs`` is ``(embeddings (S, B, D), source, age_ms)`` or None
+        with ``collect=False`` (throughput drivers that never read the
+        embeddings back skip materializing them).
+        """
+        now_ms = jnp.asarray(now_ms, jnp.int32)
+        if failure_mask is None:
+            failure_mask = jnp.zeros(keys.hi.shape, bool)
+
+        def step(st, pay, now, fail):
+            k, f = pay
+            return self.serve_step(params, st, k, f, now, fail)
+
+        return _serve_many_scan(
+            step, self.flush, state, (keys, features), now_ms,
+            failure_mask, _zero_acc(), flush_every=flush_every,
+            collect=collect)
 
     # ----------------------------------------------------------------- flush
     def flush(self, state: ServerState, now_ms) -> ServerState:
@@ -357,6 +540,11 @@ class CachedEmbeddingServer:
     @functools.cached_property
     def jit_serve_step(self):
         return jax.jit(self.serve_step, donate_argnums=(1,))
+
+    @functools.cached_property
+    def jit_serve_many(self):
+        return jax.jit(self.serve_many, donate_argnums=(1,),
+                       static_argnames=("flush_every", "collect"))
 
     @functools.cached_property
     def jit_flush(self):
@@ -452,6 +640,11 @@ class MultiModelServer:
         # model in the registry tracks access recency.
         object.__setattr__(self, "_any_touch",
                            any(c.resolved_touch() for c in self.cfgs))
+        # Same static gate for in-batch coalescing (DESIGN.md §9): the
+        # dedupe/broadcast plumbing only traces when some model opts in;
+        # per-model opt-in is realized through the policy's coalesce mask.
+        object.__setattr__(self, "_any_coalesce",
+                           any(c.coalesce_misses for c in self.cfgs))
         # Admission control (DESIGN.md §8): static gate + eager budget
         # tables. When ANY model has a budget, the failover is probed at
         # the per-model RELAXED TTLs (strict for budget-less models, so
@@ -514,41 +707,66 @@ class MultiModelServer:
             new_tb = wb_lib.touch_append(new_tb, direct, fo, now_ms,
                                          mask=self.policy.touch[slots])
 
-        # (1c) admission control: ONE vectorized bucket update grants every
-        # model's tower share; each model's misses are admitted in batch
+        # (1c) in-batch coalescing (DESIGN.md §9): dedupe missed
+        # (model, user) pairs — the dedupe is model-salted, so the same
+        # user queried for two models stays two inferences — gated per
+        # query by each model's coalesce policy. Misses of non-coalescing
+        # models each stand alone (their own representative).
+        miss = ~direct.hit
+        infer = src_row = None
+        if self._any_coalesce:
+            co = self.policy.coalesce[slots]
+            rep, src_co = cache_lib.dedupe_first_groups(keys, miss & co,
+                                                        salt=slots)
+            unit = rep | (miss & ~co)
+            src_row = jnp.where(miss & ~co, jnp.arange(B, dtype=jnp.int32),
+                                src_co)
+        else:
+            unit = miss
+
+        # (1d) admission control: ONE vectorized bucket update grants every
+        # model's tower share; each model's inference units (unique users
+        # when coalescing, miss rows otherwise) are admitted in batch
         # order up to its grant, the rest deferred to the degradation
         # chain. The total admission is additionally clipped to the
         # miss-budget execution window (batch order across models), and
-        # each model's tokens are charged only for inferences that RUN.
+        # each model's tokens are charged only for inferences that RUN —
+        # duplicates of an admitted user ride along token-free.
         # Statically skipped when no model has a budget.
         admit = fo_strict = None
         new_budget = state.budget
         if self._any_admission:
             fo_strict = fo.hit & (fo.age_ms
                                   <= self.policy.failover_ttl_ms[slots])
-            miss = ~direct.hit
             demand = (jnp.zeros((self.n_models,), jnp.int32)
-                      .at[slots].add(miss.astype(jnp.int32)))
+                      .at[slots].add(unit.astype(jnp.int32)))
             refilled = rl_lib.refill(state.budget, self._budget_rates,
                                      self._budget_bursts)
             grant = rl_lib.grant_from(refilled, self._budget_limited,
                                       demand)
-            rank = _per_model_miss_rank(slots, miss, self.n_models)
-            admit0 = miss & (rank < grant[slots])
+            rank = _per_model_miss_rank(slots, unit, self.n_models)
+            admit0 = unit & (rank < grant[slots])
             a_i = admit0.astype(jnp.int32)
             global_rank = jnp.cumsum(a_i) - a_i              # exclusive
-            admit = admit0 & (global_rank < jnp.int32(self.miss_budget))
+            infer = admit0 & (global_rank < jnp.int32(self.miss_budget))
             spent = (jnp.zeros((self.n_models,), jnp.int32)
-                     .at[slots].add(admit.astype(jnp.int32)))
+                     .at[slots].add(infer.astype(jnp.int32)))
             new_budget = rl_lib.spend(refilled, self._budget_limited,
                                       spent)
+            if self._any_coalesce:
+                admit = miss & infer[jnp.maximum(src_row, 0)]
+            else:
+                admit = infer
+        elif self._any_coalesce:
+            infer = unit         # window clipping happens in the tail
 
         # (2)–(4): shared serve tail, with model-tagged buffer records
         emb, source, age, new_wb, stats = _serve_tail(
             self.tower_fn, self.miss_budget, self.fallback_value, params,
             features, keys, now_ms, failure_mask, direct, fo,
             state.writebuf, model_slots=slots, n_models=self.n_models,
-            admit=admit, fo_strict_hit=fo_strict)
+            admit=admit, fo_strict_hit=fo_strict, infer=infer,
+            src_row=src_row)
         return ServeResult(
             embeddings=emb, source=source, age_ms=age,
             state=MultiServerState(direct=state.direct,
@@ -556,6 +774,30 @@ class MultiModelServer:
                                    writebuf=new_wb, touchbuf=new_tb,
                                    budget=new_budget),
             stats=stats)
+
+    # ------------------------------------------------------------ serve_many
+    def serve_many(self, params, state: MultiServerState, slots,
+                   keys: Key64, features, now_ms,
+                   failure_mask: Optional[jnp.ndarray] = None,
+                   *, flush_every: int = 1, collect: bool = True):
+        """The streaming scan driver for the multi-model tier: S
+        mixed-model serve steps per dispatch. Same contract as
+        :meth:`CachedEmbeddingServer.serve_many` with an extra (S, B)
+        ``slots`` stream; the accumulated counters include the per-model
+        (M,) breakdowns."""
+        now_ms = jnp.asarray(now_ms, jnp.int32)
+        slots = jnp.asarray(slots, jnp.int32)
+        if failure_mask is None:
+            failure_mask = jnp.zeros(keys.hi.shape, bool)
+
+        def step(st, pay, now, fail):
+            sl, k, f = pay
+            return self.serve_step(params, st, sl, k, f, now, fail)
+
+        return _serve_many_scan(
+            step, self.flush, state, (slots, keys, features), now_ms,
+            failure_mask, _zero_acc(self.n_models),
+            flush_every=flush_every, collect=collect)
 
     # ----------------------------------------------------------------- flush
     def flush(self, state: MultiServerState, now_ms) -> MultiServerState:
@@ -579,6 +821,11 @@ class MultiModelServer:
     @functools.cached_property
     def jit_serve_step(self):
         return jax.jit(self.serve_step, donate_argnums=(1,))
+
+    @functools.cached_property
+    def jit_serve_many(self):
+        return jax.jit(self.serve_many, donate_argnums=(1,),
+                       static_argnames=("flush_every", "collect"))
 
     @functools.cached_property
     def jit_flush(self):

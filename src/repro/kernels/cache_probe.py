@@ -2,11 +2,19 @@
 
 Three kernels share one contract (``ref.cache_probe_ref`` /
 ``core.cache.lookup``): for each query key, load its set-associative bucket
-(keys, write timestamps, value rows), do the key-compare + TTL check, and
+metadata (keys, write timestamps), do the key-compare + TTL check, and
 emit (hit, value, age, way) — the hit way (-1 on miss) is the coordinate
 the serve path feeds the touch buffer for deferred last-access bumps — and
 the cache table never leaves HBM except for the probed buckets
 (DESIGN.md §4).
+
+All serving kernels probe in TWO DMA phases: phase 1 lands only the
+bucket's *metadata* rows (key_hi / key_lo / write_ts — 3·W int32 per
+query) and resolves the hit way in VMEM; phase 2 fetches ONLY the winning
+``(D,)`` value row per query (way 0 on a miss, masked to zeros after)
+instead of all W rows.  Value traffic — the dominant HBM term at
+W·D ≫ 3·W — drops by the associativity factor W, and the value scratch
+shrinks from (tile_q, W, D) to (tile_q, D).
 
 * ``cache_probe_tiled`` (the default, exported as ``cache_probe``): processes
   a ``tile_q``-query tile per grid step.  Bucket indices are scalar-prefetched
@@ -14,8 +22,10 @@ the cache table never leaves HBM except for the probed buckets
   scratch; the key-compare / TTL / select math then runs ONCE, vectorized
   over the whole (tile_q, W) tile instead of once per query.
 * ``cache_probe_dual``: probes the direct AND failover tables for the same
-  queries in a single kernel launch — one grid sweep, two sets of DMAs —
-  so ``serve_step`` does not pay two full-batch kernel dispatches.
+  queries in a single kernel launch — one grid sweep, one shared
+  start/drain loop pair per phase for BOTH tables' DMAs — so ``serve_step``
+  does not pay two full-batch kernel dispatches and the per-query loop
+  overhead is amortized across the two tables.
 * ``cache_probe_perquery``: the original one-query-per-grid-step kernel
   (``grid=(B,)``, blocks gathered via BlockSpec index_map).  Kept as the
   dispatch-overhead baseline for ``benchmarks/bench_kernel_probe.py`` —
@@ -67,25 +77,30 @@ def _pick_tile(batch: int, tile_q) -> int:
     return max(8, 1 << max(batch - 1, 1).bit_length())
 
 
-def _probe_tile(now, ttl, qhi, qlo, khi, klo, ts, vals, out_dtype):
-    """Vectorized probe math over a (TQ, W[, D]) tile. Pure jnp — shared by
-    the tiled and dual kernel bodies. Returns (hit, value, age, way) — the
-    hit way (-1 on miss) is the coordinate the serve path feeds the touch
-    buffer for deferred last-access bumps."""
+def _match_tile(now, ttl, qhi, qlo, khi, klo, ts):
+    """Vectorized metadata probe over a (TQ, W) tile. Pure jnp — shared by
+    the tiled and dual kernel bodies. Returns (hit, age, way) — the hit
+    way (-1 on miss) is both the phase-2 value-fetch index and the
+    coordinate the serve path feeds the touch buffer."""
     match = (khi == qhi[:, None]) & (klo == qlo[:, None])
     fresh = (now - ts) <= ttl
     valid = match & fresh
     hit = jnp.any(valid, axis=-1)
     # select exactly the first valid way without a dynamic gather
     first = valid & (jnp.cumsum(valid.astype(jnp.int32), axis=-1) == 1)
-    val = jnp.sum(jnp.where(first[:, :, None], vals, 0.0), axis=1)
     age = jnp.sum(jnp.where(first, now - ts, 0), axis=-1)
     # TPU needs ≥2D iota: broadcasted over the (TQ, W) tile, one-hot summed
     w_iota = jax.lax.broadcasted_iota(jnp.int32, first.shape, 1)
     way = jnp.sum(jnp.where(first, w_iota, 0), axis=-1)
-    return (hit.astype(jnp.int32), val.astype(out_dtype),
+    return (hit.astype(jnp.int32),
             jnp.where(hit, age, jnp.int32(-1)),
             jnp.where(hit, way, jnp.int32(-1)))
+
+
+def _mask_values(hit, vals, out_dtype):
+    """Phase-2 epilogue: zero the fetched value rows where the metadata
+    probe missed (a miss fetched way 0 as a placeholder)."""
+    return jnp.where(hit[:, None] == 1, vals, 0.0).astype(out_dtype)
 
 
 def _table_dmas(bucket, tables, scratches, sems, sem_base: int, j):
@@ -120,26 +135,37 @@ def _make_tiled_kernel(tq: int):
                qhi_ref, qlo_ref,                        # (TQ,) VMEM blocks
                khi_hbm, klo_hbm, ts_hbm, val_hbm,       # full tables, ANY/HBM
                hit_ref, out_ref, age_ref, way_ref,      # (TQ,) / (TQ, D) out
-               khi_s, klo_s, ts_s, val_s, sems):        # scratch + DMA sems
+               khi_s, klo_s, ts_s, val_s, way_s, sems):  # scratch + DMA sems
         t = pl.program_id(0)
         now = scalars_ref[0]
         ttl = scalars_ref[1]
-        tables = (khi_hbm, klo_hbm, ts_hbm, val_hbm)
-        scratches = (khi_s, klo_s, ts_s, val_s)
+        metas = (khi_hbm, klo_hbm, ts_hbm)
+        mscrs = (khi_s, klo_s, ts_s)
 
-        def dmas(j):
-            return _table_dmas(bucket_ref[t * tq + j], tables, scratches,
+        # phase 1: metadata rows only (3·W int32 per query)
+        def meta_dmas(j):
+            return _table_dmas(bucket_ref[t * tq + j], metas, mscrs,
                                sems, 0, j)
 
-        _start_then_drain(tq, dmas)
+        _start_then_drain(tq, meta_dmas)
 
-        hit, val, age, way = _probe_tile(now, ttl, qhi_ref[:], qlo_ref[:],
-                                         khi_s[:], klo_s[:], ts_s[:],
-                                         val_s[:], out_ref.dtype)
+        hit, age, way = _match_tile(now, ttl, qhi_ref[:], qlo_ref[:],
+                                    khi_s[:], klo_s[:], ts_s[:])
         hit_ref[:] = hit
-        out_ref[:] = val
         age_ref[:] = age
         way_ref[:] = way
+
+        # phase 2: fetch ONLY the winning (D,) value row per query
+        # (way 0 on a miss; masked to zeros below)
+        way_s[:] = jnp.maximum(way, 0)
+
+        def val_dmas(j):
+            return [pltpu.make_async_copy(
+                val_hbm.at[bucket_ref[t * tq + j], way_s[j]],
+                val_s.at[j], sems.at[3, j])]
+
+        _start_then_drain(tq, val_dmas)
+        out_ref[:] = _mask_values(hit, val_s[:], out_ref.dtype)
 
     return kernel
 
@@ -180,7 +206,8 @@ def _cache_probe_tiled(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
             pltpu.VMEM((tq, W), jnp.int32),
             pltpu.VMEM((tq, W), jnp.int32),
             pltpu.VMEM((tq, W), jnp.int32),
-            pltpu.VMEM((tq, W, D), values.dtype),
+            pltpu.VMEM((tq, D), values.dtype),
+            pltpu.VMEM((tq,), jnp.int32),
             pltpu.SemaphoreType.DMA((4, tq)),
         ],
     )
@@ -224,6 +251,58 @@ def cache_probe(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
 
 
 # ----------------------------------------------------------------- dual probe
+def _dual_body(tq: int, t, now, ttl_d, ttl_f, bkt_d_ref, bkt_f_ref,
+               qhi_ref, qlo_ref, d_tabs, f_tabs,
+               hit_d_ref, out_d_ref, age_d_ref, way_d_ref,
+               hit_f_ref, out_f_ref, age_f_ref, way_f_ref,
+               dkhi_s, dklo_s, dts_s, dval_s,
+               fkhi_s, fklo_s, fts_s, fval_s, wayd_s, wayf_s, sems):
+    """Two-phase dual probe shared by the single- and multi-model dual
+    kernels: ONE start/drain loop pair lands BOTH tables' metadata, the
+    hit ways resolve in VMEM, then one more pair fetches both winning
+    value rows — the per-query loop overhead is paid once for two tables.
+    ``ttl_d``/``ttl_f`` broadcast against (TQ, W): scalars for the
+    single-model kernel, per-query (TQ, 1) columns for the multi-model
+    one."""
+    dkhi, dklo, dts, dval = d_tabs
+    fkhi, fklo, fts, fval = f_tabs
+
+    def meta_dmas(j):
+        return (_table_dmas(bkt_d_ref[t * tq + j], (dkhi, dklo, dts),
+                            (dkhi_s, dklo_s, dts_s), sems, 0, j)
+                + _table_dmas(bkt_f_ref[t * tq + j], (fkhi, fklo, fts),
+                              (fkhi_s, fklo_s, fts_s), sems, 3, j))
+
+    _start_then_drain(tq, meta_dmas)
+
+    qhi = qhi_ref[:]
+    qlo = qlo_ref[:]
+    hit_d, age_d, way_d = _match_tile(now, ttl_d, qhi, qlo, dkhi_s[:],
+                                      dklo_s[:], dts_s[:])
+    hit_f, age_f, way_f = _match_tile(now, ttl_f, qhi, qlo, fkhi_s[:],
+                                      fklo_s[:], fts_s[:])
+    hit_d_ref[:] = hit_d
+    age_d_ref[:] = age_d
+    way_d_ref[:] = way_d
+    hit_f_ref[:] = hit_f
+    age_f_ref[:] = age_f
+    way_f_ref[:] = way_f
+    wayd_s[:] = jnp.maximum(way_d, 0)
+    wayf_s[:] = jnp.maximum(way_f, 0)
+
+    def val_dmas(j):
+        return [pltpu.make_async_copy(
+                    dval.at[bkt_d_ref[t * tq + j], wayd_s[j]],
+                    dval_s.at[j], sems.at[6, j]),
+                pltpu.make_async_copy(
+                    fval.at[bkt_f_ref[t * tq + j], wayf_s[j]],
+                    fval_s.at[j], sems.at[7, j])]
+
+    _start_then_drain(tq, val_dmas)
+    out_d_ref[:] = _mask_values(hit_d, dval_s[:], out_d_ref.dtype)
+    out_f_ref[:] = _mask_values(hit_f, fval_s[:], out_f_ref.dtype)
+
+
 def _make_dual_kernel(tq: int):
     def kernel(bkt_d_ref, bkt_f_ref, scalars_ref,       # scalar prefetch
                qhi_ref, qlo_ref,
@@ -232,40 +311,14 @@ def _make_dual_kernel(tq: int):
                hit_d_ref, out_d_ref, age_d_ref, way_d_ref,
                hit_f_ref, out_f_ref, age_f_ref, way_f_ref,
                dkhi_s, dklo_s, dts_s, dval_s,
-               fkhi_s, fklo_s, fts_s, fval_s, sems):
-        t = pl.program_id(0)
-        now = scalars_ref[0]
-        ttl_d = scalars_ref[1]
-        ttl_f = scalars_ref[2]
-        d_tabs = (dkhi, dklo, dts, dval)
-        d_scrs = (dkhi_s, dklo_s, dts_s, dval_s)
-        f_tabs = (fkhi, fklo, fts, fval)
-        f_scrs = (fkhi_s, fklo_s, fts_s, fval_s)
-
-        def dmas(j):
-            return (_table_dmas(bkt_d_ref[t * tq + j], d_tabs, d_scrs,
-                                sems, 0, j)
-                    + _table_dmas(bkt_f_ref[t * tq + j], f_tabs, f_scrs,
-                                  sems, 4, j))
-
-        _start_then_drain(tq, dmas)
-
-        qhi = qhi_ref[:]
-        qlo = qlo_ref[:]
-        hit, val, age, way = _probe_tile(now, ttl_d, qhi, qlo, dkhi_s[:],
-                                         dklo_s[:], dts_s[:], dval_s[:],
-                                         out_d_ref.dtype)
-        hit_d_ref[:] = hit
-        out_d_ref[:] = val
-        age_d_ref[:] = age
-        way_d_ref[:] = way
-        hit, val, age, way = _probe_tile(now, ttl_f, qhi, qlo, fkhi_s[:],
-                                         fklo_s[:], fts_s[:], fval_s[:],
-                                         out_f_ref.dtype)
-        hit_f_ref[:] = hit
-        out_f_ref[:] = val
-        age_f_ref[:] = age
-        way_f_ref[:] = way
+               fkhi_s, fklo_s, fts_s, fval_s, wayd_s, wayf_s, sems):
+        _dual_body(tq, pl.program_id(0), scalars_ref[0], scalars_ref[1],
+                   scalars_ref[2], bkt_d_ref, bkt_f_ref, qhi_ref, qlo_ref,
+                   (dkhi, dklo, dts, dval), (fkhi, fklo, fts, fval),
+                   hit_d_ref, out_d_ref, age_d_ref, way_d_ref,
+                   hit_f_ref, out_f_ref, age_f_ref, way_f_ref,
+                   dkhi_s, dklo_s, dts_s, dval_s,
+                   fkhi_s, fklo_s, fts_s, fval_s, wayd_s, wayf_s, sems)
 
     return kernel
 
@@ -310,11 +363,13 @@ def _cache_probe_dual(d_key_hi, d_key_lo, d_write_ts, d_values,
             pltpu.VMEM((tq, Wd), jnp.int32),
             pltpu.VMEM((tq, Wd), jnp.int32),
             pltpu.VMEM((tq, Wd), jnp.int32),
-            pltpu.VMEM((tq, Wd, D), d_values.dtype),
+            pltpu.VMEM((tq, D), d_values.dtype),
             pltpu.VMEM((tq, Wf), jnp.int32),
             pltpu.VMEM((tq, Wf), jnp.int32),
             pltpu.VMEM((tq, Wf), jnp.int32),
-            pltpu.VMEM((tq, Wf, D), f_values.dtype),
+            pltpu.VMEM((tq, D), f_values.dtype),
+            pltpu.VMEM((tq,), jnp.int32),
+            pltpu.VMEM((tq,), jnp.int32),
             pltpu.SemaphoreType.DMA((8, tq)),
         ],
     )
@@ -382,7 +437,8 @@ def _policy_ttls(policy_ref, slot_v):
 def _make_dual_multi_kernel(tq: int):
     """The dual probe extended to a stacked multi-model tier: tables are the
     pooled (M*Nb, W) views, buckets already carry the slot offset, and each
-    query's TTLs come from its model's row of the policy table."""
+    query's TTLs come from its model's row of the policy table. Same
+    two-phase DMA layout as the single-model dual kernel."""
     def kernel(bkt_d_ref, bkt_f_ref, policy_ref, scalars_ref,  # scalar prefetch
                qhi_ref, qlo_ref, slot_ref,                      # (TQ,) blocks
                dkhi, dklo, dts, dval,                    # direct tables (ANY)
@@ -390,39 +446,15 @@ def _make_dual_multi_kernel(tq: int):
                hit_d_ref, out_d_ref, age_d_ref, way_d_ref,
                hit_f_ref, out_f_ref, age_f_ref, way_f_ref,
                dkhi_s, dklo_s, dts_s, dval_s,
-               fkhi_s, fklo_s, fts_s, fval_s, sems):
-        t = pl.program_id(0)
-        now = scalars_ref[0]
-        d_tabs = (dkhi, dklo, dts, dval)
-        d_scrs = (dkhi_s, dklo_s, dts_s, dval_s)
-        f_tabs = (fkhi, fklo, fts, fval)
-        f_scrs = (fkhi_s, fklo_s, fts_s, fval_s)
-
-        def dmas(j):
-            return (_table_dmas(bkt_d_ref[t * tq + j], d_tabs, d_scrs,
-                                sems, 0, j)
-                    + _table_dmas(bkt_f_ref[t * tq + j], f_tabs, f_scrs,
-                                  sems, 4, j))
-
-        _start_then_drain(tq, dmas)
-
-        qhi = qhi_ref[:]
-        qlo = qlo_ref[:]
+               fkhi_s, fklo_s, fts_s, fval_s, wayd_s, wayf_s, sems):
         ttl_d, ttl_f = _policy_ttls(policy_ref, slot_ref[:])
-        hit, val, age, way = _probe_tile(now, ttl_d[:, None], qhi, qlo,
-                                         dkhi_s[:], dklo_s[:], dts_s[:],
-                                         dval_s[:], out_d_ref.dtype)
-        hit_d_ref[:] = hit
-        out_d_ref[:] = val
-        age_d_ref[:] = age
-        way_d_ref[:] = way
-        hit, val, age, way = _probe_tile(now, ttl_f[:, None], qhi, qlo,
-                                         fkhi_s[:], fklo_s[:], fts_s[:],
-                                         fval_s[:], out_f_ref.dtype)
-        hit_f_ref[:] = hit
-        out_f_ref[:] = val
-        age_f_ref[:] = age
-        way_f_ref[:] = way
+        _dual_body(tq, pl.program_id(0), scalars_ref[0], ttl_d[:, None],
+                   ttl_f[:, None], bkt_d_ref, bkt_f_ref, qhi_ref, qlo_ref,
+                   (dkhi, dklo, dts, dval), (fkhi, fklo, fts, fval),
+                   hit_d_ref, out_d_ref, age_d_ref, way_d_ref,
+                   hit_f_ref, out_f_ref, age_f_ref, way_f_ref,
+                   dkhi_s, dklo_s, dts_s, dval_s,
+                   fkhi_s, fklo_s, fts_s, fval_s, wayd_s, wayf_s, sems)
 
     return kernel
 
@@ -467,11 +499,13 @@ def _cache_probe_dual_multi(d_key_hi, d_key_lo, d_write_ts, d_values,
             pltpu.VMEM((tq, Wd), jnp.int32),
             pltpu.VMEM((tq, Wd), jnp.int32),
             pltpu.VMEM((tq, Wd), jnp.int32),
-            pltpu.VMEM((tq, Wd, D), d_values.dtype),
+            pltpu.VMEM((tq, D), d_values.dtype),
             pltpu.VMEM((tq, Wf), jnp.int32),
             pltpu.VMEM((tq, Wf), jnp.int32),
             pltpu.VMEM((tq, Wf), jnp.int32),
-            pltpu.VMEM((tq, Wf, D), f_values.dtype),
+            pltpu.VMEM((tq, D), f_values.dtype),
+            pltpu.VMEM((tq,), jnp.int32),
+            pltpu.VMEM((tq,), jnp.int32),
             pltpu.SemaphoreType.DMA((8, tq)),
         ],
     )

@@ -5,6 +5,15 @@ generator (Fig. 2 calibrated) drives per-region CachedEmbeddingServer
 instances fronting a configurable user tower; counters reproduce the
 Table 2/3 accounting; results print as a report.
 
+All three modes run on the **device-resident streaming driver**
+(``serve_many``, DESIGN.md §9): the request stream is staged into
+(S, B) chunks and each chunk is ONE dispatch — a ``lax.scan`` over S
+serve steps with the async flush folded in — whose accumulated counters
+come back with a single ``jax.device_get`` per chunk instead of a
+per-step (let alone per-key) host sync. ``--coalesce`` additionally
+dedupes each batch's missed users so the tower runs once per distinct
+user (in-batch inference coalescing).
+
 ``--multi`` replays ONE access stream across the WHOLE per-model registry
 (paper Table 1 / `configs.multi_model_tier_configs`): every batch is a
 mixed-model batch served by a single MultiModelServer dispatch, and the
@@ -16,13 +25,15 @@ budget is provisioned at ``--budget-frac`` of the stream's steady-state
 miss demand, and a mid-run re-access burst (a flash crowd drawn from the
 same user population) pushes demand further over capacity. The report
 shows the degradation chain engaging phase by phase: deferred misses,
-failover serves (with staleness), and the SLA-served fraction.
+failover serves (with staleness), and the SLA-served fraction. Each
+phase is a contiguous batch range served by one server, so phases chunk
+onto the scan driver directly.
 
 Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --arch sasrec \
         --minutes 120 --users 5000 --ttl-min 5 \
-        [--no-cache] [--multi] [--overload]
+        [--no-cache] [--multi] [--overload] [--coalesce]
 """
 from __future__ import annotations
 
@@ -68,11 +79,46 @@ def build_tower(arch: str):
     return cfg, params, tower_fn, features_of
 
 
+def _stage_chunk(uids, times_ms, features_of, lo: int, n_steps: int,
+                 batch: int, injector=None, override_ids=None):
+    """Stage ``n_steps`` consecutive serve batches as (S, B) device arrays
+    — the scan driver's pre-staged stream. ``override_ids`` substitutes
+    the user ids (the overload flash crowd) while keeping the clock.
+    The failure mask is only staged when an injector rides along
+    (None otherwise — serve_many synthesizes its own zeros)."""
+    khi, klo, feats, nows, fails = [], [], [], [], []
+    for s in range(n_steps):
+        a = lo + s * batch
+        ids = (uids[a:a + batch] if override_ids is None
+               else override_ids[s])
+        now = int(times_ms[a + batch - 1])
+        k = Key64.from_int(np.asarray(ids, np.int64))
+        khi.append(k.hi)
+        klo.append(k.lo)
+        feats.append(features_of(ids, now))
+        nows.append(now)
+        if injector is not None:
+            fails.append(injector.mask(batch, now))
+    keys = Key64(hi=jnp.stack(khi), lo=jnp.stack(klo))
+    feats = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *feats)
+    return (keys, feats, jnp.asarray(nows, jnp.int32),
+            jnp.asarray(np.stack(fails)) if fails else None)
+
+
+def _chunks(n_batches: int, chunk_steps: int):
+    """(lo_batch, n_steps) chunk spans covering ``n_batches``."""
+    lo = 0
+    while lo < n_batches:
+        yield lo, min(chunk_steps, n_batches - lo)
+        lo += chunk_steps
+
+
 def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
                 ttl_min: float = 5.0, failover_ttl_h: float = 1.0,
                 batch: int = 256, miss_budget_frac: float = 0.75,
                 failure_rate: float = 0.0, use_cache: bool = True,
                 backend: str = "jnp", eviction: str = "ttl",
+                coalesce: bool = False, chunk_steps: int = 64,
                 n_buckets: int = 1 << 14, seed: int = 0, log=print):
     tower_cfg, params, tower_fn, features_of = build_tower(arch)
     cache_cfg = CacheConfig(
@@ -82,7 +128,7 @@ def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
         n_buckets=n_buckets, ways=8,
         value_dim=tower_cfg.user_embed_dim,
         miss_budget_frac=miss_budget_frac,
-        backend=backend, eviction=eviction)
+        backend=backend, eviction=eviction, coalesce_misses=coalesce)
     server = srv_lib.CachedEmbeddingServer(
         cfg=cache_cfg, tower_fn=tower_fn,
         miss_budget=max(int(batch * miss_budget_frac), 1))
@@ -96,47 +142,50 @@ def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
 
     counters = ServingCounters()
     t0 = time.perf_counter()
-    n_batches = 0
-    for lo in range(0, len(uids) - batch + 1, batch):
-        ids = uids[lo:lo + batch]
-        now = int(times_ms[lo + batch - 1])
-        keys = Key64.from_int(ids)
-        feats = features_of(ids, now)
-        fail = jnp.asarray(injector.mask(batch, now))
-        if use_cache:
-            res = server.jit_serve_step(params, state, keys, feats, now,
-                                        fail)
-            state = res.state
-            s = {k: int(v) for k, v in res.stats.items()
-                 if k != "mean_age_ms"}
-            counters.merge(ServingCounters(
-                requests=s["requests"], direct_hits=s["direct_hits"],
-                tower_inferences=s["tower_inferences"],
-                tower_failures=s["tower_failures"],
-                overflow=s["overflow"], failover_hits=s["failover_hits"],
-                fallbacks=s["fallbacks"], combined_writes=1))
-            state = server.jit_flush(state, now)
-        else:
-            emb, src = srv_lib.serve_step_no_cache(tower_fn, params, keys,
-                                                   feats, fail)
-            nf = int((np.asarray(src) == srv_lib.SRC_FALLBACK).sum())
-            counters.merge(ServingCounters(
-                requests=batch, tower_inferences=batch,
-                tower_failures=nf, fallbacks=nf))
-        n_batches += 1
+    n_batches = len(uids) // batch
+    if use_cache:
+        # scan driver: one dispatch + ONE stats fetch per chunk
+        for lo, n_steps in _chunks(n_batches, chunk_steps):
+            keys, feats, nows, fails = _stage_chunk(
+                uids, times_ms, features_of, lo * batch, n_steps, batch,
+                injector=injector)
+            state, acc, _ = server.jit_serve_many(
+                params, state, keys, feats, nows, fails,
+                flush_every=1, collect=False)
+            counters.merge(ServingCounters.from_stats(jax.device_get(acc)))
+    else:
+        # cache-off baseline: still a Python loop, but the fallback count
+        # accumulates ON DEVICE — one transfer at the end, no per-step sync
+        nf_dev = jnp.int32(0)
+        for b in range(n_batches):
+            lo = b * batch
+            ids = uids[lo:lo + batch]
+            now = int(times_ms[lo + batch - 1])
+            feats = features_of(ids, now)
+            fail = jnp.asarray(injector.mask(batch, now))
+            _, src = srv_lib.serve_step_no_cache(
+                tower_fn, params, Key64.from_int(ids), feats, fail)
+            nf_dev = nf_dev + jnp.sum(
+                (src == srv_lib.SRC_FALLBACK).astype(jnp.int32))
+        nf = int(nf_dev)
+        counters.merge(ServingCounters(
+            requests=n_batches * batch, tower_inferences=n_batches * batch,
+            tower_failures=nf, fallbacks=nf))
     wall = time.perf_counter() - t0
 
     d = counters.as_dict()
     d["wall_s"] = round(wall, 2)
     d["batches"] = n_batches
+    d["req_per_s"] = round(counters.requests / max(wall, 1e-9), 1)
     d["power_savings_at_0.8_tower_share"] = round(
         power_savings(counters.hit_rate, 0.8), 4)
     log(f"[serve {arch}] ttl={ttl_min}min evict={eviction}"
         f" cache={'on' if use_cache else 'off'}"
+        f" coalesce={'on' if coalesce else 'off'}"
         f" requests={d['requests']} hit_rate={d['hit_rate']:.3f}"
         f" fallback_rate={d['fallback_rate']:.4f}"
         f" tower_inferences={d['tower_inferences']}"
-        f" ({wall:.1f}s)")
+        f" ({wall:.1f}s, {d['req_per_s']:.0f} req/s)")
     return d
 
 
@@ -146,6 +195,7 @@ def run_serving_overload(arch: str = "sasrec", minutes: int = 60,
                          budget_frac: float = 0.5,
                          burst_start_frac: float = 0.4,
                          burst_len_frac: float = 0.2,
+                         chunk_steps: int = 64,
                          n_buckets: int = 1 << 14, backend: str = "jnp",
                          seed: int = 0, log=print):
     """The capacity-outage / overload scenario, end to end.
@@ -161,7 +211,9 @@ def run_serving_overload(arch: str = "sasrec", minutes: int = 60,
     recovers. Deferred misses degrade through the relaxed-TTL failover
     tier (``failover_ttl_relax=None`` → staleness unbounded, SLA
     defended); the per-phase report shows the chain engaging during the
-    outage and draining after it.
+    outage and draining after it. Each phase is a contiguous batch range
+    behind ONE server, so it chunks straight onto the scan driver — the
+    phase bookkeeping costs one stats fetch per chunk, not per step.
     """
     tower_cfg, params, tower_fn, features_of = build_tower(arch)
     stream_cfg = StreamConfig(n_users=users, horizon_s=minutes * 60.0,
@@ -189,42 +241,38 @@ def run_serving_overload(arch: str = "sasrec", minutes: int = 60,
         tower_fn=tower_fn, miss_budget=batch)
     state = srv_lib.init_server_state(cache_cfg, writebuf_capacity=batch * 4)
 
-    n_batches_total = max(len(uids) // batch, 1)
+    # no max(..., 1) clamp: a stream shorter than one batch yields zero
+    # spans (and an all-zero report) instead of staging past its end
+    n_batches_total = len(uids) // batch
     burst_lo = int(n_batches_total * burst_start_frac)
     burst_hi = int(n_batches_total * (burst_start_frac + burst_len_frac))
     burst_rng = np.random.default_rng(seed + 1)
 
-    phases = {p: ServingCounters() for p in ("pre", "outage", "post")}
+    spans = [("pre", 0, burst_lo, full_srv),
+             ("outage", burst_lo, burst_hi, outage_srv),
+             ("post", burst_hi, n_batches_total, full_srv)]
+    phases = {p: ServingCounters() for p, *_ in spans}
     stale = {p: [0.0, 0] for p in phases}          # [age sum, serve count]
     t0 = time.perf_counter()
-    for b, lo in enumerate(range(0, len(uids) - batch + 1, batch)):
-        in_outage = burst_lo <= b < burst_hi
-        phase = ("outage" if in_outage
-                 else ("pre" if b < burst_lo else "post"))
-        server = outage_srv if in_outage else full_srv
-        ids = uids[lo:lo + batch]
-        if in_outage:
-            # flash crowd: same population, arrival order decorrelated —
-            # re-access demand beyond what the renewal stream carries
-            ids = burst_rng.integers(0, users, size=batch).astype(np.int64)
-        now = int(times_ms[lo + batch - 1])
-        keys = Key64.from_int(ids)
-        feats = features_of(ids, now)
-        res = server.jit_serve_step(params, state, keys, feats, now)
-        state = res.state
-        s = res.stats
-        phases[phase].merge(ServingCounters(
-            requests=int(s["requests"]), direct_hits=int(s["direct_hits"]),
-            tower_inferences=int(s["tower_inferences"]),
-            overflow=int(s["overflow"]),
-            failover_hits=int(s["failover_hits"]),
-            fallbacks=int(s["fallbacks"]), admitted=int(s["admitted"]),
-            deferred=int(s["deferred"]),
-            failover_serves=int(s["failover_serves"]), combined_writes=1))
-        n_fo = int(s["failover_serves"])
-        stale[phase][0] += float(s["failover_stale_ms"]) * n_fo
-        stale[phase][1] += n_fo
-        state = server.jit_flush(state, now)
+    for phase, p_lo, p_hi, server in spans:
+        for lo, n_steps in _chunks(p_hi - p_lo, chunk_steps):
+            b_lo = p_lo + lo
+            override = None
+            if phase == "outage":
+                # flash crowd: same population, arrival order decorrelated
+                # — re-access demand beyond what the renewal stream carries
+                override = burst_rng.integers(
+                    0, users, size=(n_steps, batch)).astype(np.int64)
+            keys, feats, nows, _ = _stage_chunk(
+                uids, times_ms, features_of, b_lo * batch, n_steps, batch,
+                override_ids=override)
+            state, acc, _ = server.jit_serve_many(
+                params, state, keys, feats, nows,
+                flush_every=1, collect=False)
+            s = jax.device_get(acc)          # ONE transfer per chunk
+            phases[phase].merge(ServingCounters.from_stats(s))
+            stale[phase][0] += float(s["failover_stale_sum_ms"])
+            stale[phase][1] += int(s["failover_serves"])
     wall = time.perf_counter() - t0
 
     out = {"budget_per_step": round(budget, 2),
@@ -252,18 +300,22 @@ def run_serving_multi(arch: str = "sasrec", minutes: int = 60,
                       users: int = 2000, batch: int = 256,
                       miss_budget_frac: float = 0.75,
                       n_buckets: int = 1 << 12, failure_rate: float = 0.0,
-                      backend: str = "jnp", seed: int = 0, log=print):
+                      backend: str = "jnp", coalesce: bool = False,
+                      chunk_steps: int = 64, seed: int = 0, log=print):
     """Replay one access stream across the whole model registry.
 
     Each arriving user request is fanned out to one of the registry's
     models (round-robin within the batch), so every serve batch is a
     mixed-model batch — served by ONE MultiModelServer dispatch with
-    per-model TTL/eviction/capacity policies. Reports global counters
+    per-model TTL/eviction/capacity policies; chunks of ``chunk_steps``
+    batches run as single scan-driver dispatches. Reports global counters
     plus the per-model hit-rate breakdown (the paper's Table 2 shape).
     """
     tower_cfg, params, tower_fn, features_of = build_tower(arch)
     cfgs = multi_model_tier_configs(value_dim=tower_cfg.user_embed_dim,
                                     n_buckets=n_buckets)
+    if coalesce:
+        cfgs = [dataclasses.replace(c, coalesce_misses=True) for c in cfgs]
     server = srv_lib.MultiModelServer(
         cfgs=tuple(cfgs), tower_fn=tower_fn,
         miss_budget=max(int(batch * miss_budget_frac), 1), backend=backend)
@@ -282,39 +334,31 @@ def run_serving_multi(arch: str = "sasrec", minutes: int = 60,
     pm_hits = np.zeros(n_models, np.int64)
     pm_fallbacks = np.zeros(n_models, np.int64)
     t0 = time.perf_counter()
-    n_batches = 0
-    for lo in range(0, len(uids) - batch + 1, batch):
-        ids = uids[lo:lo + batch]
-        now = int(times_ms[lo + batch - 1])
-        keys = Key64.from_int(ids)
+    n_batches = len(uids) // batch
+    for lo, n_steps in _chunks(n_batches, chunk_steps):
+        keys, feats, nows, fails = _stage_chunk(
+            uids, times_ms, features_of, lo * batch, n_steps, batch,
+            injector=injector)
         # fan-out: each request targets one registry model, round-robin
         # phased by the batch index so a user cycles through models.
-        slots = jnp.asarray((np.arange(batch) + n_batches) % n_models,
-                            jnp.int32)
-        feats = features_of(ids, now)
-        fail = jnp.asarray(injector.mask(batch, now))
-        res = server.jit_serve_step(params, state, slots, keys, feats, now,
-                                    fail)
-        state = res.state
-        s = {k: int(v) for k, v in res.stats.items()
-             if not k.startswith("per_model") and k != "mean_age_ms"}
-        counters.merge(ServingCounters(
-            requests=s["requests"], direct_hits=s["direct_hits"],
-            tower_inferences=s["tower_inferences"],
-            tower_failures=s["tower_failures"],
-            overflow=s["overflow"], failover_hits=s["failover_hits"],
-            fallbacks=s["fallbacks"], combined_writes=1))
-        pm_requests += np.asarray(res.stats["per_model_requests"])
-        pm_hits += np.asarray(res.stats["per_model_direct_hits"])
-        pm_fallbacks += np.asarray(res.stats["per_model_fallbacks"])
-        state = server.jit_flush(state, now)
-        n_batches += 1
+        slots = jnp.asarray(
+            (np.arange(batch)[None, :] + lo + np.arange(n_steps)[:, None])
+            % n_models, jnp.int32)
+        state, acc, _ = server.jit_serve_many(
+            params, state, slots, keys, feats, nows, fails,
+            flush_every=1, collect=False)
+        s = jax.device_get(acc)              # ONE transfer per chunk
+        counters.merge(ServingCounters.from_stats(s))
+        pm_requests += np.asarray(s["per_model_requests"], np.int64)
+        pm_hits += np.asarray(s["per_model_direct_hits"], np.int64)
+        pm_fallbacks += np.asarray(s["per_model_fallbacks"], np.int64)
     wall = time.perf_counter() - t0
 
     d = counters.as_dict()
     d["wall_s"] = round(wall, 2)
     d["batches"] = n_batches
     d["n_models"] = n_models
+    d["req_per_s"] = round(counters.requests / max(wall, 1e-9), 1)
     d["per_model"] = {
         cfg.model_id: {
             "model_type": cfg.model_type,
@@ -329,7 +373,8 @@ def run_serving_multi(arch: str = "sasrec", minutes: int = 60,
     }
     log(f"[serve-multi {arch}] models={n_models} backend={backend}"
         f" requests={d['requests']} hit_rate={d['hit_rate']:.3f}"
-        f" fallback_rate={d['fallback_rate']:.4f} ({wall:.1f}s)")
+        f" fallback_rate={d['fallback_rate']:.4f}"
+        f" ({wall:.1f}s, {d['req_per_s']:.0f} req/s)")
     for mid, pm in d["per_model"].items():
         log(f"  model {mid} ({pm['model_type']}, ttl={pm['ttl_min']:g}min,"
             f" {pm['eviction']}): hit_rate={pm['hit_rate']:.3f}"
@@ -349,7 +394,15 @@ def main():
                          "incompatible with --multi)")
     ap.add_argument("--failure-rate", type=float, default=0.0)
     ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--chunk-steps", type=int, default=64,
+                    help="serve steps per scan-driver dispatch "
+                         "(serve_many, DESIGN.md §9)")
     ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--coalesce", action="store_true",
+                    help="in-batch inference coalescing: one tower run "
+                         "per distinct missed user per batch "
+                         "(DESIGN.md §9; incompatible with --no-cache/"
+                         "--overload)")
     ap.add_argument("--multi", action="store_true",
                     help="serve the whole per-model registry as one "
                          "multi-model tier (mixed-model batches, one "
@@ -377,6 +430,9 @@ def main():
                      "(CacheConfig.infer_budget_per_step)")
         if args.no_cache:
             ap.error("--overload is a cache-tier scenario; drop --no-cache")
+        if args.coalesce:
+            ap.error("--overload isolates admission control; run "
+                     "--coalesce on the plain/--multi modes")
         if args.eviction != "ttl":
             ap.error("--overload fixes eviction=ttl (the scenario "
                      "isolates admission, not victim order)")
@@ -384,7 +440,8 @@ def main():
             arch=args.arch, minutes=args.minutes, users=args.users,
             batch=args.batch,
             ttl_min=5.0 if args.ttl_min is None else args.ttl_min,
-            budget_frac=args.budget_frac, backend=args.backend)
+            budget_frac=args.budget_frac, backend=args.backend,
+            chunk_steps=args.chunk_steps)
     elif args.multi:
         # fail loudly on flags the multi tier cannot honor: TTLs come from
         # the per-model registry and the tier has no cache-off baseline.
@@ -400,13 +457,17 @@ def main():
                           users=args.users, batch=args.batch,
                           n_buckets=args.multi_buckets,
                           failure_rate=args.failure_rate,
-                          backend=args.backend)
+                          backend=args.backend, coalesce=args.coalesce,
+                          chunk_steps=args.chunk_steps)
     else:
+        if args.no_cache and args.coalesce:
+            ap.error("--coalesce dedupes cache misses; drop --no-cache")
         run_serving(arch=args.arch, minutes=args.minutes, users=args.users,
                     ttl_min=5.0 if args.ttl_min is None else args.ttl_min,
                     failure_rate=args.failure_rate,
                     batch=args.batch, use_cache=not args.no_cache,
-                    backend=args.backend, eviction=args.eviction)
+                    backend=args.backend, eviction=args.eviction,
+                    coalesce=args.coalesce, chunk_steps=args.chunk_steps)
 
 
 if __name__ == "__main__":

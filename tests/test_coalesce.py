@@ -1,0 +1,258 @@
+"""In-batch inference coalescing (DESIGN.md §9): bit-exact parity with the
+uncoalesced serve path, unique-inference budget charging, and the
+duplicate-heavy cases where coalescing changes who fits the budget."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as C
+from repro.core import server as S
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64
+
+DIM = 8
+MIN = 60_000
+
+BASE = CacheConfig(model_id=1, model_type="ctr", n_buckets=256, ways=4,
+                   value_dim=DIM, cache_ttl_ms=5 * MIN,
+                   failover_ttl_ms=60 * MIN)
+
+
+def tower(params, feats):
+    return feats @ params
+
+
+def keys_of(ids):
+    return Key64.from_int(np.asarray(ids, np.int64))
+
+
+def feats_of(ids):
+    """Features as a FUNCTION OF THE USER — duplicates carry identical
+    rows, the premise coalescing (and user-representation caching at
+    large) rests on."""
+    return jnp.asarray(np.asarray(ids)[:, None] * np.ones(DIM), jnp.float32)
+
+
+def servers(cfg, miss_budget):
+    on = dataclasses.replace(cfg, coalesce_misses=True)
+    return (S.CachedEmbeddingServer(cfg=on, tower_fn=tower,
+                                    miss_budget=miss_budget),
+            S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower,
+                                    miss_budget=miss_budget))
+
+
+# --------------------------------------------------------------- group map
+def test_dedupe_first_groups_picks_first_and_broadcasts():
+    ids = np.array([5, 7, 5, 9, 7, 5, 11, 2], np.int64)
+    live = np.array([1, 1, 1, 0, 1, 1, 1, 1], bool)
+    rep, src = C.dedupe_first_groups(keys_of(ids), jnp.asarray(live))
+    np.testing.assert_array_equal(np.asarray(rep),
+                                  [1, 1, 0, 0, 0, 0, 1, 1])
+    np.testing.assert_array_equal(np.asarray(src),
+                                  [0, 1, 0, -1, 1, 0, 6, 7])
+
+
+def test_dedupe_first_groups_salt_separates_models():
+    ids = np.array([5, 5, 5], np.int64)
+    live = jnp.ones((3,), bool)
+    salt = jnp.asarray([0, 1, 0], jnp.int32)
+    rep, src = C.dedupe_first_groups(keys_of(ids), live, salt=salt)
+    np.testing.assert_array_equal(np.asarray(rep), [1, 1, 0])
+    np.testing.assert_array_equal(np.asarray(src), [0, 1, 0])
+
+
+# ------------------------------------------------------------ bit parity
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_coalesced_matches_uncoalesced_bit_exact(backend):
+    """With every unique miss inside the window and no budget, duplicates
+    must serve the representative's embedding — bitwise the same rows the
+    uncoalesced tower produced — on both backends."""
+    cfg = dataclasses.replace(BASE, backend=backend)
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, 12, size=32)           # heavy duplication
+    srv_on, srv_off = servers(cfg, miss_budget=32)
+    r_on = srv_on.serve_step(jnp.eye(DIM), S.init_server_state(srv_on.cfg),
+                             keys_of(ids), feats_of(ids), 0)
+    r_off = srv_off.serve_step(jnp.eye(DIM), S.init_server_state(cfg),
+                               keys_of(ids), feats_of(ids), 0)
+    np.testing.assert_array_equal(r_on.embeddings, r_off.embeddings)
+    np.testing.assert_array_equal(r_on.source, r_off.source)
+    np.testing.assert_array_equal(r_on.age_ms, r_off.age_ms)
+    n_unique = len(np.unique(ids))
+    assert int(r_on.stats["tower_inferences"]) == n_unique
+    assert int(r_off.stats["tower_inferences"]) == len(ids)
+    # ledger stays per-request: every miss row counts as admitted
+    assert int(r_on.stats["admitted"]) == len(ids)
+    assert int(r_off.stats["admitted"]) == len(ids)
+    # one combined write-buffer record per unique user
+    assert int(r_on.state.writebuf.count) == n_unique
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_coalesced_flush_warms_cache_for_duplicates(backend):
+    """Only representatives hit the write buffer; after the flush every
+    duplicate of the user must be a direct hit (same key, same slot)."""
+    cfg = dataclasses.replace(BASE, backend=backend,
+                              coalesce_misses=True)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower, miss_budget=8)
+    ids = np.array([4, 4, 4, 6, 6, 9], np.int64)
+    res = srv.serve_step(jnp.eye(DIM), S.init_server_state(cfg),
+                         keys_of(ids), feats_of(ids), 0)
+    state = srv.flush(res.state, 0)
+    res2 = srv.serve_step(jnp.eye(DIM), state, keys_of(ids), feats_of(ids),
+                          1000)
+    assert int(res2.stats["direct_hits"]) == len(ids)
+    np.testing.assert_allclose(res2.embeddings, feats_of(ids))
+
+
+# --------------------------------------------------------- budget charging
+def test_budget_charged_per_unique_inference():
+    """Duplicates of one admitted user consume ONE token: with 3 tokens
+    (burst = rate+1) a [u1,u1,u1,u2,u3] batch is fully served coalesced,
+    while the uncoalesced path burns tokens on the duplicates."""
+    ids = np.array([1, 1, 1, 2, 3], np.int64)
+    cfg = dataclasses.replace(BASE, infer_budget_per_step=2.0)
+    srv_on, srv_off = servers(cfg, miss_budget=5)
+
+    r_on = srv_on.serve_step(jnp.eye(DIM), S.init_server_state(srv_on.cfg),
+                             keys_of(ids), feats_of(ids), 0)
+    assert int(r_on.stats["tower_inferences"]) == 3      # u1, u2, u3
+    assert int(r_on.stats["admitted"]) == 5              # all rows covered
+    assert int(r_on.stats["deferred"]) == 0
+    assert float(r_on.state.budget.tokens[0]) == 0.0     # 3 tokens spent
+    np.testing.assert_array_equal(r_on.source, S.SRC_COMPUTED)
+
+    r_off = srv_off.serve_step(jnp.eye(DIM), S.init_server_state(cfg),
+                               keys_of(ids), feats_of(ids), 0)
+    assert int(r_off.stats["tower_inferences"]) == 3     # u1 three times
+    assert int(r_off.stats["admitted"]) == 3
+    assert int(r_off.stats["deferred"]) == 2             # u2, u3 gated off
+    assert float(r_off.state.budget.tokens[0]) == 0.0
+
+
+def test_coalescing_changes_which_users_fit_the_budget():
+    """The satellite's duplicate-heavy case: budget 1 token/step (burst 2).
+    Uncoalesced, both tokens go to duplicate rows of u1 and u2 never runs;
+    coalesced, u2 gets the second token."""
+    ids = np.array([1, 1, 2], np.int64)
+    cfg = dataclasses.replace(BASE, infer_budget_per_step=1.0)
+    srv_on, srv_off = servers(cfg, miss_budget=3)
+
+    r_on = srv_on.serve_step(jnp.eye(DIM), S.init_server_state(srv_on.cfg),
+                             keys_of(ids), feats_of(ids), 0)
+    src_on = np.asarray(r_on.source)
+    assert (src_on == S.SRC_COMPUTED).all()              # u1 (×2) and u2
+    assert int(r_on.stats["tower_inferences"]) == 2
+
+    r_off = srv_off.serve_step(jnp.eye(DIM), S.init_server_state(cfg),
+                               keys_of(ids), feats_of(ids), 0)
+    src_off = np.asarray(r_off.source)
+    assert (src_off[:2] == S.SRC_COMPUTED).all()
+    assert src_off[2] == S.SRC_FALLBACK                  # u2 starved
+    assert int(r_off.stats["tower_inferences"]) == 2
+
+
+def test_window_clips_unique_users_not_rows():
+    """miss_budget=2, no token budget: coalesced serves TWO distinct users
+    (all four duplicate rows), uncoalesced wastes the window on one."""
+    ids = np.array([1, 1, 2, 2, 3, 3], np.int64)
+    srv_on, srv_off = servers(BASE, miss_budget=2)
+
+    r_on = srv_on.serve_step(jnp.eye(DIM), S.init_server_state(srv_on.cfg),
+                             keys_of(ids), feats_of(ids), 0)
+    src_on = np.asarray(r_on.source)
+    assert (src_on[:4] == S.SRC_COMPUTED).all()
+    assert (src_on[4:] == S.SRC_FALLBACK).all()
+    assert int(r_on.stats["overflow"]) == 1              # unique user 3
+
+    r_off = srv_off.serve_step(jnp.eye(DIM), S.init_server_state(BASE),
+                               keys_of(ids), feats_of(ids), 0)
+    src_off = np.asarray(r_off.source)
+    assert (src_off[:2] == S.SRC_COMPUTED).all()
+    assert (src_off[2:] == S.SRC_FALLBACK).all()
+    assert int(r_off.stats["overflow"]) == 4             # four miss rows
+
+
+def test_failed_representative_fails_its_duplicates():
+    """An inference failure on the representative row must push every
+    duplicate down the degradation chain (cold caches → fallback)."""
+    ids = np.array([1, 1, 1, 2], np.int64)
+    cfg = dataclasses.replace(BASE, coalesce_misses=True)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower, miss_budget=4)
+    # representatives compact to the front in batch order: u1 then u2.
+    fail = jnp.asarray([True, False, False, False])
+    res = srv.serve_step(jnp.eye(DIM), S.init_server_state(cfg),
+                         keys_of(ids), feats_of(ids), 0,
+                         failure_mask=fail)
+    src = np.asarray(res.source)
+    assert (src[:3] == S.SRC_FALLBACK).all()
+    assert src[3] == S.SRC_COMPUTED
+    assert int(res.stats["tower_failures"]) == 1
+
+
+# ------------------------------------------------------------ multi-model
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_multi_model_coalesce_salted_by_model(backend):
+    """The SAME user queried for two models is TWO inferences (the dedupe
+    is model-salted), and the mixed batch stays bit-exact vs the
+    uncoalesced tier."""
+    cfgs = [dataclasses.replace(BASE, model_id=1, n_buckets=128,
+                                backend=backend),
+            dataclasses.replace(BASE, model_id=2, n_buckets=256,
+                                cache_ttl_ms=MIN, backend=backend)]
+    on = [dataclasses.replace(c, coalesce_misses=True) for c in cfgs]
+    ids = np.array([7, 7, 7, 9, 9, 13], np.int64)
+    slots = jnp.asarray([0, 1, 0, 0, 0, 1], jnp.int32)
+    srv_on = S.MultiModelServer(cfgs=tuple(on), tower_fn=tower,
+                                miss_budget=6)
+    srv_off = S.MultiModelServer(cfgs=tuple(cfgs), tower_fn=tower,
+                                 miss_budget=6)
+    r_on = srv_on.serve_step(jnp.eye(DIM),
+                             S.init_multi_server_state(on), slots,
+                             keys_of(ids), feats_of(ids), 0)
+    r_off = srv_off.serve_step(jnp.eye(DIM),
+                               S.init_multi_server_state(cfgs), slots,
+                               keys_of(ids), feats_of(ids), 0)
+    np.testing.assert_array_equal(r_on.embeddings, r_off.embeddings)
+    np.testing.assert_array_equal(r_on.source, r_off.source)
+    # groups: (m0,u7)×2, (m1,u7), (m0,u9)×2, (m1,u13) → 4 inferences
+    assert int(r_on.stats["tower_inferences"]) == 4
+    assert int(r_off.stats["tower_inferences"]) == 6
+    np.testing.assert_array_equal(
+        np.asarray(r_on.stats["per_model_admitted"]), [4, 2])
+
+
+def test_multi_model_per_model_coalesce_mask():
+    """A registry mixing coalescing and non-coalescing models: only the
+    opted-in model's duplicates collapse."""
+    cfgs = (dataclasses.replace(BASE, model_id=1, coalesce_misses=True),
+            dataclasses.replace(BASE, model_id=2))
+    ids = np.array([5, 5, 5, 5], np.int64)
+    slots = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    srv = S.MultiModelServer(cfgs=cfgs, tower_fn=tower, miss_budget=4)
+    res = srv.serve_step(jnp.eye(DIM), S.init_multi_server_state(cfgs),
+                         slots, keys_of(ids), feats_of(ids), 0)
+    # model 0 coalesces its two dups into one run; model 1 runs both rows
+    assert int(res.stats["tower_inferences"]) == 3
+    np.testing.assert_array_equal(np.asarray(res.source), S.SRC_COMPUTED)
+
+
+def test_multi_model_budget_per_unique_with_coalesce():
+    """Per-model budgets charge per unique inference under coalescing."""
+    cfgs = (dataclasses.replace(BASE, model_id=1, coalesce_misses=True,
+                                infer_budget_per_step=1.0),
+            dataclasses.replace(BASE, model_id=2, coalesce_misses=True))
+    ids = np.array([3, 3, 4, 8], np.int64)
+    slots = jnp.asarray([0, 0, 0, 1], jnp.int32)
+    srv = S.MultiModelServer(cfgs=cfgs, tower_fn=tower, miss_budget=4)
+    res = srv.serve_step(jnp.eye(DIM), S.init_multi_server_state(cfgs),
+                         slots, keys_of(ids), feats_of(ids), 0)
+    # model 0: burst=2 tokens → uniques u3 (2 rows) and u4 admitted;
+    # model 1 unlimited
+    np.testing.assert_array_equal(
+        np.asarray(res.stats["per_model_admitted"]), [3, 1])
+    assert int(res.stats["tower_inferences"]) == 3
+    assert float(res.state.budget.tokens[0]) == 0.0

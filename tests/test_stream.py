@@ -1,0 +1,238 @@
+"""serve_many scan driver (DESIGN.md §9): the same stream through ONE
+scan dispatch and through the step-by-step Python loop must produce
+identical final cache state, write/touch buffers, budget, outputs, and
+accumulated counters — single- and multi-model."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import server as S
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64
+from repro.core.metrics import ServingCounters
+
+DIM = 8
+MIN = 60_000
+
+BASE = CacheConfig(model_id=1, model_type="ctr", n_buckets=128, ways=4,
+                   value_dim=DIM, cache_ttl_ms=5 * MIN,
+                   failover_ttl_ms=60 * MIN)
+
+
+def tower(params, feats):
+    return feats @ params
+
+
+def stream_of(rng, n_steps, batch, n_users=24):
+    ids = rng.integers(0, n_users, size=(n_steps, batch)).astype(np.int64)
+    flat = Key64.from_int(ids.reshape(-1))
+    keys = Key64(hi=flat.hi.reshape(n_steps, batch),
+                 lo=flat.lo.reshape(n_steps, batch))
+    feats = jnp.asarray(ids[..., None] * np.ones(DIM), jnp.float32)
+    now = jnp.arange(n_steps, dtype=jnp.int32) * 1000
+    return ids, keys, feats, now
+
+
+def loop_reference(srv, state, keys, feats, now, slots=None, fails=None,
+                   flush_every=1):
+    """The step-by-step driver serve_many replaces, same flush schedule
+    (every F steps + unconditional tail flush)."""
+    n_steps = keys.hi.shape[0]
+    stats_sum = None
+    outs = []
+    for i in range(n_steps):
+        k = Key64(hi=keys.hi[i], lo=keys.lo[i])
+        fail = None if fails is None else fails[i]
+        if slots is None:
+            res = srv.serve_step(jnp.eye(DIM), state, k, feats[i], now[i],
+                                 fail)
+        else:
+            res = srv.serve_step(jnp.eye(DIM), state, slots[i], k,
+                                 feats[i], now[i], fail)
+        outs.append((res.embeddings, res.source, res.age_ms))
+        s = jax.device_get(res.stats)
+        if stats_sum is None:
+            stats_sum = {kk: np.asarray(v) for kk, v in s.items()}
+        else:
+            for kk, v in s.items():
+                stats_sum[kk] = stats_sum[kk] + np.asarray(v)
+        state = res.state
+        if flush_every and (i + 1) % flush_every == 0:
+            state = srv.flush(state, now[i])
+    state = srv.flush(state, now[-1])
+    return state, stats_sum, outs
+
+
+def assert_tree_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)
+
+
+ACC_KEYS = S._ACC_I32 + S._ACC_F32
+ACC_PM_KEYS = S._ACC_PM_I32 + S._ACC_PM_F32
+
+
+# ------------------------------------------------------------ single-model
+@pytest.mark.parametrize("flush_every", [1, 2, 0])
+def test_serve_many_matches_loop_single(flush_every):
+    rng = np.random.default_rng(0)
+    _, keys, feats, now = stream_of(rng, n_steps=5, batch=16)
+    srv = S.CachedEmbeddingServer(cfg=BASE, tower_fn=tower, miss_budget=16)
+
+    st_scan, acc, ys = srv.serve_many(
+        jnp.eye(DIM), S.init_server_state(BASE), keys, feats, now,
+        flush_every=flush_every)
+    st_loop, stats_sum, outs = loop_reference(
+        srv, S.init_server_state(BASE), keys, feats, now,
+        flush_every=flush_every)
+
+    assert_tree_equal(st_scan, st_loop)
+    for k in ACC_KEYS:
+        np.testing.assert_allclose(np.asarray(acc[k]), stats_sum[k],
+                                   err_msg=k)
+    assert int(acc["steps"]) == 5
+    emb, src, age = ys
+    for i, (e, s, a) in enumerate(outs):
+        np.testing.assert_array_equal(emb[i], e)
+        np.testing.assert_array_equal(src[i], s)
+        np.testing.assert_array_equal(age[i], a)
+
+
+def test_serve_many_matches_loop_with_lru_touch_and_failures():
+    """The touch buffer (LRU recency bumps) and failure masks thread
+    through the scan identically to the loop."""
+    cfg = dataclasses.replace(BASE, eviction="lru")
+    rng = np.random.default_rng(1)
+    _, keys, feats, now = stream_of(rng, n_steps=6, batch=12)
+    fails = jnp.asarray(rng.uniform(size=(6, 12)) < 0.2)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower, miss_budget=12)
+
+    st_scan, acc, _ = srv.serve_many(
+        jnp.eye(DIM), S.init_server_state(cfg), keys, feats, now, fails,
+        flush_every=2)
+    st_loop, stats_sum, _ = loop_reference(
+        srv, S.init_server_state(cfg), keys, feats, now, fails=fails,
+        flush_every=2)
+    assert_tree_equal(st_scan, st_loop)
+    for k in ACC_KEYS:
+        np.testing.assert_allclose(np.asarray(acc[k]), stats_sum[k],
+                                   err_msg=k)
+
+
+def test_serve_many_budget_continuity_and_coalesce():
+    """The admission token bucket drains across scan steps exactly as it
+    does across jitted loop steps, with coalescing on."""
+    cfg = dataclasses.replace(BASE, infer_budget_per_step=3.0,
+                              coalesce_misses=True)
+    rng = np.random.default_rng(2)
+    _, keys, feats, now = stream_of(rng, n_steps=5, batch=16, n_users=10)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower, miss_budget=16)
+
+    st_scan, acc, _ = srv.serve_many(
+        jnp.eye(DIM), S.init_server_state(cfg), keys, feats, now)
+    st_loop, stats_sum, _ = loop_reference(
+        srv, S.init_server_state(cfg), keys, feats, now)
+    assert_tree_equal(st_scan, st_loop)
+    np.testing.assert_array_equal(st_scan.budget.tokens,
+                                  st_loop.budget.tokens)
+    for k in ("tower_inferences", "admitted", "deferred"):
+        np.testing.assert_allclose(np.asarray(acc[k]), stats_sum[k])
+
+
+def test_serve_many_tail_flush_drains_buffers():
+    rng = np.random.default_rng(3)
+    _, keys, feats, now = stream_of(rng, n_steps=3, batch=8)
+    srv = S.CachedEmbeddingServer(cfg=BASE, tower_fn=tower, miss_budget=8)
+    st, _, _ = srv.serve_many(jnp.eye(DIM), S.init_server_state(BASE),
+                              keys, feats, now, flush_every=0)
+    assert int(st.writebuf.count) == 0
+    assert int(st.touchbuf.count) == 0
+
+
+def test_serve_many_collect_false_returns_no_outputs():
+    rng = np.random.default_rng(4)
+    _, keys, feats, now = stream_of(rng, n_steps=3, batch=8)
+    srv = S.CachedEmbeddingServer(cfg=BASE, tower_fn=tower, miss_budget=8)
+    st, acc, ys = srv.jit_serve_many(
+        jnp.eye(DIM), S.init_server_state(BASE), keys, feats, now,
+        flush_every=1, collect=False)
+    assert ys is None
+    # counters are device-resident: ONE device_get fetches the pytree
+    host = jax.device_get(acc)
+    assert all(np.ndim(v) == 0 for v in host.values())
+    c = ServingCounters.from_stats(host)
+    assert c.requests == 24
+    assert c.combined_writes == 3           # steps → one grouped write each
+
+
+def test_jit_serve_many_donation_move_pattern():
+    """jit_serve_many donates the state like jit_serve_step: chaining
+    dispatches through the move pattern keeps serving correctly."""
+    rng = np.random.default_rng(5)
+    ids, keys, feats, now = stream_of(rng, n_steps=4, batch=8, n_users=8)
+    srv = S.CachedEmbeddingServer(cfg=BASE, tower_fn=tower, miss_budget=8)
+    state = S.init_server_state(BASE)
+    state, acc1, _ = srv.jit_serve_many(jnp.eye(DIM), state, keys, feats,
+                                        now)
+    # replay the same stream: everything within TTL must now hit
+    now2 = now + 4000
+    state, acc2, _ = srv.jit_serve_many(jnp.eye(DIM), state, keys, feats,
+                                        now2)
+    assert int(acc2["direct_hits"]) == 32
+    assert int(acc2["tower_inferences"]) == 0
+
+
+# ------------------------------------------------------------- multi-model
+@pytest.mark.parametrize("flush_every", [1, 3])
+def test_serve_many_matches_loop_multi(flush_every):
+    cfgs = (dataclasses.replace(BASE, model_id=1, n_buckets=64),
+            dataclasses.replace(BASE, model_id=2, cache_ttl_ms=MIN,
+                                eviction="lru"),
+            dataclasses.replace(BASE, model_id=3, coalesce_misses=True,
+                                infer_budget_per_step=4.0))
+    srv = S.MultiModelServer(cfgs=cfgs, tower_fn=tower, miss_budget=16)
+    rng = np.random.default_rng(6)
+    n_steps, batch = 5, 18
+    _, keys, feats, now = stream_of(rng, n_steps=n_steps, batch=batch)
+    slots = jnp.asarray(rng.integers(0, 3, size=(n_steps, batch)),
+                        jnp.int32)
+
+    st_scan, acc, ys = srv.serve_many(
+        jnp.eye(DIM), S.init_multi_server_state(cfgs), slots, keys, feats,
+        now, flush_every=flush_every)
+    st_loop, stats_sum, outs = loop_reference(
+        srv, S.init_multi_server_state(cfgs), keys, feats, now,
+        slots=slots, flush_every=flush_every)
+
+    assert_tree_equal(st_scan, st_loop)
+    for k in ACC_KEYS + ACC_PM_KEYS:
+        np.testing.assert_allclose(np.asarray(acc[k]), stats_sum[k],
+                                   err_msg=k)
+    emb, src, age = ys
+    for i, (e, s, a) in enumerate(outs):
+        np.testing.assert_array_equal(emb[i], e)
+        np.testing.assert_array_equal(src[i], s)
+        np.testing.assert_array_equal(age[i], a)
+
+
+def test_serve_many_multi_per_model_counters_accumulate():
+    cfgs = (dataclasses.replace(BASE, model_id=1),
+            dataclasses.replace(BASE, model_id=2))
+    srv = S.MultiModelServer(cfgs=cfgs, tower_fn=tower, miss_budget=16)
+    rng = np.random.default_rng(7)
+    n_steps, batch = 4, 16
+    _, keys, feats, now = stream_of(rng, n_steps=n_steps, batch=batch)
+    slots = jnp.asarray(np.tile(np.arange(batch) % 2, (n_steps, 1)),
+                        jnp.int32)
+    _, acc, _ = srv.jit_serve_many(
+        jnp.eye(DIM), S.init_multi_server_state(cfgs), slots, keys, feats,
+        now, collect=False)
+    host = jax.device_get(acc)
+    np.testing.assert_array_equal(host["per_model_requests"], [32, 32])
+    assert host["per_model_requests"].sum() == host["requests"]
