@@ -1,0 +1,78 @@
+"""Warm-restart payoff: checkpointed restore vs cold start after a kill.
+
+The durability layer (ft/snapshot + ft/checkpoint + ft/elastic) only earns
+its fsyncs if a restored cache measurably out-serves a cold one on the
+same post-crash stream. This bench runs the full kill/restore
+fault-injection harness (launch/serve.py ``run_serving_restart``): a
+Zipf replay snapshotted at checkpoint boundaries, a FailureInjector burst
+that picks the kill step, a deliberately torn final checkpoint the restore
+must skip, then four recoveries over the SAME stream — bit-exact same
+geometry, elastic 2×-grow, elastic ½×-shrink, and cold.
+
+Acceptance (asserted by the CI docs job on the written JSON):
+
+* ``warm_vs_cold_gain`` > 0 — the warm restore's recovery hit rate beats
+  the cold start's (ISSUE 6: the checkpoint pays for itself);
+* ``parity.pass`` — grown tables preserve EVERY live snapshot entry,
+  shrunk tables serve a value-bit-exact subset;
+* ``torn_step_skipped`` — restore landed on the committed snapshot, not
+  the torn one;
+* ``ledger_continuous`` — restored ServingCounters resume additively
+  across the kill.
+
+Writes ``BENCH_restart.json`` (schema ``ercache-bench-restart/1``) — the
+single source of truth for this axis (not duplicated into
+BENCH_serve.json, same rationale as bench_eviction/bench_overload).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+from benchmarks import common
+from repro.launch.serve import run_serving_restart
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_restart.json")
+
+
+def run(report):
+    quick = getattr(common, "QUICK", False)
+    kw = dict(arch="sasrec", backend="jnp", seed=0, log=lambda *a: None)
+    if quick:
+        kw.update(pre_steps=120, recovery_steps=60, users=1200, batch=128,
+                  checkpoint_every=30, n_buckets=1 << 11, chunk_steps=30)
+    else:
+        kw.update(pre_steps=240, recovery_steps=120, users=3000, batch=256,
+                  checkpoint_every=40, n_buckets=1 << 12, chunk_steps=40)
+
+    out = run_serving_restart(**kw)
+    workdir = out.get("workdir")
+    if workdir and os.path.isdir(workdir):        # tmpdir of snapshots
+        shutil.rmtree(workdir, ignore_errors=True)
+        out["workdir"] = None
+
+    for name, v in out["variants"].items():
+        report.add(f"restart_{name}", 0.0,
+                   f"mode={v['mode']}_hit={v['recovery_hit_rate']:.4f}"
+                   f"_infer={v['recovery_tower_inferences']}")
+    report.add("restart_warm_vs_cold", 0.0,
+               f"gain={out['warm_vs_cold_gain']:+.4f}"
+               f"_parity={out['parity']['pass']}"
+               f"_torn_skipped={out['torn_step_skipped']}")
+
+    metrics = {
+        "schema": "ercache-bench-restart/1",
+        "quick": quick,
+        **{k: out[k] for k in (
+            "users", "batch", "n_buckets", "zipf_a", "ttl_min", "step_ms",
+            "kill_step", "checkpoint_every", "recovery_steps", "backend",
+            "pre_hit_rate", "torn_step_skipped", "ledger_continuous",
+            "warm_vs_cold_gain", "variants", "parity", "wall_s")},
+    }
+    if getattr(common, "WRITE_JSON", True):
+        with open(JSON_PATH, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        print(f"# wrote {JSON_PATH}")
+    return None

@@ -35,11 +35,12 @@ BENCHES = [
     ("eviction", "benchmarks.bench_eviction"),
     ("overload", "benchmarks.bench_overload"),
     ("stream", "benchmarks.bench_stream"),
+    ("restart", "benchmarks.bench_restart"),
 ]
 
 # the fast, serve-path-focused subset run by CI (--quick with no --only)
 QUICK_BENCHES = ("kernel_probe", "serve_path", "multi_model", "eviction",
-                 "overload", "stream")
+                 "overload", "stream", "restart")
 
 
 def main() -> None:

@@ -98,6 +98,25 @@ def init_cache(n_buckets: int, ways: int, dim: int,
     )
 
 
+def flat_entries(state: CacheState):
+    """Every slot of a table as flat per-entry vectors (bucket-major,
+    way-minor), plus the occupancy mask.
+
+    The restore-side elastic rehash (ft/elastic.py) consumes this: it
+    filters live entries, re-buckets them under a new geometry, and
+    replays them through the normal insert plan. Returns
+    ``(keys, values, write_ts, last_access_ts, live)`` with shapes
+    ``(Nb*W,)`` / ``(Nb*W, dim)``; ``live`` is True where the slot holds
+    a key (any age — TTL filtering is the caller's policy decision).
+    """
+    n = state.n_buckets * state.ways
+    keys = Key64(hi=state.key_hi.reshape(n), lo=state.key_lo.reshape(n))
+    live = ~((keys.hi == EMPTY_HI) & (keys.lo == EMPTY_LO))
+    return (keys, state.values.reshape(n, state.dim),
+            state.write_ts.reshape(n), state.last_access_ts.reshape(n),
+            live)
+
+
 def _ttl_cols(ttl_ms) -> jnp.ndarray:
     """Scalar TTL or per-query (B,) TTLs → broadcastable against (B, W).
 

@@ -58,6 +58,16 @@ class ServingCounters:
             failover_serves=g("failover_serves"),
             combined_writes=g("steps") or g("combined_writes"))
 
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ServingCounters":
+        """Inverse of :meth:`as_dict` — the restore side of checkpointed
+        counters (ft/snapshot.py). Only dataclass fields are read; derived
+        rates and unknown keys are ignored, missing fields default to 0,
+        so counters restored from an older snapshot schema still resume
+        additively."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: int(v) for k, v in d.items() if k in names})
+
     @property
     def hit_rate(self) -> float:
         return self.direct_hits / max(self.requests, 1)

@@ -832,6 +832,26 @@ class MultiModelServer:
         return jax.jit(self.flush, donate_argnums=(0,))
 
 
+def cache_image(state):
+    """The durable subset of a server state — what a warm-restart snapshot
+    stores (ft/snapshot.py): both cache tables plus the admission token
+    bucket. Works on :class:`ServerState` and :class:`MultiServerState`
+    alike. The write/touch rings are deliberately NOT part of the image:
+    the snapshot path drains them into the tables first (``flush``), so
+    the image is a pure cache state with no half-applied async work."""
+    return {"direct": state.direct, "failover": state.failover,
+            "budget": state.budget}
+
+
+def with_cache_image(state, image):
+    """Graft a restored durable image onto a freshly initialized state of
+    the SAME shape; the buffers keep their cold (empty) allocation — the
+    snapshot drained them, so empty rings are the faithful restore."""
+    return state._replace(direct=image["direct"],
+                          failover=image["failover"],
+                          budget=image["budget"])
+
+
 def serve_step_no_cache(tower_fn: Callable, params, keys: Key64, features,
                         failure_mask: Optional[jnp.ndarray] = None
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -3,19 +3,29 @@
 Layout::
 
     <dir>/step_000123/
-        manifest.json      # tree structure, leaf shapes/dtypes, shard map
+        manifest.json      # tree structure, leaf shapes/dtypes, shard map,
+                           # optional caller metadata (``user_meta``)
         shard_00000.npz    # flat leaves (or row-ranges of big leaves)
         ...
         COMMITTED          # written LAST — absence marks a torn checkpoint
 
 Atomicity: writes go to ``step_X.tmp-<nonce>`` and the directory is renamed
-into place only after the COMMITTED marker is fsync'd; ``latest_step`` skips
-uncommitted/torn directories, so a coordinator killed mid-save restarts from
-the previous complete checkpoint (crash-consistency test covers this).
+into place only after the COMMITTED marker is fsync'd; the PARENT directory
+is fsync'd after the rename so the commit itself survives power loss.
+``latest_step`` skips uncommitted/torn directories, so a coordinator killed
+mid-save restarts from the previous complete checkpoint (crash-consistency
+test covers this). ``save`` also garbage-collects orphaned ``.tmp-*``
+directories left by earlier crashes and, with ``retain_last_k``, prunes all
+but the newest K committed checkpoints.
 
 Large leaves are row-split into ``max_shard_bytes`` pieces — the multi-host
 pattern where each host writes its own shard range; here one process writes
 all of them, but restore-side reassembly is identical.
+
+Restore comes in two shapes: :func:`restore` rebuilds a pytree whose leaf
+shapes must match the checkpoint exactly, while :func:`restore_raw` hands
+back the flat ``{keystr: np.ndarray}`` dict for callers that re-shape the
+state themselves (the elastic cache rehash, ft/elastic.py).
 """
 from __future__ import annotations
 
@@ -38,15 +48,53 @@ def _leaf_paths(tree: PyTree) -> List[Tuple[str, Any]]:
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
 
 
+def _gc_tmp_dirs(directory: str, keep: Optional[str] = None) -> None:
+    """Remove orphaned ``.tmp-<nonce>`` directories (crashed mid-save)."""
+    if not os.path.isdir(directory):
+        return
+    for name in os.listdir(directory):
+        full = os.path.join(directory, name)
+        if ".tmp-" in name and full != keep:
+            shutil.rmtree(full, ignore_errors=True)
+
+
+def _fsync_dir(directory: str) -> None:
+    """Flush directory metadata (the rename) to disk; best-effort on
+    filesystems without directory fsync."""
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save(directory: str, step: int, tree: PyTree,
-         max_shard_bytes: int = 256 << 20) -> str:
-    """Write one atomic checkpoint; returns the final path."""
+         max_shard_bytes: int = 256 << 20,
+         meta: Optional[Dict[str, Any]] = None,
+         retain_last_k: Optional[int] = None) -> str:
+    """Write one atomic checkpoint; returns the final path.
+
+    ``meta`` is a JSON-serializable dict stored in the manifest
+    (``read_meta`` returns it) — shape/config fingerprints, counters,
+    anything the restore side needs before touching arrays.
+    ``retain_last_k`` prunes all but the newest K committed checkpoints
+    after the commit (:func:`gc_old`); orphaned ``.tmp-*`` directories
+    from crashed saves are garbage-collected unconditionally.
+    """
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp-" + secrets.token_hex(4)
     os.makedirs(tmp, exist_ok=True)
+    _gc_tmp_dirs(directory, keep=tmp)
 
     leaves = _leaf_paths(tree)
     manifest: Dict[str, Any] = {"step": step, "leaves": {}, "shards": []}
+    if meta is not None:
+        manifest["user_meta"] = meta
     shard_idx = 0
     buf: Dict[str, np.ndarray] = {}
     buf_bytes = 0
@@ -96,6 +144,11 @@ def save(directory: str, step: int, tree: PyTree,
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    # The rename lives in the PARENT directory's metadata: fsync it, or a
+    # power loss can roll the commit back even though COMMITTED is durable.
+    _fsync_dir(directory)
+    if retain_last_k is not None:
+        gc_old(directory, keep_last=retain_last_k)
     return final
 
 
@@ -117,12 +170,23 @@ def latest_step(directory: str) -> Optional[int]:
     return best
 
 
-def restore(directory: str, step: int, like: PyTree) -> PyTree:
-    """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs)."""
+def _manifest(directory: str, step: int) -> Dict[str, Any]:
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+        return json.load(f)
+
+
+def read_meta(directory: str, step: int) -> Optional[Dict[str, Any]]:
+    """The caller metadata stored by ``save(..., meta=...)`` (or None)."""
+    return _manifest(directory, step).get("user_meta")
+
+
+def restore_raw(directory: str, step: int) -> Dict[str, np.ndarray]:
+    """Load a checkpoint as a flat ``{keystr: array}`` dict, no shape
+    contract — the restore side of shape-changing (elastic) transitions,
+    which re-bucket the arrays instead of loading them in place."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    manifest = _manifest(directory, step)
     shard_data: Dict[int, Any] = {}
 
     def shard(i: int):
@@ -142,7 +206,13 @@ def restore(directory: str, step: int, like: PyTree) -> PyTree:
                 lo, hi = part["rows"]
                 arr[lo:hi] = data
         out_by_key[key] = arr
+    return out_by_key
 
+
+def restore(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs)."""
+    out_by_key = restore_raw(directory, step)
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for pth, leaf in flat:

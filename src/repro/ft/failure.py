@@ -40,9 +40,26 @@ class FailureInjector:
                 return self.burst_rate
         return self.base_rate
 
+    def in_burst(self, now_ms: int) -> bool:
+        return any(lo <= now_ms < hi for lo, hi in self.burst_windows_ms)
+
     def mask(self, n: int, now_ms: int = 0) -> np.ndarray:
         """(n,) bool — True = this inference request fails."""
         return self._rng.uniform(size=n) < self.rate_at(now_ms)
+
+    def kill_step(self, step_times_ms, checkpoint_every: int
+                  ) -> Optional[int]:
+        """The first checkpoint-boundary step whose clock falls inside a
+        burst window — where the kill/restore harness (launch/serve.py
+        --restart) crashes the server: a process death mid-incident,
+        landing exactly on a snapshot boundary so the restore's recovery
+        is measured from a committed checkpoint. None when no boundary
+        lands in a window."""
+        for s in range(checkpoint_every, len(step_times_ms),
+                       checkpoint_every):
+            if self.in_burst(int(step_times_ms[s])):
+                return s
+        return None
 
 
 @dataclasses.dataclass

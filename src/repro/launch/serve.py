@@ -39,6 +39,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import tempfile
 import time
 
 import jax
@@ -46,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import cache as cache_lib
 from repro.core import server as srv_lib
 from repro.core.config import (CacheConfig, MINUTE_MS, HOUR_MS,
                                multi_model_tier_configs)
@@ -54,6 +57,7 @@ from repro.core.metrics import ServingCounters, power_savings
 from repro.data.access_patterns import (FIG6_KNOTS, InterArrivalDist,
                                         StreamConfig, generate_stream_fast,
                                         simulate_hit_rate)
+from repro.ft import snapshot as snap_lib
 from repro.ft.failure import FailureInjector
 from repro.models import recsys as rec_lib
 
@@ -195,6 +199,8 @@ def run_serving_overload(arch: str = "sasrec", minutes: int = 60,
                          budget_frac: float = 0.5,
                          burst_start_frac: float = 0.4,
                          burst_len_frac: float = 0.2,
+                         failure_rate: float = 0.0,
+                         failure_burst_rate: float = None,
                          chunk_steps: int = 64,
                          n_buckets: int = 1 << 14, backend: str = "jnp",
                          seed: int = 0, log=print):
@@ -214,6 +220,16 @@ def run_serving_overload(arch: str = "sasrec", minutes: int = 60,
     outage and draining after it. Each phase is a contiguous batch range
     behind ONE server, so it chunks straight onto the scan driver — the
     phase bookkeeping costs one stats fetch per chunk, not per step.
+
+    ``failure_rate`` / ``failure_burst_rate`` wire a ``FailureInjector``
+    in as the failures-stream generator (paper Table 3's real inference
+    failures, 0.05%–6.5%): a base Bernoulli failure rate everywhere,
+    jumping to the burst rate during the outage window — the regional
+    incident and the capacity outage coincide, the paper's worst case.
+    The per-phase report then carries the Table-3 counterfactual split:
+    ``fallback_rate`` (with the failover tier assisting) vs
+    ``fallback_rate_wo_failover`` (every failover-tier serve would have
+    been a default embedding without it).
     """
     tower_cfg, params, tower_fn, features_of = build_tower(arch)
     stream_cfg = StreamConfig(n_users=users, horizon_s=minutes * 60.0,
@@ -248,6 +264,17 @@ def run_serving_overload(arch: str = "sasrec", minutes: int = 60,
     burst_hi = int(n_batches_total * (burst_start_frac + burst_len_frac))
     burst_rng = np.random.default_rng(seed + 1)
 
+    # inference-failure stream: burst window aligned to the outage phase
+    injector = None
+    if failure_rate > 0 or failure_burst_rate is not None:
+        lo_ms = int(times_ms[min(burst_lo * batch, len(times_ms) - 1)])
+        hi_ms = int(times_ms[min(burst_hi * batch, len(times_ms) - 1)]) + 1
+        injector = FailureInjector(
+            base_rate=failure_rate,
+            burst_rate=(failure_rate if failure_burst_rate is None
+                        else failure_burst_rate),
+            burst_windows_ms=((lo_ms, hi_ms),), seed=seed)
+
     spans = [("pre", 0, burst_lo, full_srv),
              ("outage", burst_lo, burst_hi, outage_srv),
              ("post", burst_hi, n_batches_total, full_srv)]
@@ -263,11 +290,11 @@ def run_serving_overload(arch: str = "sasrec", minutes: int = 60,
                 # — re-access demand beyond what the renewal stream carries
                 override = burst_rng.integers(
                     0, users, size=(n_steps, batch)).astype(np.int64)
-            keys, feats, nows, _ = _stage_chunk(
+            keys, feats, nows, fails = _stage_chunk(
                 uids, times_ms, features_of, b_lo * batch, n_steps, batch,
-                override_ids=override)
+                injector=injector, override_ids=override)
             state, acc, _ = server.jit_serve_many(
-                params, state, keys, feats, nows,
+                params, state, keys, feats, nows, fails,
                 flush_every=1, collect=False)
             s = jax.device_get(acc)          # ONE transfer per chunk
             phases[phase].merge(ServingCounters.from_stats(s))
@@ -278,21 +305,244 @@ def run_serving_overload(arch: str = "sasrec", minutes: int = 60,
     out = {"budget_per_step": round(budget, 2),
            "budget_frac": budget_frac,
            "provisioned_miss_rate": round(miss_rate, 4),
+           "failure_rate": failure_rate,
+           "failure_burst_rate": (failure_rate if failure_burst_rate is None
+                                  else failure_burst_rate),
            "wall_s": round(wall, 2), "phases": {}}
     log(f"[serve-overload {arch}] budget={budget:.1f}/step "
         f"({budget_frac:g}x of {miss_rate:.3f} miss demand) "
-        f"burst=batches[{burst_lo}:{burst_hi}] ({wall:.1f}s)")
+        f"burst=batches[{burst_lo}:{burst_hi}]"
+        + (f" failures={failure_rate:g}/"
+           f"{out['failure_burst_rate']:g}" if injector else "")
+        + f" ({wall:.1f}s)")
     for p, c in phases.items():
         d = c.as_dict()
         d["mean_failover_stale_ms"] = round(stale[p][0] / max(stale[p][1], 1),
                                             1)
+        # Table 3's counterfactual: without the failover tier, every
+        # degradation-chain failover serve would have been a default
+        # embedding — the with/without-failover fallback-rate split.
+        d["fallback_rate_wo_failover"] = round(
+            (c.fallbacks + c.failover_serves) / max(c.requests, 1), 6)
         out["phases"][p] = d
         log(f"  {p:>5}: requests={d['requests']} hit={d['hit_rate']:.3f}"
             f" deferred={d['deferred']}"
+            f" failures={d['tower_failures']}"
             f" failover_serves={d['failover_serves']}"
             f" (stale {d['mean_failover_stale_ms']:.0f}ms)"
             f" defaults={d['fallbacks']}"
+            f" fallback_rate={d['fallback_rate']:.4f}"
+            f"/wo_failover={d['fallback_rate_wo_failover']:.4f}"
             f" sla_served={d['sla_served_rate']:.4f}")
+    return out
+
+
+def _stage_steps(ids, nows_ms, features_of):
+    """Stage an explicit (S, B) id matrix + (S,) clock as the scan
+    driver's stream — the restart harness's Zipf replay has no underlying
+    renewal stream to index into (cf. :func:`_stage_chunk`)."""
+    khi, klo, feats = [], [], []
+    for s in range(ids.shape[0]):
+        k = Key64.from_int(np.asarray(ids[s], np.int64))
+        khi.append(k.hi)
+        klo.append(k.lo)
+        feats.append(features_of(ids[s], int(nows_ms[s])))
+    return (Key64(hi=jnp.stack(khi), lo=jnp.stack(klo)),
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *feats),
+            jnp.asarray(nows_ms, jnp.int32))
+
+
+def run_serving_restart(arch: str = "sasrec", pre_steps: int = 240,
+                        recovery_steps: int = 120, users: int = 3000,
+                        batch: int = 256, ttl_min: float = 5.0,
+                        checkpoint_every: int = 40, step_ms: int = 250,
+                        zipf_a: float = 1.2, n_buckets: int = 1 << 12,
+                        backend: str = "jnp", chunk_steps: int = 40,
+                        workdir: str = None, seed: int = 0, log=print):
+    """Kill/restore fault-injection harness (DESIGN.md §10).
+
+    Replays a Zipf-skewed request stream while snapshotting the cache at
+    every checkpoint boundary (``ft/snapshot.snapshot_server``, last-3
+    retention). A ``FailureInjector`` burst window covering the middle of
+    the stream models the incident; the process is killed at the first
+    checkpoint boundary inside it (``FailureInjector.kill_step``) — the
+    in-memory state is discarded and the NEXT save is left torn (a
+    directory without its COMMITTED marker), which the restore must skip.
+
+    Recovery is then measured four ways over the SAME post-kill stream:
+
+    * **warm_same** — restore into the identical geometry (bit-exact);
+    * **warm_grow** / **warm_shrink** — restore into a 2× / ½× table via
+      the elastic rehash;
+    * **cold** — a fresh table, the restart without the durability layer.
+
+    The report carries per-chunk hit-rate recovery curves, the
+    resized-restore probe-parity check (every live snapshot entry the
+    grown table must still serve bit-exactly; the shrunk table serves a
+    subset, values bit-exact on survivors), and the counters-provenance
+    check (the restored ledger resumes additively across the kill).
+    """
+    tower_cfg, params, tower_fn, features_of = build_tower(arch)
+    ttl_ms = int(ttl_min * MINUTE_MS)
+    base_cfg = CacheConfig(
+        model_id=1, model_type="ctr", cache_ttl_ms=ttl_ms,
+        failover_ttl_ms=int(2 * HOUR_MS), n_buckets=n_buckets, ways=8,
+        value_dim=tower_cfg.user_embed_dim, backend=backend)
+
+    total = pre_steps + recovery_steps
+    rng = np.random.default_rng(seed)
+    ids_all = rng.zipf(zipf_a, size=(total, batch)).astype(np.int64) % users
+    nows_all = (np.arange(total, dtype=np.int64) + 1) * step_ms
+
+    # The incident: a failure burst over the back half of the pre phase;
+    # the process dies at the first checkpoint boundary inside it.
+    burst = (int(nows_all[pre_steps // 2]), int(nows_all[pre_steps - 1]) + 1)
+    injector = FailureInjector(base_rate=0.0, burst_rate=1.0,
+                               burst_windows_ms=(burst,), seed=seed)
+    kill = injector.kill_step(nows_all, checkpoint_every)
+    if kill is None or kill > pre_steps:
+        kill = max((pre_steps // checkpoint_every) * checkpoint_every,
+                   checkpoint_every)
+    if workdir is None:
+        workdir = tempfile.mkdtemp(prefix="ercache-restart-")
+
+    def make_server(nb):
+        cfg = dataclasses.replace(base_cfg, n_buckets=nb)
+        return srv_lib.CachedEmbeddingServer(
+            cfg=cfg, tower_fn=tower_fn, miss_budget=batch), cfg
+
+    server, cfg0 = make_server(n_buckets)
+    state = srv_lib.init_server_state(cfg0, writebuf_capacity=batch * 4)
+
+    # ---- phase 1: serve to the kill, snapshotting at every boundary ----
+    t0 = time.perf_counter()
+    pre_counters = ServingCounters()
+    for seg_lo in range(0, kill, checkpoint_every):
+        n = min(checkpoint_every, kill - seg_lo)
+        keys, feats, nows = _stage_steps(ids_all[seg_lo:seg_lo + n],
+                                         nows_all[seg_lo:seg_lo + n],
+                                         features_of)
+        state, acc, _ = server.jit_serve_many(
+            params, state, keys, feats, nows, flush_every=1, collect=False)
+        pre_counters.merge(ServingCounters.from_stats(jax.device_get(acc)))
+        state = snap_lib.snapshot_server(
+            workdir, seg_lo + n, server, state,
+            int(nows_all[seg_lo + n - 1]), counters=pre_counters,
+            retain_last_k=3)
+    # The crash: the in-memory state dies, and a save that was in flight
+    # is left torn (manifest truncated, no COMMITTED marker) — restore
+    # must skip it and pick the kill-boundary snapshot.
+    torn = os.path.join(workdir, f"step_{kill + checkpoint_every:08d}")
+    os.makedirs(torn, exist_ok=True)
+    with open(os.path.join(torn, "manifest.json"), "w") as f:
+        f.write("{")
+    del state
+    restore_now = int(nows_all[kill - 1])
+
+    # ---- phase 2: restore (3 geometries) + cold, replay the SAME stream
+    rec_ids = ids_all[kill:kill + recovery_steps]
+    rec_nows = nows_all[kill:kill + recovery_steps]
+    specs = [("warm_same", n_buckets, True),
+             ("warm_grow", n_buckets * 2, True),
+             ("warm_shrink", max(n_buckets // 2, 1), True),
+             ("cold", n_buckets, False)]
+    variants, probes = {}, {}
+    uniq = np.unique(ids_all[:kill])
+    probe_keys = Key64.from_int(uniq.astype(np.int64))
+    for name, nb, warm in specs:
+        vsrv, vcfg = make_server(nb)
+        if warm:
+            r = snap_lib.restore_server(workdir, vsrv, now_ms=restore_now,
+                                        writebuf_capacity=batch * 4)
+            vstate, ledger = r.state, r.counters
+            mode, restored_step = r.mode, r.step
+            # probe BEFORE serving mutates (donates) the restored table
+            res = cache_lib.lookup(vstate.direct, probe_keys, restore_now,
+                                   ttl_ms)
+            probes[name] = (np.asarray(res.hit), np.asarray(res.values))
+        else:
+            vstate = srv_lib.init_server_state(vcfg,
+                                               writebuf_capacity=batch * 4)
+            ledger, mode, restored_step = ServingCounters(), "cold", None
+        resumed = ledger.requests
+        rec = ServingCounters()
+        curve = []
+        for lo, n in _chunks(recovery_steps, chunk_steps):
+            keys, feats, nows = _stage_steps(rec_ids[lo:lo + n],
+                                             rec_nows[lo:lo + n],
+                                             features_of)
+            vstate, acc, _ = vsrv.jit_serve_many(
+                params, vstate, keys, feats, nows, flush_every=1,
+                collect=False)
+            c = ServingCounters.from_stats(jax.device_get(acc))
+            curve.append(round(c.hit_rate, 4))
+            rec.merge(c)
+        ledger.merge(rec)
+        variants[name] = {
+            "mode": mode, "restored_step": restored_step, "n_buckets": nb,
+            "recovery_hit_rate": round(rec.hit_rate, 4),
+            "recovery_curve": curve,
+            "recovery_tower_inferences": rec.tower_inferences,
+            "resumed_requests": resumed,
+            "total_requests": ledger.requests,
+        }
+    wall = time.perf_counter() - t0
+
+    # ---- resized-restore probe parity (on the pre-kill key population) -
+    h_same, v_same = probes["warm_same"]
+    h_grow, v_grow = probes["warm_grow"]
+    h_shr, v_shr = probes["warm_shrink"]
+    both_g = h_same & h_grow
+    both_s = h_same & h_shr
+    parity = {
+        "probed_keys": int(uniq.size),
+        "snapshot_live": int(h_same.sum()),
+        "grow_survivors": int(h_grow.sum()),
+        "shrink_survivors": int(h_shr.sum()),
+        "grow_preserves_all_live": bool((h_grow | ~h_same).all()),
+        "shrink_serves_subset": bool((~h_shr | h_same).all()),
+        "values_bit_exact": bool(
+            np.array_equal(v_grow[both_g], v_same[both_g])
+            and np.array_equal(v_shr[both_s], v_same[both_s])),
+    }
+    parity["pass"] = (parity["grow_preserves_all_live"]
+                      and parity["shrink_serves_subset"]
+                      and parity["values_bit_exact"])
+
+    out = {
+        "pre_steps": kill, "recovery_steps": recovery_steps,
+        "kill_step": kill, "checkpoint_every": checkpoint_every,
+        "step_ms": step_ms, "users": users, "batch": batch,
+        "zipf_a": zipf_a, "ttl_min": ttl_min, "n_buckets": n_buckets,
+        "backend": backend,
+        "pre_hit_rate": round(pre_counters.hit_rate, 4),
+        "torn_step_skipped": all(
+            variants[n]["restored_step"] == kill
+            for n in ("warm_same", "warm_grow", "warm_shrink")),
+        "ledger_continuous": (
+            variants["warm_same"]["total_requests"]
+            == (kill + recovery_steps) * batch),
+        "warm_vs_cold_gain": round(
+            variants["warm_same"]["recovery_hit_rate"]
+            - variants["cold"]["recovery_hit_rate"], 4),
+        "variants": variants, "parity": parity,
+        "wall_s": round(wall, 2), "workdir": workdir,
+    }
+    log(f"[serve-restart {arch}] kill@step {kill} "
+        f"(ckpt every {checkpoint_every}), recovery {recovery_steps} steps,"
+        f" pre_hit={out['pre_hit_rate']:.3f} ({wall:.1f}s)")
+    for name, v in variants.items():
+        log(f"  {name:>11}: mode={v['mode']:<8}"
+            f" recovery_hit={v['recovery_hit_rate']:.3f}"
+            f" tower_inferences={v['recovery_tower_inferences']}"
+            f" curve={v['recovery_curve'][:4]}")
+    log(f"  parity: live={parity['snapshot_live']}"
+        f" grow={parity['grow_survivors']}"
+        f" shrink={parity['shrink_survivors']}"
+        f" pass={parity['pass']} | warm-vs-cold gain "
+        f"{out['warm_vs_cold_gain']:+.3f} | torn skipped "
+        f"{out['torn_step_skipped']} | ledger continuous "
+        f"{out['ledger_continuous']}")
     return out
 
 
@@ -415,6 +665,18 @@ def main():
     ap.add_argument("--budget-frac", type=float, default=0.5,
                     help="--overload: inference budget as a fraction of "
                          "the stream's steady-state miss demand")
+    ap.add_argument("--failure-burst-rate", type=float, default=None,
+                    help="--overload: failure probability inside the "
+                         "outage window (FailureInjector burst; default: "
+                         "same as --failure-rate)")
+    ap.add_argument("--restart", action="store_true",
+                    help="kill/restore fault-injection harness: snapshot "
+                         "at checkpoint boundaries, kill mid-stream, "
+                         "restore same/grown/shrunk geometries and "
+                         "compare hit-rate recovery vs a cold restart "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--checkpoint-every", type=int, default=40,
+                    help="--restart: serve steps between snapshots")
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--eviction", default="ttl", choices=["ttl", "lru"],
                     help="direct/failover victim order (paper §3.3); lru "
@@ -423,7 +685,19 @@ def main():
     ap.add_argument("--multi-buckets", type=int, default=1 << 12,
                     help="per-model direct-cache buckets in --multi mode")
     args = ap.parse_args()
-    if args.overload:
+    if args.restart:
+        if args.multi or args.overload:
+            ap.error("--restart drives the single-model server; drop "
+                     "--multi/--overload")
+        if args.no_cache or args.coalesce:
+            ap.error("--restart is a cache-durability scenario; drop "
+                     "--no-cache/--coalesce")
+        run_serving_restart(
+            arch=args.arch, users=args.users, batch=args.batch,
+            ttl_min=5.0 if args.ttl_min is None else args.ttl_min,
+            checkpoint_every=args.checkpoint_every, backend=args.backend,
+            chunk_steps=args.chunk_steps)
+    elif args.overload:
         if args.multi:
             ap.error("--overload drives the single-model server; the "
                      "multi-model registry sets budgets per model "
@@ -440,7 +714,10 @@ def main():
             arch=args.arch, minutes=args.minutes, users=args.users,
             batch=args.batch,
             ttl_min=5.0 if args.ttl_min is None else args.ttl_min,
-            budget_frac=args.budget_frac, backend=args.backend,
+            budget_frac=args.budget_frac,
+            failure_rate=args.failure_rate,
+            failure_burst_rate=args.failure_burst_rate,
+            backend=args.backend,
             chunk_steps=args.chunk_steps)
     elif args.multi:
         # fail loudly on flags the multi tier cannot honor: TTLs come from

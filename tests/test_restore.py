@@ -1,0 +1,372 @@
+"""Warm-restart layer (DESIGN.md §10): snapshot/restore round trips,
+elastic rehash on resize, torn-checkpoint skip, fail-open degradation to
+cold init, and counters provenance across the kill/restore boundary."""
+import dataclasses
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as C
+from repro.core import server as S
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64
+from repro.core.metrics import ServingCounters
+from repro.ft import checkpoint as ckpt
+from repro.ft import snapshot as snap
+from repro.ft.elastic import rehash_cache
+
+DIM = 8
+MIN = 60_000
+HOUR = 60 * MIN
+
+BASE = CacheConfig(model_id=1, model_type="ctr", n_buckets=64, ways=4,
+                   value_dim=DIM, cache_ttl_ms=30 * MIN,
+                   failover_ttl_ms=2 * HOUR)
+
+
+def tower(params, feats):
+    return feats @ params
+
+
+def keys_of(ids):
+    return Key64.from_int(np.asarray(ids, np.int64))
+
+
+def feats_of(ids):
+    """Deterministic per-user features → reproducible embeddings."""
+    ids = np.asarray(ids, np.int64)
+    base = (ids[:, None] * 31 + np.arange(DIM)[None, :]) % 97
+    return jnp.asarray(base, jnp.float32) / 97.0
+
+
+def served_server(cfg, ids, now_ms, budget=None):
+    """Serve one batch through the real path; state still holds buffered
+    writes (snapshot_server must drain them)."""
+    if budget is not None:
+        cfg = dataclasses.replace(cfg, infer_budget_per_step=budget)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower,
+                                  miss_budget=len(ids))
+    state = S.init_server_state(cfg, writebuf_capacity=2 * len(ids))
+    params = jnp.eye(DIM, dtype=jnp.float32)
+    res = srv.serve_step(params, state, keys_of(ids), feats_of(ids), now_ms)
+    return srv, res.state, params
+
+
+# ------------------------------------------------------- checkpoint hygiene
+def test_save_gcs_orphan_tmp_dirs(tmp_path):
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, ".tmp-deadbeef"))       # torn earlier save
+    ckpt.save(d, 3, {"x": np.ones(4, np.float32)})
+    assert not glob.glob(os.path.join(d, ".tmp-*"))
+    assert ckpt.latest_step(d) == 3
+
+
+def test_save_retain_last_k_prunes(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        ckpt.save(d, s, {"x": np.full(2, s, np.float32)}, retain_last_k=2)
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(d))
+    assert steps == [3, 4]
+
+
+def test_save_meta_roundtrip(tmp_path):
+    d = str(tmp_path)
+    meta = {"schema": "test/1", "now_ms": 123, "nested": {"a": [1, 2]}}
+    ckpt.save(d, 9, {"x": np.arange(6, dtype=np.float32)}, meta=meta)
+    assert ckpt.read_meta(d, 9) == meta
+    raw = ckpt.restore_raw(d, 9)
+    (k, v), = raw.items()
+    np.testing.assert_array_equal(v, np.arange(6, dtype=np.float32))
+
+
+def test_read_meta_absent_is_none(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, {"x": np.ones(2, np.float32)})
+    assert ckpt.read_meta(d, 1) is None
+
+
+# --------------------------------------------------------- counters ledger
+def test_counters_from_dict_inverse_of_as_dict():
+    c = ServingCounters(requests=10, direct_hits=7, fallbacks=1,
+                        failover_serves=2, admitted=3)
+    d = c.as_dict()                    # includes derived rates
+    d["unknown_future_field"] = 42     # older-schema tolerance
+    r = ServingCounters.from_dict(d)
+    assert r == c
+    r.merge(ServingCounters(requests=5, direct_hits=5))
+    assert (r.requests, r.direct_hits) == (15, 12)
+
+
+# ------------------------------------------------------------ elastic rehash
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_rehash_grow_preserves_entries_and_timestamps(backend):
+    old = C.init_cache(8, 2, DIM)
+    ids = np.arange(10, dtype=np.int64)
+    wts = jnp.asarray(np.arange(10) * 100 + 1000, jnp.int32)
+    old = C.insert(old, keys_of(ids), feats_of(ids), now_ms=2000,
+                   ttl_ms=HOUR, ts_ms=wts)
+    res0 = C.lookup(old, keys_of(ids), 2000, HOUR)
+    live0 = np.asarray(res0.hit)
+
+    new, n = rehash_cache(old, C.init_cache(32, 2, DIM), now_ms=2000,
+                          ttl_ms=HOUR)
+    assert n == int(live0.sum())
+    res1 = C.lookup(new, keys_of(ids), 2000, HOUR, backend=backend)
+    hit1 = np.asarray(res1.hit)
+    np.testing.assert_array_equal(hit1, live0)         # every live survives
+    np.testing.assert_array_equal(np.asarray(res1.values)[live0],
+                                  np.asarray(res0.values)[live0])
+    # write timestamps survive the move → TTL expiry dates are preserved
+    np.testing.assert_array_equal(np.asarray(res1.age_ms)[live0],
+                                  np.asarray(res0.age_ms)[live0])
+
+
+def test_rehash_drops_expired_entries():
+    old = C.init_cache(8, 2, DIM)
+    ids = np.arange(6, dtype=np.int64)
+    old = C.insert(old, keys_of(ids), feats_of(ids), now_ms=1000,
+                   ttl_ms=HOUR)
+    new, n = rehash_cache(old, C.init_cache(16, 2, DIM),
+                          now_ms=1000 + HOUR + 1, ttl_ms=HOUR)
+    assert n == 0
+    assert not np.asarray(
+        C.lookup(new, keys_of(ids), 1000, HOUR).hit).any()
+
+
+def test_rehash_shrink_keeps_newest_values_bit_exact():
+    old = C.init_cache(16, 2, DIM)
+    ids = np.arange(24, dtype=np.int64)
+    wts = jnp.asarray(1000 + np.arange(24) * 10, jnp.int32)
+    old = C.insert(old, keys_of(ids), feats_of(ids), now_ms=2000,
+                   ttl_ms=HOUR, ts_ms=wts)
+    res0 = C.lookup(old, keys_of(ids), 2000, HOUR)
+    new, n = rehash_cache(old, C.init_cache(2, 2, DIM), now_ms=2000,
+                          ttl_ms=HOUR)
+    res1 = C.lookup(new, keys_of(ids), 2000, HOUR)
+    hit0, hit1 = np.asarray(res0.hit), np.asarray(res1.hit)
+    assert 0 < hit1.sum() <= 2 * 2                    # capacity-bounded
+    assert not (hit1 & ~hit0).any()                   # survivors ⊆ live
+    np.testing.assert_array_equal(np.asarray(res1.values)[hit1],
+                                  np.asarray(res0.values)[hit1])
+
+
+# ------------------------------------------------- snapshot/restore: single
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_snapshot_restore_bitexact_same_geometry(tmp_path, backend):
+    d = str(tmp_path)
+    cfg = dataclasses.replace(BASE, backend=backend)
+    ids = np.arange(40, dtype=np.int64)
+    srv, state, _ = served_server(cfg, ids, now_ms=1000)
+    c0 = ServingCounters(requests=40, direct_hits=0, tower_inferences=40)
+    drained = snap.snapshot_server(d, 5, srv, state, now_ms=1000,
+                                   counters=c0)
+    del state                                          # "kill"
+
+    r = snap.restore_server(d, srv, now_ms=2000, writebuf_capacity=80)
+    assert (r.mode, r.step) == ("bitexact", 5)
+    assert r.counters == c0                            # ledger resumes
+    for a, b in zip(jax.tree_util.tree_leaves(S.cache_image(drained)),
+                    jax.tree_util.tree_leaves(S.cache_image(r.state))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # rings restart empty: the snapshot drained them into the tables
+    assert int(r.state.writebuf.count) == 0
+    res = C.lookup(r.state.direct, keys_of(ids), 2000, cfg.cache_ttl_ms,
+                   backend=backend)
+    assert np.asarray(res.hit).all()
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_restore_resized_rehash_parity(tmp_path, backend):
+    d = str(tmp_path)
+    cfg = dataclasses.replace(BASE, backend=backend)
+    ids = np.arange(60, dtype=np.int64)
+    srv, state, _ = served_server(cfg, ids, now_ms=1000)
+    snap.snapshot_server(d, 7, srv, state, now_ms=1000)
+    res0 = C.lookup(srv.flush(state, 1000).direct, keys_of(ids), 1000,
+                    cfg.cache_ttl_ms)
+    live = np.asarray(res0.hit)
+    assert live.any()
+
+    for nb, must_keep_all in ((cfg.n_buckets * 2, True),
+                              (cfg.n_buckets // 4, False)):
+        vcfg = dataclasses.replace(cfg, n_buckets=nb)
+        vsrv = S.CachedEmbeddingServer(cfg=vcfg, tower_fn=tower,
+                                       miss_budget=len(ids))
+        r = snap.restore_server(d, vsrv, now_ms=1500,
+                                writebuf_capacity=128)
+        assert (r.mode, r.step) == ("rehash", 7)
+        res1 = C.lookup(r.state.direct, keys_of(ids), 1500,
+                        cfg.cache_ttl_ms, backend=backend)
+        hit1 = np.asarray(res1.hit)
+        if must_keep_all:
+            np.testing.assert_array_equal(hit1, live)
+        else:
+            assert not (hit1 & ~live).any()
+        both = hit1 & live
+        np.testing.assert_array_equal(np.asarray(res1.values)[both],
+                                      np.asarray(res0.values)[both])
+
+
+def test_restore_carries_admission_tokens(tmp_path):
+    d = str(tmp_path)
+    ids = np.arange(16, dtype=np.int64)
+    srv, state, _ = served_server(BASE, ids, now_ms=1000, budget=4.0)
+    drained = snap.snapshot_server(d, 1, srv, state, now_ms=1000)
+    r = snap.restore_server(d, srv, now_ms=2000, writebuf_capacity=32)
+    assert r.mode == "bitexact"
+    np.testing.assert_array_equal(np.asarray(r.state.budget.tokens),
+                                  np.asarray(drained.budget.tokens))
+
+
+def test_restore_skips_torn_snapshot(tmp_path):
+    d = str(tmp_path)
+    ids = np.arange(8, dtype=np.int64)
+    srv, state, _ = served_server(BASE, ids, now_ms=1000)
+    snap.snapshot_server(d, 5, srv, state, now_ms=1000)
+    torn = os.path.join(d, "step_00000009")            # kill mid-save
+    os.makedirs(torn)
+    with open(os.path.join(torn, "manifest.json"), "w") as f:
+        f.write("{")
+    r = snap.restore_server(d, srv, now_ms=1500, writebuf_capacity=16)
+    assert (r.mode, r.step) == ("bitexact", 5)
+
+
+# --------------------------------------------------- fail-open degradation
+def cold_like(srv):
+    return S.init_server_state(srv.cfg, writebuf_capacity=16)
+
+
+def test_restore_missing_dir_is_cold(tmp_path):
+    srv = S.CachedEmbeddingServer(cfg=BASE, tower_fn=tower, miss_budget=8)
+    r = snap.restore_server(str(tmp_path / "nope"), srv, now_ms=0,
+                            writebuf_capacity=16)
+    assert (r.mode, r.step) == ("cold", None)
+    assert r.counters == ServingCounters()
+    assert not np.asarray(C.lookup(
+        r.state.direct, keys_of(np.arange(4)), 0, HOUR).hit).any()
+
+
+def test_restore_foreign_checkpoint_is_cold(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 7, {"x": np.ones(3, np.float32)},
+              meta={"schema": "training/1"})
+    srv = S.CachedEmbeddingServer(cfg=BASE, tower_fn=tower, miss_budget=8)
+    r = snap.restore_server(d, srv, now_ms=0, writebuf_capacity=16)
+    assert (r.mode, r.step) == ("cold", 7)
+    assert "schema" in r.detail
+
+
+def test_restore_value_dim_mismatch_is_cold(tmp_path):
+    d = str(tmp_path)
+    ids = np.arange(8, dtype=np.int64)
+    srv, state, _ = served_server(BASE, ids, now_ms=1000)
+    snap.snapshot_server(d, 2, srv, state, now_ms=1000)
+    wide = dataclasses.replace(BASE, value_dim=2 * DIM)
+    wsrv = S.CachedEmbeddingServer(cfg=wide, tower_fn=tower, miss_budget=8)
+    r = snap.restore_server(d, wsrv, now_ms=1500, writebuf_capacity=16)
+    assert (r.mode, r.step) == ("cold", 2)
+    assert r.state.direct.dim == 2 * DIM
+
+
+def test_restore_corrupt_shard_is_cold_not_raise(tmp_path):
+    d = str(tmp_path)
+    ids = np.arange(8, dtype=np.int64)
+    srv, state, _ = served_server(BASE, ids, now_ms=1000)
+    snap.snapshot_server(d, 3, srv, state, now_ms=1000)
+    shard, = glob.glob(os.path.join(d, "step_00000003", "shard_*.npz"))
+    with open(shard, "wb") as f:
+        f.write(b"garbage")
+    r = snap.restore_server(d, srv, now_ms=1500, writebuf_capacity=16)
+    assert (r.mode, r.step) == ("cold", 3)
+
+
+# ------------------------------------------------- snapshot/restore: multi
+def multi_cfgs(nb=64):
+    return (dataclasses.replace(BASE, model_id=1, n_buckets=nb),
+            dataclasses.replace(BASE, model_id=2, n_buckets=nb // 2,
+                                cache_ttl_ms=5 * MIN, eviction="lru"))
+
+
+def served_multi(cfgs, ids, slots, now_ms):
+    srv = S.MultiModelServer(cfgs=cfgs, tower_fn=tower,
+                             miss_budget=len(ids))
+    state = S.init_multi_server_state(cfgs,
+                                      writebuf_capacity=2 * len(ids))
+    params = jnp.eye(DIM, dtype=jnp.float32)
+    res = srv.serve_step(params, state, jnp.asarray(slots, jnp.int32),
+                         keys_of(ids), feats_of(ids), now_ms)
+    return srv, res.state
+
+
+def test_multi_snapshot_restore_bitexact(tmp_path):
+    d = str(tmp_path)
+    cfgs = multi_cfgs()
+    ids = np.arange(32, dtype=np.int64)
+    slots = np.arange(32) % 2
+    srv, state = served_multi(cfgs, ids, slots, now_ms=1000)
+    drained = snap.snapshot_server(d, 4, srv, state, now_ms=1000)
+    r = snap.restore_server(d, srv, now_ms=2000, writebuf_capacity=64)
+    assert (r.mode, r.step) == ("bitexact", 4)
+    for a, b in zip(jax.tree_util.tree_leaves(S.cache_image(drained)),
+                    jax.tree_util.tree_leaves(S.cache_image(r.state))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_multi_restore_resized_preserves_per_model_entries(tmp_path):
+    d = str(tmp_path)
+    cfgs = multi_cfgs()
+    ids = np.arange(32, dtype=np.int64)
+    slots = np.arange(32) % 2
+    srv, state = served_multi(cfgs, ids, slots, now_ms=1000)
+    snap.snapshot_server(d, 6, srv, state, now_ms=1000)
+    old = srv.flush(state, 1000)
+
+    grown = tuple(dataclasses.replace(c, n_buckets=2 * c.n_buckets)
+                  for c in cfgs)
+    gsrv = S.MultiModelServer(cfgs=grown, tower_fn=tower, miss_budget=32)
+    r = snap.restore_server(d, gsrv, now_ms=1500, writebuf_capacity=64)
+    assert (r.mode, r.step) == ("rehash", 6)
+    for m, cfg in enumerate(cfgs):
+        mids = ids[slots == m]
+        view0 = old.direct.model_view(m, cfg.n_buckets)
+        view1 = r.state.direct.model_view(m, 2 * cfg.n_buckets)
+        res0 = C.lookup(view0, keys_of(mids), 1000, cfg.cache_ttl_ms)
+        res1 = C.lookup(view1, keys_of(mids), 1500, cfg.cache_ttl_ms)
+        live = np.asarray(res0.hit)
+        np.testing.assert_array_equal(np.asarray(res1.hit), live)
+        np.testing.assert_array_equal(np.asarray(res1.values)[live],
+                                      np.asarray(res0.values)[live])
+
+
+def test_multi_model_count_mismatch_is_cold(tmp_path):
+    d = str(tmp_path)
+    cfgs = multi_cfgs()
+    ids = np.arange(16, dtype=np.int64)
+    srv, state = served_multi(cfgs, ids, np.arange(16) % 2, now_ms=1000)
+    snap.snapshot_server(d, 8, srv, state, now_ms=1000)
+    one = S.MultiModelServer(cfgs=cfgs[:1], tower_fn=tower, miss_budget=16)
+    r = snap.restore_server(d, one, now_ms=1500, writebuf_capacity=32)
+    assert (r.mode, r.step) == ("cold", 8)
+
+
+def test_single_snapshot_restores_into_m1_multi_tier(tmp_path):
+    d = str(tmp_path)
+    ids = np.arange(24, dtype=np.int64)
+    srv, state, _ = served_server(BASE, ids, now_ms=1000)
+    snap.snapshot_server(d, 2, srv, state, now_ms=1000)
+    old = srv.flush(state, 1000)
+
+    m1 = S.MultiModelServer(cfgs=(BASE,), tower_fn=tower, miss_budget=24)
+    r = snap.restore_server(d, m1, now_ms=1500, writebuf_capacity=48)
+    assert (r.mode, r.step) == ("rehash", 2)
+    view = r.state.direct.model_view(0, BASE.n_buckets)
+    res0 = C.lookup(old.direct, keys_of(ids), 1000, BASE.cache_ttl_ms)
+    res1 = C.lookup(view, keys_of(ids), 1500, BASE.cache_ttl_ms)
+    live = np.asarray(res0.hit)
+    np.testing.assert_array_equal(np.asarray(res1.hit), live)
+    np.testing.assert_array_equal(np.asarray(res1.values)[live],
+                                  np.asarray(res0.values)[live])
