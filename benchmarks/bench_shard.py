@@ -1,0 +1,188 @@
+"""Scale-out: the bucket-sharded cache tier vs shard count (DESIGN.md §11).
+
+The sharding story is a CAPACITY story: each device holds a constant
+per-shard slab (the per-device memory budget), so the tier's aggregate
+resident capacity grows linearly with the shard count while the probe
+stays one fused dispatch with an O(B) one-hot combine — never cache-row
+traffic. This bench holds the per-shard geometry fixed, sweeps shard
+count 1/2/4/8, and measures:
+
+* ``req_per_s`` — aggregate serve_many throughput on a Zipf replay
+  (host-CPU shards share one physical CPU, so this tracks dispatch +
+  collective overhead, not real scaling);
+* ``aggregate_slots`` / ``resident_bytes_per_device`` — the capacity
+  axis: total table slots grow with shards, per-device bytes do not;
+* ``hit_rate`` — the payoff: the same stream against the larger
+  aggregate table holds more of the working set;
+* ``parity`` — "exact" iff a sharded serve_many returns byte-identical
+  outputs/counters/state to the single-device oracle on a checked run.
+
+Device count is locked at first jax init, so the measurement runs in ONE
+re-executed subprocess with 8 forced host devices; the parent collects
+its JSON. Writes ``BENCH_shard.json`` (schema ``ercache-bench-shard/1``),
+asserted and rendered by CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks import common
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_shard.json")
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def _worker(quick: bool) -> dict:
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core import server as srv_lib
+    from repro.core.config import CacheConfig
+    from repro.core.hashing import Key64
+
+    assert len(jax.devices()) >= max(SHARD_COUNTS), jax.devices()
+    rng = np.random.default_rng(0)
+    B, S, D = (128, 16, 16) if quick else (256, 32, 32)
+    chunks = 2 if quick else 4
+    nb_per_shard = 1 << 8 if quick else 1 << 10
+    ways, users, zipf_a = 4, 20000, 1.1
+
+    def tower(params, feats):
+        return feats @ params
+
+    params = jnp.asarray(rng.normal(size=(D, D)), jnp.float32)
+
+    def stage(lo_step):
+        ids = rng_stream[lo_step:lo_step + S]
+        k = Key64.from_int(ids.astype(np.int64))
+        f = jnp.asarray(
+            np.take(feat_table, ids % 997, axis=0), jnp.float32)
+        now = (jnp.arange(S, dtype=jnp.int32) + lo_step + 1) * 100
+        return k, f, now
+
+    rng_stream = (rng.zipf(zipf_a, size=(chunks * SHARD_COUNTS.__len__()
+                                         * S + S, B)) % users)
+    feat_table = rng.normal(size=(997, D)).astype(np.float32)
+
+    def eq_tree(a, b):
+        la, ta = jax.tree_util.tree_flatten(a)
+        lb, tb = jax.tree_util.tree_flatten(b)
+        return ta == tb and all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(la, lb))
+
+    # parity probe: one fixed small config, sharded vs oracle, bit-exact
+    pcfg = CacheConfig(model_id=1, model_type="ctr", n_buckets=256, ways=4,
+                       value_dim=D, cache_ttl_ms=60000,
+                       failover_ttl_ms=600000, eviction="lru")
+    pk, pf, pnow = stage(0)
+    psrv = srv_lib.CachedEmbeddingServer(cfg=pcfg, tower_fn=tower,
+                                         miss_budget=B)
+    pst = srv_lib.init_server_state(pcfg, writebuf_capacity=B * 4)
+    want = psrv.jit_serve_many(params, pst, pk, pf, pnow, flush_every=1)
+
+    out = {}
+    for n_shards in SHARD_COUNTS:
+        mesh = (Mesh(np.array(jax.devices()[:n_shards]), ("shard",))
+                if n_shards > 1 else None)
+        # capacity scaling: constant per-shard slab, growing global table
+        nb = nb_per_shard * n_shards
+        cfg = CacheConfig(model_id=1, model_type="ctr", n_buckets=nb,
+                          ways=ways, value_dim=D, cache_ttl_ms=10 ** 8,
+                          failover_ttl_ms=10 ** 9, eviction="lru")
+        srv = srv_lib.CachedEmbeddingServer(cfg=cfg, tower_fn=tower,
+                                            miss_budget=B, mesh=mesh)
+        state = srv_lib.init_server_state(cfg, writebuf_capacity=B * 4,
+                                          mesh=mesh)
+        table_bytes = sum(
+            x.nbytes for x in jax.tree_util.tree_leaves(
+                (state.direct, state.failover)))
+
+        # warmup chunk compiles serve_many; timed chunks reuse it
+        k, f, now = stage(0)
+        state, _, _ = srv.jit_serve_many(params, state, k, f, now,
+                                         flush_every=1, collect=False)
+        hits = requests = 0
+        t0 = time.perf_counter()
+        for c in range(chunks):
+            k, f, now = stage((c + 1) * S)
+            state, acc, _ = srv.jit_serve_many(params, state, k, f, now,
+                                               flush_every=1, collect=False)
+            acc = jax.device_get(acc)
+            hits += int(acc["direct_hits"])
+            requests += int(acc["requests"])
+        wall = time.perf_counter() - t0
+
+        # parity on this shard count (n_shards=1 trivially exact: same path)
+        if mesh is not None:
+            ssrv = srv_lib.CachedEmbeddingServer(cfg=pcfg, tower_fn=tower,
+                                                 miss_budget=B, mesh=mesh)
+            sst = srv_lib.init_server_state(pcfg, writebuf_capacity=B * 4,
+                                            mesh=mesh)
+            got = ssrv.jit_serve_many(params, sst, pk, pf, pnow,
+                                      flush_every=1)
+            parity = "exact" if eq_tree(want, got) else "MISMATCH"
+        else:
+            parity = "exact"
+        out[str(n_shards)] = {
+            "n_buckets": nb,
+            "aggregate_slots": nb * ways + cfg.resolved_failover_n_buckets()
+            * cfg.resolved_failover_ways(),
+            "resident_bytes_per_device": table_bytes // n_shards,
+            "req_per_s": round(requests / max(wall, 1e-9), 1),
+            "hit_rate": round(hits / max(requests, 1), 4),
+            "parity": parity,
+        }
+    return out
+
+
+def run(report):
+    quick = getattr(common, "QUICK", False)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count="
+                          f"{max(SHARD_COUNTS)}")
+    env["ERCACHE_BENCH_SHARD_WORKER"] = "quick" if quick else "full"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_shard"], env=env, cwd=root,
+        capture_output=True, text=True, timeout=1200)
+    if res.returncode != 0:
+        raise RuntimeError(f"shard worker failed:\n{res.stderr[-2000:]}")
+    shards = json.loads(res.stdout.strip().splitlines()[-1])
+
+    for n, m in shards.items():
+        report.add(f"shard_serve_x{n}", 0.0,
+                   f"req_per_s={m['req_per_s']}"
+                   f"_slots={m['aggregate_slots']}"
+                   f"_hit={m['hit_rate']:.3f}_parity={m['parity']}")
+
+    metrics = {
+        "schema": "ercache-bench-shard/1",
+        "quick": quick,
+        "shard_counts": list(SHARD_COUNTS),
+        "shards": shards,
+        "parity_all_exact": all(m["parity"] == "exact"
+                                for m in shards.values()),
+    }
+    if getattr(common, "WRITE_JSON", True):
+        with open(JSON_PATH, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        print(f"# wrote {JSON_PATH}")
+    return None
+
+
+if __name__ == "__main__":
+    quick = os.environ.get("ERCACHE_BENCH_SHARD_WORKER", "full") == "quick"
+    print(json.dumps(_worker(quick)))

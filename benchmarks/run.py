@@ -36,11 +36,12 @@ BENCHES = [
     ("overload", "benchmarks.bench_overload"),
     ("stream", "benchmarks.bench_stream"),
     ("restart", "benchmarks.bench_restart"),
+    ("shard", "benchmarks.bench_shard"),
 ]
 
 # the fast, serve-path-focused subset run by CI (--quick with no --only)
 QUICK_BENCHES = ("kernel_probe", "serve_path", "multi_model", "eviction",
-                 "overload", "stream", "restart")
+                 "overload", "stream", "restart", "shard")
 
 
 def main() -> None:

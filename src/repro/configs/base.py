@@ -185,8 +185,9 @@ class RecsysConfig:
     nnz_per_field: int = 4            # multi-hot ids per sparse field
     dtype: str = "float32"
     family: str = "recsys"
-    # use the explicit shard_map EmbeddingBag (False = GSPMD gather
-    # partitioning baseline, re-measurable for §Perf comparisons)
+    # use the explicit shard_map EmbeddingBag, via distributed/compat.py's
+    # version-bridging shard_map (False = GSPMD gather partitioning
+    # baseline, re-measurable for §Perf comparisons)
     sharded_bag: bool = True
     # serving layout: psum_scatter the embedding bags over the model axis
     # (batch ends up sharded over EVERY mesh axis) and run the deep MLP

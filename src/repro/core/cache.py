@@ -117,6 +117,46 @@ def flat_entries(state: CacheState):
             live)
 
 
+# ============================================================ bucket sharding
+# The scale-out story (DESIGN.md §11): a cache's bucket axis is partitioned
+# CONTIGUOUSLY across a 1-D device mesh — shard s owns global buckets
+# [s*nb_local, (s+1)*nb_local). A key's bucket is a pure function of the key,
+# so the bucket id alone decides the owning shard and every probe/insert/touch
+# localizes exactly; the only cross-device traffic is the O(B) one-hot
+# combine of probe RESULTS (distributed/collectives.py), never cache rows.
+# The arithmetic lives here because it is cache geometry, not communication.
+
+
+def shard_local_buckets(n_buckets: int, n_shards: int) -> int:
+    """Per-shard bucket count under the contiguous partition. Bucket counts
+    and shard counts are both powers of two, so divisibility is the only
+    constraint worth enforcing."""
+    if n_buckets % n_shards:
+        raise ValueError(f"n_buckets={n_buckets} not divisible by "
+                         f"n_shards={n_shards}")
+    return n_buckets // n_shards
+
+
+def route_buckets(bucket, shard, nb_global: int, nb_local: int):
+    """GLOBAL bucket ids → (owned (B,) bool, local (B,) int32) on ``shard``.
+
+    Handles plain and POOLED (``slot*Nb + within``) bucket ids uniformly:
+    the slab slot is recovered by divmod and re-applied at the local bucket
+    count, so a stacked tier sharded along its bucket axis keeps its pooled
+    flat-view addressing per shard. Negative ids (touch-buffer "no hit"
+    sentinels) are owned by nobody; non-owned rows get an in-range dummy
+    index (callers mask with ``owned``, the dummy read/write never lands).
+    """
+    ok = bucket >= 0
+    b = jnp.maximum(bucket, 0)
+    slot = b // nb_global
+    within = b - slot * nb_global
+    local_w = within - shard * nb_local
+    owned = ok & (local_w >= 0) & (local_w < nb_local)
+    local = slot * nb_local + jnp.clip(local_w, 0, nb_local - 1)
+    return owned, local.astype(jnp.int32)
+
+
 def _ttl_cols(ttl_ms) -> jnp.ndarray:
     """Scalar TTL or per-query (B,) TTLs → broadcastable against (B, W).
 

@@ -94,15 +94,19 @@ class ServeResult(NamedTuple):
 
 def init_server_state(cfg: CacheConfig, dtype=jnp.float32,
                       writebuf_capacity: int = 4096,
-                      touchbuf_capacity: Optional[int] = None) -> ServerState:
+                      touchbuf_capacity: Optional[int] = None,
+                      mesh=None) -> ServerState:
     """Allocate both caches + the write and touch buffers. The failover
     cache is sized from its OWN config knobs (paper §4.4 gives it different
     capacity/TTL than the direct tier); unset knobs fall back to the direct
     sizing. The touch buffer (hit coordinates awaiting last-access bumps)
-    defaults to the write buffer's capacity."""
+    defaults to the write buffer's capacity. ``mesh`` places the cache
+    tables bucket-sharded across the mesh's ``shard`` axis and replicates
+    the rings/budget (DESIGN.md §11); both tiers' bucket counts must
+    divide the shard count."""
     if touchbuf_capacity is None:
         touchbuf_capacity = writebuf_capacity
-    return ServerState(
+    state = ServerState(
         direct=cache_lib.init_cache(cfg.n_buckets, cfg.ways, cfg.value_dim,
                                     dtype),
         failover=cache_lib.init_cache(cfg.resolved_failover_n_buckets(),
@@ -112,6 +116,11 @@ def init_server_state(cfg: CacheConfig, dtype=jnp.float32,
         touchbuf=wb_lib.init_touchbuf(touchbuf_capacity),
         budget=rl_lib.init_infer_budget([cfg]),
     )
+    if mesh is not None:
+        from repro.distributed import sharding as shard_lib
+
+        state = shard_lib.place_server_state(state, mesh)
+    return state
 
 
 def _per_model_miss_rank(slots, miss, n_models: int) -> jnp.ndarray:
@@ -360,6 +369,12 @@ class CachedEmbeddingServer:
     tower_fn: Callable
     miss_budget: int
     fallback_value: float = 0.0   # default embedding on total fallback
+    # Bucket-sharded cache tier (DESIGN.md §11): when set, the dual probe
+    # and the flush run under shard_map on this 1-D ("shard",) mesh with
+    # each device owning a contiguous bucket range — bit-identical to the
+    # single-device path. The server state must be placed accordingly
+    # (init_server_state(mesh=...) / sharding.place_server_state).
+    mesh: Optional[jax.sharding.Mesh] = None
 
     def __post_init__(self) -> None:
         # Admission-control tables, materialized EAGERLY (same rationale as
@@ -391,9 +406,16 @@ class CachedEmbeddingServer:
         # degradation chain may serve past the strict TTL) and the strict
         # hit set is recovered from the probe's age below.
         fo_ttl = cfg.resolved_failover_relax_ttl_ms()
-        direct, fo = cache_lib.lookup_dual(
-            state.direct, state.failover, keys, now_ms, cfg.cache_ttl_ms,
-            fo_ttl, backend=cfg.backend)
+        if self.mesh is not None:
+            from repro.distributed import collectives as coll
+
+            direct, fo = coll.sharded_lookup_dual(
+                self.mesh, state.direct, state.failover, keys, now_ms,
+                cfg.cache_ttl_ms, fo_ttl, backend=cfg.backend)
+        else:
+            direct, fo = cache_lib.lookup_dual(
+                state.direct, state.failover, keys, now_ms, cfg.cache_ttl_ms,
+                fo_ttl, backend=cfg.backend)
 
         # (1b) record hit coordinates for the deferred last-access bump —
         # an O(B) ring scatter, never a cache-table write on this path.
@@ -520,13 +542,15 @@ class CachedEmbeddingServer:
         if self.cfg.failover_write == "off":
             direct, wb1, tb1 = wb_lib.flush(
                 state.writebuf, state.direct, now_ms, self.cfg.cache_ttl_ms,
-                evict_lru=self.cfg.eviction == "lru", touchbuf=tb)
+                evict_lru=self.cfg.eviction == "lru", touchbuf=tb,
+                mesh=self.mesh)
             failover = state.failover
         else:
             direct, failover, wb1, tb1 = wb_lib.flush_dual(
                 state.writebuf, state.direct, state.failover, now_ms,
                 self.cfg.cache_ttl_ms, self.cfg.failover_ttl_ms,
-                evict_lru=self.cfg.eviction == "lru", touchbuf=tb)
+                evict_lru=self.cfg.eviction == "lru", touchbuf=tb,
+                mesh=self.mesh)
         return ServerState(direct=direct, failover=failover, writebuf=wb1,
                            touchbuf=state.touchbuf if tb1 is None else tb1,
                            budget=state.budget)
@@ -562,13 +586,16 @@ class MultiServerState(NamedTuple):
 
 def init_multi_server_state(cfgs: Sequence[CacheConfig], dtype=jnp.float32,
                             writebuf_capacity: int = 4096,
-                            touchbuf_capacity: Optional[int] = None
-                            ) -> MultiServerState:
+                            touchbuf_capacity: Optional[int] = None,
+                            mesh=None) -> MultiServerState:
     """Allocate the stacked tier for an ordered model registry.
 
     Every model keeps its own direct/failover capacity (bucket masks);
     value_dim must agree across the tier and heterogeneous ``ways`` are
     normalized up to the tier maximum (extra associativity, never less).
+    ``mesh`` bucket-shards both stacked tiers across its ``shard`` axis
+    (DESIGN.md §11); every model's bucket counts must divide the shard
+    count.
     """
     dims = {c.value_dim for c in cfgs}
     if len(dims) != 1:
@@ -578,7 +605,7 @@ def init_multi_server_state(cfgs: Sequence[CacheConfig], dtype=jnp.float32,
     ways_f = max(c.resolved_failover_ways() for c in cfgs)
     if touchbuf_capacity is None:
         touchbuf_capacity = writebuf_capacity
-    return MultiServerState(
+    state = MultiServerState(
         direct=cache_lib.init_multi_cache(
             [c.n_buckets for c in cfgs], ways_d, dim, dtype),
         failover=cache_lib.init_multi_cache(
@@ -588,6 +615,11 @@ def init_multi_server_state(cfgs: Sequence[CacheConfig], dtype=jnp.float32,
         touchbuf=wb_lib.init_touchbuf(touchbuf_capacity),
         budget=rl_lib.init_infer_budget(cfgs),
     )
+    if mesh is not None:
+        from repro.distributed import sharding as shard_lib
+
+        state = shard_lib.place_server_state(state, mesh)
+    return state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -616,6 +648,9 @@ class MultiModelServer:
     # the configs — which must then agree, so a registry built with
     # backend="pallas" is never silently served on the jnp path.
     backend: Optional[str] = None
+    # Bucket-sharded stacked tier (DESIGN.md §11); same contract as
+    # CachedEmbeddingServer.mesh, sharding every model's bucket range.
+    mesh: Optional[jax.sharding.Mesh] = None
 
     def __post_init__(self) -> None:
         if self.backend is None:
@@ -696,9 +731,16 @@ class MultiModelServer:
         # (1) direct + failover check, ALL models — ONE dispatch ----------
         # (the probe policy carries each model's RELAXED failover TTL when
         # any model runs admission control; strict == relaxed otherwise)
-        direct, fo = cache_lib.lookup_dual_multi(
-            state.direct, state.failover, self._probe_policy, slots, keys,
-            now_ms, backend=self.backend)
+        if self.mesh is not None:
+            from repro.distributed import collectives as coll
+
+            direct, fo = coll.sharded_lookup_dual_multi(
+                self.mesh, state.direct, state.failover, self._probe_policy,
+                slots, keys, now_ms, backend=self.backend)
+        else:
+            direct, fo = cache_lib.lookup_dual_multi(
+                state.direct, state.failover, self._probe_policy, slots,
+                keys, now_ms, backend=self.backend)
 
         # (1b) buffer hit coordinates (POOLED bucket indices) for deferred
         # last-access bumps, gated by each query's per-model touch policy.
@@ -808,7 +850,7 @@ class MultiModelServer:
         tb = state.touchbuf if self._any_touch else None
         direct, failover, wb1, tb1 = wb_lib.flush_dual_multi(
             state.writebuf, state.direct, state.failover, self.policy,
-            now_ms, touchbuf=tb)
+            now_ms, touchbuf=tb, mesh=self.mesh)
         return MultiServerState(direct=direct, failover=failover,
                                 writebuf=wb1,
                                 touchbuf=state.touchbuf if tb1 is None

@@ -206,9 +206,9 @@ def _apply_touches_dual(buf: Optional[TouchBuffer],
 
 
 def flush(buf: WriteBuffer, state: cache_lib.CacheState, now_ms, ttl_ms,
-          evict_lru=None, touchbuf: Optional[TouchBuffer] = None
-          ) -> Tuple[cache_lib.CacheState, WriteBuffer,
-                     Optional[TouchBuffer]]:
+          evict_lru=None, touchbuf: Optional[TouchBuffer] = None,
+          mesh=None) -> Tuple[cache_lib.CacheState, WriteBuffer,
+                              Optional[TouchBuffer]]:
     """Apply all buffered records to the cache; reset the buffer(s).
 
     Records are applied in append order (ring order), so last-writer-wins
@@ -218,8 +218,15 @@ def flush(buf: WriteBuffer, state: cache_lib.CacheState, now_ms, ttl_ms,
     ``eviction="lru"`` silently runs TTL-priority. ``touchbuf`` carries
     deferred last-access bumps; its DIRECT-cache coordinates are applied
     (scatter-max) BEFORE the inserts so the LRU plan ranks on bumped
-    recency and overwritten slots reset cleanly.
+    recency and overwritten slots reset cleanly. ``mesh`` routes the
+    inserts/touches to a bucket-sharded table (DESIGN.md §11) — the rings
+    stay replicated; results are bit-identical either way.
     """
+    if mesh is not None:
+        from repro.distributed import collectives as coll
+
+        return coll.sharded_flush(mesh, buf, state, now_ms, ttl_ms,
+                                  evict_lru=evict_lru, touchbuf=touchbuf)
     if touchbuf is not None:
         state = _apply_touches(touchbuf, state, touchbuf.bucket_d,
                                touchbuf.way_d)
@@ -234,7 +241,7 @@ def flush(buf: WriteBuffer, state: cache_lib.CacheState, now_ms, ttl_ms,
 def flush_dual(buf: WriteBuffer, direct: cache_lib.CacheState,
                failover: cache_lib.CacheState, now_ms,
                direct_ttl_ms, failover_ttl_ms, evict_lru=None,
-               touchbuf: Optional[TouchBuffer] = None
+               touchbuf: Optional[TouchBuffer] = None, mesh=None
                ) -> Tuple[cache_lib.CacheState, cache_lib.CacheState,
                           WriteBuffer, Optional[TouchBuffer]]:
     """Flush the buffer into BOTH caches with ONE shared insert plan.
@@ -244,8 +251,16 @@ def flush_dual(buf: WriteBuffer, direct: cache_lib.CacheState,
     independent :func:`flush` calls with the respective TTLs.
     ``evict_lru`` selects the victim order (paper §3.3 policy switch);
     ``touchbuf``'s deferred last-access bumps are scatter-maxed into both
-    recency planes BEFORE the inserts (see :func:`flush`).
+    recency planes BEFORE the inserts (see :func:`flush`). ``mesh`` routes
+    everything to bucket-sharded tables (DESIGN.md §11), bit-identically.
     """
+    if mesh is not None:
+        from repro.distributed import collectives as coll
+
+        return coll.sharded_flush_dual(mesh, buf, direct, failover, now_ms,
+                                       direct_ttl_ms, failover_ttl_ms,
+                                       evict_lru=evict_lru,
+                                       touchbuf=touchbuf)
     direct, failover, touchbuf = _apply_touches_dual(touchbuf, direct,
                                                      failover)
     keys, values, ts, live, _ = _ring_order(buf)
@@ -259,7 +274,7 @@ def flush_dual(buf: WriteBuffer, direct: cache_lib.CacheState,
 def flush_dual_multi(buf: WriteBuffer, direct: cache_lib.MultiCacheState,
                      failover: cache_lib.MultiCacheState,
                      policy: cache_lib.ModelPolicy, now_ms,
-                     touchbuf: Optional[TouchBuffer] = None
+                     touchbuf: Optional[TouchBuffer] = None, mesh=None
                      ) -> Tuple[cache_lib.MultiCacheState,
                                 cache_lib.MultiCacheState, WriteBuffer,
                                 Optional[TouchBuffer]]:
@@ -272,8 +287,16 @@ def flush_dual_multi(buf: WriteBuffer, direct: cache_lib.MultiCacheState,
     both slabs. Semantics per model are identical to flushing that
     model's records alone with its own settings. ``touchbuf`` coordinates
     are POOLED (M·Nb) indices, so the bumps land on the flat views of the
-    stacked planes — same scatter-max as the single-model flush.
+    stacked planes — same scatter-max as the single-model flush. ``mesh``
+    routes everything to bucket-sharded stacked tiers (DESIGN.md §11),
+    bit-identically.
     """
+    if mesh is not None:
+        from repro.distributed import collectives as coll
+
+        return coll.sharded_flush_dual_multi(mesh, buf, direct, failover,
+                                             policy, now_ms,
+                                             touchbuf=touchbuf)
     if touchbuf is not None:
         flat_d, flat_f, touchbuf = _apply_touches_dual(
             touchbuf, direct.flat(), failover.flat())

@@ -1,0 +1,46 @@
+"""JAX API compatibility shims for the distributed layer.
+
+One drift, one shim: ``shard_map`` moved from
+``jax.experimental.shard_map.shard_map`` (jax <= 0.4.x, where the
+replication check is spelled ``check_rep``) to the top-level
+``jax.shard_map`` (jax >= 0.5, where it is spelled ``check_vma``).
+Every caller in this repo goes through :func:`shard_map` below and always
+uses the NEW spelling (``check_vma``); the shim translates for old
+installs. Keeping the translation in one place means the day the floor
+moves past 0.5 this module deletes cleanly and callers flip one import.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_TOP_LEVEL = hasattr(jax, "shard_map")
+if not _HAS_TOP_LEVEL:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` with the modern keyword surface on any jax.
+
+    ``check_vma=None`` keeps each jax version's own default; True/False is
+    forwarded as ``check_vma`` (new) or ``check_rep`` (old) — the two names
+    gate the same replication/varying-manual-axes check.
+    """
+    kwargs = {}
+    if check_vma is not None:
+        kwargs["check_vma" if _HAS_TOP_LEVEL else "check_rep"] = check_vma
+    fn = jax.shard_map if _HAS_TOP_LEVEL else _legacy_shard_map
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` on any jax.
+
+    Old installs predate the helper; ``psum(1, axis)`` is the documented
+    equivalent there (constant-folded to the mesh axis extent, no actual
+    communication)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+__all__ = ["shard_map", "axis_size"]

@@ -163,3 +163,49 @@ def constrain(x, logical: Sequence[Optional[str]], family: str,
     spec = logical_to_spec(logical, rules, mesh.axis_names)
     spec = divisible_or_replicate(spec, x.shape, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------- cache-tier placement
+# The ERCache serving tier shards its cache tables along the BUCKET axis
+# (DESIGN.md §11): device s of the 1-D ("shard",) mesh owns the contiguous
+# bucket range [s*nb/S, (s+1)*nb/S) of every table. The write/touch rings
+# and the admission token bucket stay replicated — they are O(buffer), not
+# O(capacity), and every shard needs the full ring to route from.
+
+def validate_cache_sharding(mesh: Mesh, n_buckets_list) -> int:
+    """Check a cache-tier mesh: 1-D ``shard`` axis whose size divides every
+    tier's bucket count. Returns the shard count."""
+    from repro.core import cache as cache_lib
+    from repro.distributed import collectives as coll
+
+    if coll.SHARD_AXIS not in mesh.axis_names:
+        raise ValueError(
+            f"cache-tier mesh needs a '{coll.SHARD_AXIS}' axis, got "
+            f"{mesh.axis_names}")
+    n_shards = mesh.shape[coll.SHARD_AXIS]
+    for nb in n_buckets_list:
+        cache_lib.shard_local_buckets(nb, n_shards)  # raises on indivisible
+    return n_shards
+
+
+def place_server_state(state, mesh: Mesh):
+    """Device-put a ServerState/MultiServerState for the bucket-sharded
+    tier: cache tables sharded along their bucket axis, everything else
+    (rings, budget) replicated. Idempotent — placing an already-placed
+    state is a no-op resharding."""
+    from repro.distributed import collectives as coll
+
+    validate_cache_sharding(
+        mesh, {state.direct.n_buckets, state.failover.n_buckets})
+
+    def put(tree, spec):
+        sh = NamedSharding(mesh, spec)
+        return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), tree)
+
+    return state._replace(
+        direct=put(state.direct, coll.cache_pspec(state.direct)),
+        failover=put(state.failover, coll.cache_pspec(state.failover)),
+        writebuf=put(state.writebuf, P()),
+        touchbuf=put(state.touchbuf, P()),
+        budget=put(state.budget, P()),
+    )

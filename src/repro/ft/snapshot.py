@@ -137,9 +137,23 @@ def restore_server(directory: str, server, now_ms: int,
         cold = server_lib.init_server_state(
             server.cfg, dtype, writebuf_capacity, touchbuf_capacity)
 
+    # Restore targets the server's PLACEMENT as well as its geometry: a
+    # bucket-sharded server (server.mesh set) gets its restored tables
+    # device_put across the mesh — so a snapshot taken on N shards restores
+    # onto M shards (or onto one device) through the same code path; the
+    # shard count is a deploy knob exactly like capacity.
+    mesh = getattr(server, "mesh", None)
+
+    def place(st):
+        if mesh is None:
+            return st
+        from repro.distributed import sharding as shard_lib
+
+        return shard_lib.place_server_state(st, mesh)
+
     def cold_result(detail: str, at: Optional[int] = None) -> RestoreResult:
         log.warning("cache restore fell back to cold init: %s", detail)
-        return RestoreResult(state=cold, counters=ServingCounters(),
+        return RestoreResult(state=place(cold), counters=ServingCounters(),
                              mode="cold", step=at, detail=detail)
 
     try:
@@ -195,7 +209,7 @@ def restore_server(directory: str, server, now_ms: int,
         if same_kind and shapes == _shape_meta(server, cold):
             state = server_lib.with_cache_image(
                 cold, dict(image, budget=budget))
-            return RestoreResult(state=state, counters=counters,
+            return RestoreResult(state=place(state), counters=counters,
                                  mode="bitexact", step=step,
                                  detail=f"loaded step {step} in place")
 
@@ -251,7 +265,7 @@ def restore_server(directory: str, server, now_ms: int,
         detail = (f"rehashed step {step}: {n_dir} direct + {n_fo} "
                   "failover live entries into new geometry")
         log.info("cache restore: %s", detail)
-        return RestoreResult(state=state, counters=counters, mode="rehash",
-                             step=step, detail=detail)
+        return RestoreResult(state=place(state), counters=counters,
+                             mode="rehash", step=step, detail=detail)
     except Exception as e:                       # noqa: BLE001 — fail-open
         return cold_result(f"step {step}: {type(e).__name__}: {e}", step)

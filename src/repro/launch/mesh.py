@@ -35,3 +35,21 @@ def make_host_mesh():
             model = m
             break
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_cache_mesh(n_shards: int):
+    """1-D ("shard",) mesh for the bucket-sharded cache tier (DESIGN.md
+    §11) over the first ``n_shards`` local devices. The cache tier's mesh
+    is deliberately separate from the model meshes above: bucket sharding
+    is a capacity axis (each device holds 1/N of every table), not a
+    compute-parallelism axis."""
+    devs = jax.devices()
+    if n_shards > len(devs):
+        raise ValueError(
+            f"n_shards={n_shards} > {len(devs)} local devices; on CPU, "
+            "relaunch with XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_shards} (launch/serve.py --shards does this re-exec)")
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devs[:n_shards]), ("shard",))

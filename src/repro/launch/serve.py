@@ -40,6 +40,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import os
+import sys
 import tempfile
 import time
 
@@ -60,6 +61,42 @@ from repro.data.access_patterns import (FIG6_KNOTS, InterArrivalDist,
 from repro.ft import snapshot as snap_lib
 from repro.ft.failure import FailureInjector
 from repro.models import recsys as rec_lib
+
+
+_SHARD_REPLAY_ENV = "ERCACHE_SHARD_REPLAY"
+
+
+def ensure_shard_devices(n_shards: int) -> None:
+    """Guarantee ``n_shards`` local devices for ``--shards N``.
+
+    XLA fixes the host device count at backend init, before argparse can
+    influence it — so when the already-initialized backend is short, the
+    launcher REPLAYS itself: re-exec the same command with
+    ``--xla_force_host_platform_device_count=N`` appended to XLA_FLAGS. A
+    marker env var makes the replay single-shot (a second shortfall — a
+    real-accelerator platform that ignores the flag — raises instead of
+    exec-looping)."""
+    if n_shards <= 1 or len(jax.devices()) >= n_shards:
+        return
+    if os.environ.get(_SHARD_REPLAY_ENV) == "1":
+        raise RuntimeError(
+            f"--shards {n_shards}: still only {len(jax.devices())} devices "
+            "after the forced-device-count replay; this platform does not "
+            "honor --xla_force_host_platform_device_count")
+    os.environ[_SHARD_REPLAY_ENV] = "1"
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n_shards}")
+    os.execv(sys.executable,
+             [sys.executable, "-m", "repro.launch.serve"] + sys.argv[1:])
+
+
+def _cache_mesh(n_shards: int):
+    if n_shards <= 1:
+        return None
+    from repro.launch.mesh import make_cache_mesh
+
+    return make_cache_mesh(n_shards)
 
 
 def build_tower(arch: str):
@@ -123,8 +160,10 @@ def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
                 failure_rate: float = 0.0, use_cache: bool = True,
                 backend: str = "jnp", eviction: str = "ttl",
                 coalesce: bool = False, chunk_steps: int = 64,
-                n_buckets: int = 1 << 14, seed: int = 0, log=print):
+                n_buckets: int = 1 << 14, n_shards: int = 1, seed: int = 0,
+                log=print):
     tower_cfg, params, tower_fn, features_of = build_tower(arch)
+    mesh = _cache_mesh(n_shards)
     cache_cfg = CacheConfig(
         model_id=1, model_type="ctr",
         cache_ttl_ms=int(ttl_min * MINUTE_MS),
@@ -135,8 +174,9 @@ def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
         backend=backend, eviction=eviction, coalesce_misses=coalesce)
     server = srv_lib.CachedEmbeddingServer(
         cfg=cache_cfg, tower_fn=tower_fn,
-        miss_budget=max(int(batch * miss_budget_frac), 1))
-    state = srv_lib.init_server_state(cache_cfg, writebuf_capacity=batch * 4)
+        miss_budget=max(int(batch * miss_budget_frac), 1), mesh=mesh)
+    state = srv_lib.init_server_state(cache_cfg, writebuf_capacity=batch * 4,
+                                      mesh=mesh)
 
     stream_cfg = StreamConfig(n_users=users, horizon_s=minutes * 60.0,
                               seed=seed)
@@ -190,6 +230,7 @@ def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
         f" fallback_rate={d['fallback_rate']:.4f}"
         f" tower_inferences={d['tower_inferences']}"
         f" ({wall:.1f}s, {d['req_per_s']:.0f} req/s)")
+    d["n_shards"] = n_shards
     return d
 
 
@@ -551,7 +592,8 @@ def run_serving_multi(arch: str = "sasrec", minutes: int = 60,
                       miss_budget_frac: float = 0.75,
                       n_buckets: int = 1 << 12, failure_rate: float = 0.0,
                       backend: str = "jnp", coalesce: bool = False,
-                      chunk_steps: int = 64, seed: int = 0, log=print):
+                      chunk_steps: int = 64, n_shards: int = 1,
+                      seed: int = 0, log=print):
     """Replay one access stream across the whole model registry.
 
     Each arriving user request is fanned out to one of the registry's
@@ -562,15 +604,18 @@ def run_serving_multi(arch: str = "sasrec", minutes: int = 60,
     plus the per-model hit-rate breakdown (the paper's Table 2 shape).
     """
     tower_cfg, params, tower_fn, features_of = build_tower(arch)
+    mesh = _cache_mesh(n_shards)
     cfgs = multi_model_tier_configs(value_dim=tower_cfg.user_embed_dim,
                                     n_buckets=n_buckets)
     if coalesce:
         cfgs = [dataclasses.replace(c, coalesce_misses=True) for c in cfgs]
     server = srv_lib.MultiModelServer(
         cfgs=tuple(cfgs), tower_fn=tower_fn,
-        miss_budget=max(int(batch * miss_budget_frac), 1), backend=backend)
+        miss_budget=max(int(batch * miss_budget_frac), 1), backend=backend,
+        mesh=mesh)
     state = srv_lib.init_multi_server_state(cfgs,
-                                            writebuf_capacity=batch * 4)
+                                            writebuf_capacity=batch * 4,
+                                            mesh=mesh)
     n_models = server.n_models
 
     stream_cfg = StreamConfig(n_users=users, horizon_s=minutes * 60.0,
@@ -608,6 +653,7 @@ def run_serving_multi(arch: str = "sasrec", minutes: int = 60,
     d["wall_s"] = round(wall, 2)
     d["batches"] = n_batches
     d["n_models"] = n_models
+    d["n_shards"] = n_shards
     d["req_per_s"] = round(counters.requests / max(wall, 1e-9), 1)
     d["per_model"] = {
         cfg.model_id: {
@@ -684,7 +730,16 @@ def main():
                          "with --multi: the registry sets it per model)")
     ap.add_argument("--multi-buckets", type=int, default=1 << 12,
                     help="per-model direct-cache buckets in --multi mode")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="bucket-shard the cache tier across N devices "
+                         "(DESIGN.md §11); on CPU the launcher re-execs "
+                         "itself with "
+                         "--xla_force_host_platform_device_count=N")
     args = ap.parse_args()
+    if args.shards > 1:
+        if args.restart or args.overload or args.no_cache:
+            ap.error("--shards drives the plain/--multi serving modes")
+        ensure_shard_devices(args.shards)
     if args.restart:
         if args.multi or args.overload:
             ap.error("--restart drives the single-model server; drop "
@@ -735,7 +790,8 @@ def main():
                           n_buckets=args.multi_buckets,
                           failure_rate=args.failure_rate,
                           backend=args.backend, coalesce=args.coalesce,
-                          chunk_steps=args.chunk_steps)
+                          chunk_steps=args.chunk_steps,
+                          n_shards=args.shards)
     else:
         if args.no_cache and args.coalesce:
             ap.error("--coalesce dedupes cache misses; drop --no-cache")
@@ -744,7 +800,8 @@ def main():
                     failure_rate=args.failure_rate,
                     batch=args.batch, use_cache=not args.no_cache,
                     backend=args.backend, eviction=args.eviction,
-                    coalesce=args.coalesce, chunk_steps=args.chunk_steps)
+                    coalesce=args.coalesce, chunk_steps=args.chunk_steps,
+                    n_shards=args.shards)
 
 
 if __name__ == "__main__":

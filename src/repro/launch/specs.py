@@ -479,6 +479,28 @@ def _build_recsys_cell(arch: str, shape: cfg_base.RecsysShape,
         model_flops=_recsys_flops(cfg, B, False) + 2.0 * B * N * d_cand)
 
 
+# ================================================================ cache tier
+def cache_tier_specs(state) -> Any:
+    """PartitionSpec tree for a ServerState/MultiServerState on the cache
+    tier's 1-D ("shard",) mesh (DESIGN.md §11): cache tables bucket-sharded,
+    rings and the admission budget replicated. Feed through
+    :func:`to_shardings` for jit in_shardings of the serve entry points."""
+    from repro.distributed import collectives as coll
+
+    def rep(tree):
+        return jax.tree_util.tree_map(lambda _: P(), tree)
+
+    def table(tree):
+        spec = coll.cache_pspec(tree)
+        return jax.tree_util.tree_map(lambda _: spec, tree)
+
+    return state._replace(direct=table(state.direct),
+                          failover=table(state.failover),
+                          writebuf=rep(state.writebuf),
+                          touchbuf=rep(state.touchbuf),
+                          budget=rep(state.budget))
+
+
 # ==================================================================== public
 def build_cell(arch: str, shape_name: str, mesh: Mesh,
                overrides: Optional[dict] = None) -> Cell:

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import GNNConfig
-from repro.distributed import collectives, sharding
+from repro.distributed import collectives, compat, sharding
 
 
 class Graph(NamedTuple):
@@ -161,7 +161,7 @@ def forward_partitioned(params: Dict, g: Graph, cfg: GNNConfig, mesh,
             h_own = jax.nn.relu(z @ lp["w2"] + lp["b2"])
         return h_own
 
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P_(ax), P_(ax), P_(ax)),
         out_specs=P_(ax),

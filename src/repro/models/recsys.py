@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RecsysConfig
-from repro.distributed import collectives, sharding
+from repro.distributed import collectives, compat, sharding
 from repro.models import layers as L
 
 
@@ -89,7 +89,7 @@ def sharded_field_embedding_bag(tables: jnp.ndarray, ids: jnp.ndarray,
 
     out_spec = (P(baxes + (rows_axis,), None, None) if scatter_batch
                 else P(bspec, None, None))
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(None, rows_axis, None), P(bspec, None, None)),
         out_specs=out_spec,

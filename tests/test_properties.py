@@ -1,0 +1,174 @@
+"""Property-based invariants (hypothesis) for the cache's structural ops.
+
+Random geometries and key streams against three contracts the rest of the
+system leans on:
+
+* ``cache.flat_entries`` — the flat view IS the table: its live mask and
+  per-entry vectors enumerate exactly the occupied slots.
+* ``ft/elastic.rehash_cache`` — growing a table loses no live unexpired
+  entry (values, write ts, recency bit-exact); shrinking serves a subset
+  where the newest entries win bucket overflow.
+* ``cache.dedupe_first_groups`` — coalescing representatives are the
+  FIRST live occurrence of each (key, salt) group, and every live row
+  maps to its group's representative.
+
+Runs under ``tests/_hypothesis_compat.py``: with hypothesis installed
+(requirements-dev.txt / CI) these explore the space; without it they are
+collected and skipped so a bare container stays green.
+"""
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.core import cache as cache_lib
+from repro.core.hashing import Key64
+from repro.ft import elastic
+
+# Small bounded geometry space: powers of two (the bucket-mask contract)
+# and short key streams keep each example fast while still hitting bucket
+# collisions, duplicate keys, and way overflow.
+GEOMETRY = st.tuples(
+    st.sampled_from([2, 4, 8, 16]),       # n_buckets
+    st.sampled_from([1, 2, 4]),           # ways
+)
+IDS = st.lists(st.integers(min_value=0, max_value=30), min_size=1,
+               max_size=48)
+
+
+def keys_of(ids):
+    return Key64.from_int(np.asarray(ids, np.int64))
+
+
+def build_cache(nb, ways, ids, dim=4, base_ts=1000, step_ts=7):
+    """Insert ``ids`` one at a time (value = f(id, i), ts strictly
+    increasing) — the oracle semantics are then trivial: last write of a
+    key wins, and bucket overflow evicts oldest-first."""
+    state = cache_lib.init_cache(nb, ways, dim)
+    expected = {}
+    for i, u in enumerate(ids):
+        ts = base_ts + i * step_ts
+        val = np.full((1, dim), float(u * 100 + i), np.float32)
+        state = cache_lib.insert(state, keys_of([u]), jnp.asarray(val),
+                                 ts, ttl_ms=10 ** 9)
+        expected[u] = (val[0], ts)
+    return state, expected
+
+
+@settings(max_examples=40, deadline=None)
+@given(GEOMETRY, IDS)
+def test_flat_entries_enumerates_exactly_the_live_slots(geom, ids):
+    nb, ways = geom
+    state, _ = build_cache(nb, ways, ids)
+    keys, vals, wts, lats, live = cache_lib.flat_entries(state)
+    live = np.asarray(live)
+    n = nb * ways
+    assert live.shape == (n,) and np.asarray(vals).shape == (n, 4)
+    # live ⇔ the slot holds a non-sentinel key, and the flat view is the
+    # table reshaped bucket-major (round-trips to the 2-D planes)
+    hi2 = np.asarray(state.key_hi).reshape(n)
+    lo2 = np.asarray(state.key_lo).reshape(n)
+    sentinel = (hi2 == np.asarray(cache_lib.EMPTY_HI)) & \
+        (lo2 == np.asarray(cache_lib.EMPTY_LO))
+    assert np.array_equal(live, ~sentinel)
+    assert np.array_equal(np.asarray(keys.hi), hi2)
+    assert np.array_equal(np.asarray(wts),
+                          np.asarray(state.write_ts).reshape(n))
+    # every live slot's key is probe-able and serves that slot's value
+    if live.any():
+        k_live = Key64(hi=jnp.asarray(np.asarray(keys.hi)[live]),
+                       lo=jnp.asarray(np.asarray(keys.lo)[live]))
+        res = cache_lib.lookup(state, k_live, 10 ** 9, 10 ** 9)
+        assert np.asarray(res.hit).all()
+        assert np.array_equal(np.asarray(res.values),
+                              np.asarray(vals)[live])
+
+
+@settings(max_examples=40, deadline=None)
+@given(GEOMETRY, IDS)
+def test_rehash_grow_loses_no_live_entry(geom, ids):
+    nb, ways = geom
+    state, expected = build_cache(nb, ways, ids)
+    now = 10 ** 6
+    grown = cache_lib.init_cache(nb * 4, ways, 4)
+    new, n_cand = elastic.rehash_cache(state, grown, now, ttl_ms=10 ** 9)
+    _, _, _, _, old_live = cache_lib.flat_entries(state)
+    assert n_cand == int(np.asarray(old_live).sum())
+    # probe the whole key universe: everything the old table served, the
+    # grown table serves with the same value AND the same write ts (age)
+    uni = sorted(expected)
+    old = cache_lib.lookup(state, keys_of(uni), now, 10 ** 9)
+    got = cache_lib.lookup(new, keys_of(uni), now, 10 ** 9)
+    oh, gh = np.asarray(old.hit), np.asarray(got.hit)
+    assert (gh | ~oh).all(), "grow lost a live entry"
+    assert np.array_equal(np.asarray(got.values)[oh],
+                          np.asarray(old.values)[oh])
+    assert np.array_equal(np.asarray(got.age_ms)[oh],
+                          np.asarray(old.age_ms)[oh])
+
+
+@settings(max_examples=40, deadline=None)
+@given(GEOMETRY, IDS)
+def test_rehash_shrink_serves_newest_subset(geom, ids):
+    nb, ways = geom
+    state, expected = build_cache(nb, ways, ids)
+    now = 10 ** 6
+    shrunk = cache_lib.init_cache(max(nb // 2, 1), ways, 4)
+    new, _ = elastic.rehash_cache(state, shrunk, now, ttl_ms=10 ** 9)
+    uni = sorted(expected)
+    old = cache_lib.lookup(state, keys_of(uni), now, 10 ** 9)
+    got = cache_lib.lookup(new, keys_of(uni), now, 10 ** 9)
+    oh, gh = np.asarray(old.hit), np.asarray(got.hit)
+    # subset with bit-exact survivors
+    assert (~gh | oh).all(), "shrink fabricated an entry"
+    both = oh & gh
+    assert np.array_equal(np.asarray(got.values)[both],
+                          np.asarray(old.values)[both])
+    # newest-wins: in every destination bucket the NEWEST candidate
+    # survives the shrink (it wins the contested way — plan_insert's
+    # clipped-rank last-writer-wins), and a bucket that fits all its
+    # candidates (≤ ways) loses nothing
+    wts_old = {u: expected[u][1] for i, u in enumerate(uni) if oh[i]}
+    new_nb = max(nb // 2, 1)
+    by_bucket = {}
+    for i, u in enumerate(uni):
+        if not oh[i]:
+            continue
+        k = keys_of([u])
+        b = int(np.asarray(cache_lib.bucket_index(k, new_nb))[0])
+        by_bucket.setdefault(b, []).append((u, wts_old[u], bool(gh[i])))
+    for b, entries in by_bucket.items():
+        newest = max(ts for _, ts, _ in entries)
+        assert any(ok for _, ts, ok in entries if ts == newest), (b, entries)
+        if len(entries) <= ways:
+            assert all(ok for _, _, ok in entries), (b, entries)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 8), st.booleans(),
+                          st.integers(0, 2)),
+                min_size=1, max_size=64))
+def test_dedupe_first_groups_picks_first_occurrences(rows):
+    ids = [u for u, _, _ in rows]
+    live = np.asarray([lv for _, lv, _ in rows])
+    salt = np.asarray([s for _, _, s in rows], np.int32)
+    rep, src = cache_lib.dedupe_first_groups(
+        keys_of(ids), jnp.asarray(live), salt=jnp.asarray(salt))
+    rep, src = np.asarray(rep), np.asarray(src)
+    first = {}
+    for i, (u, lv, s) in enumerate(rows):
+        if lv and (u, s) not in first:
+            first[(u, s)] = i
+    want_rep = np.zeros(len(rows), bool)
+    for i in first.values():
+        want_rep[i] = True
+    assert np.array_equal(rep, want_rep)
+    for i, (u, lv, s) in enumerate(rows):
+        if lv:
+            assert src[i] == first[(u, s)], (i, rows)
+        else:
+            assert src[i] == -1 and not rep[i]

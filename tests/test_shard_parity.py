@@ -1,0 +1,337 @@
+"""Bit-exact parity of the bucket-sharded cache tier (DESIGN.md §11).
+
+Every sharded path — probe, insert/flush, touch, serve_many, snapshot/
+restore — must return byte-identical results to the single-device jnp
+oracle: bucket-axis sharding is a pure placement decision, never a
+semantic one. Each test spawns ONE subprocess with 8 forced host devices
+(device count is locked at first jax init, cf. test_distributed.py) and
+checks shard counts via submeshes of the device list. Every shard count
+in {1, 2, 4, 8} is exercised by the suite; each test sweeps the two
+counts that stress ITS path most (every compile of a shard_map variant
+costs tens of seconds on the forced-host backend, so the sweep is
+split across tests rather than repeated in each).
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_devices(code: str, n: int = 8, timeout: int = 540) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n}")
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert res.returncode == 0, f"\nSTDOUT:{res.stdout}\nSTDERR:{res.stderr}"
+
+
+PRELUDE = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+assert len(jax.devices()) == 8, jax.devices()
+rng = np.random.default_rng(0)
+
+from repro.core import cache as cache_lib
+from repro.core import server as srv_lib
+from repro.core import writebuf as wb_lib
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64
+from repro.distributed import collectives as coll
+from repro.distributed import sharding as shard_lib
+
+def keys_of(ids):
+    return Key64.from_int(np.asarray(ids, np.int64))
+
+def submesh(n_shards):
+    return Mesh(np.array(jax.devices()[:n_shards]), ("shard",))
+
+def place(tree, mesh, spec):
+    sh = NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), tree)
+
+def eq_tree(a, b, name):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, (name, ta, tb)
+    for i, (x, y) in enumerate(zip(la, lb)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), (name, i)
+"""
+
+
+def test_sharded_cache_ops_match_oracle():
+    """flush_dual + lookup_dual (both backends) + the touch-buffer recency
+    path, on the degenerate 1-shard mesh and the full 8-shard mesh,
+    against the single-device oracle — exact."""
+    run_devices(PRELUDE + """
+NB_D, NB_F, W, D, B = 64, 32, 4, 8, 128
+for n_shards in (1, 8):
+    mesh = submesh(n_shards)
+    d0 = cache_lib.init_cache(NB_D, W, D)
+    f0 = cache_lib.init_cache(NB_F, W, D)
+    buf = wb_lib.init_writebuf(256, D)
+    tb = wb_lib.init_touchbuf(256)
+    keys = keys_of(rng.integers(0, 500, B))
+    vals = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+    mask = jnp.asarray(rng.random(B) < 0.8)
+    buf = wb_lib.append(buf, keys, vals, 1000, mask)
+
+    d_sh = place(d0, mesh, P("shard"))
+    f_sh = place(f0, mesh, P("shard"))
+    od, of, ob, otb = wb_lib.flush_dual(buf, d0, f0, 2000, 5000, 50000,
+                                        evict_lru=True, touchbuf=tb)
+    sd, sf, sb, stb = wb_lib.flush_dual(buf, d_sh, f_sh, 2000, 5000, 50000,
+                                        evict_lru=True, touchbuf=tb,
+                                        mesh=mesh)
+    eq_tree((od, of, ob, otb), (sd, sf, sb, stb),
+            f"flush_dual s={n_shards}")
+
+    qk = keys_of(rng.integers(0, 500, B))
+    for backend in ("jnp", "pallas"):
+        want = cache_lib.lookup_dual(od, of, qk, 3000, 5000, 50000,
+                                     backend=backend)
+        got = coll.sharded_lookup_dual(mesh, sd, sf, qk, 3000, 5000, 50000,
+                                       backend=backend)
+        eq_tree(want, got, f"lookup {backend} s={n_shards}")
+    ord_, orf = cache_lib.lookup_dual(od, of, qk, 3000, 5000, 50000)
+
+    # recency path: buffered touches must land identically through the
+    # sharded flush (scatter-max onto routed local coordinates)
+    tb2 = wb_lib.touch_append(tb, ord_, orf, 3500)
+    buf2 = wb_lib.append(wb_lib.init_writebuf(256, D),
+                         keys_of(rng.integers(0, 500, B)), vals, 3600, mask)
+    want2 = wb_lib.flush_dual(buf2, od, of, 4000, 5000, 50000,
+                              evict_lru=True, touchbuf=tb2)
+    got2 = wb_lib.flush_dual(buf2, sd, sf, 4000, 5000, 50000,
+                             evict_lru=True, touchbuf=tb2, mesh=mesh)
+    eq_tree(want2, got2, f"flush+touch s={n_shards}")
+
+    # single-tier flush (failover_write="off" path)
+    want3 = wb_lib.flush(buf2, od, 4000, 5000, evict_lru=False)
+    got3 = wb_lib.flush(buf2, sd, 4000, 5000, evict_lru=False, mesh=mesh)
+    eq_tree(want3, got3, f"flush single s={n_shards}")
+print("ops ok")
+""")
+
+
+def test_sharded_multi_model_ops_match_oracle():
+    """Stacked-tier flush_dual_multi + lookup_dual_multi (both backends)
+    across heterogeneous per-model geometries, shards 2/4 (the smallest
+    model's 16 buckets split 8/4 ways per shard) — exact."""
+    run_devices(PRELUDE + """
+D, B = 8, 128
+cfgs = [
+    CacheConfig(model_id=1, model_type="ctr", n_buckets=64, ways=4,
+                value_dim=D, cache_ttl_ms=5000, failover_ttl_ms=50000,
+                eviction="lru"),
+    CacheConfig(model_id=2, model_type="cvr", n_buckets=16, ways=4,
+                value_dim=D, cache_ttl_ms=2000, failover_ttl_ms=20000),
+    CacheConfig(model_id=3, model_type="ctr", n_buckets=32, ways=4,
+                value_dim=D, cache_ttl_ms=9000, failover_ttl_ms=90000,
+                eviction="lru"),
+]
+policy = cache_lib.policy_from_configs(cfgs)
+M = len(cfgs)
+for n_shards in (2, 4):
+    mesh = submesh(n_shards)
+    dm0 = cache_lib.init_multi_cache([c.n_buckets for c in cfgs], 4, D)
+    fm0 = cache_lib.init_multi_cache(
+        [c.resolved_failover_n_buckets() for c in cfgs], 4, D)
+    dm_sh = place(dm0, mesh, P(None, "shard"))
+    fm_sh = place(fm0, mesh, P(None, "shard"))
+
+    slots = jnp.asarray(rng.integers(0, M, B), jnp.int32)
+    keys = keys_of(rng.integers(0, 500, B))
+    vals = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+    buf = wb_lib.append(wb_lib.init_writebuf(256, D), keys, vals, 1000,
+                        jnp.ones(B, bool), model_ids=slots)
+    tb = wb_lib.init_touchbuf(256)
+
+    want = wb_lib.flush_dual_multi(buf, dm0, fm0, policy, 2000, touchbuf=tb)
+    got = wb_lib.flush_dual_multi(buf, dm_sh, fm_sh, policy, 2000,
+                                  touchbuf=tb, mesh=mesh)
+    eq_tree(want, got, f"multi flush s={n_shards}")
+    od, of = want[0], want[1]
+    sd, sf = got[0], got[1]
+
+    qs = jnp.asarray(rng.integers(0, M, B), jnp.int32)
+    qk = keys_of(rng.integers(0, 500, B))
+    for backend in ("jnp", "pallas"):
+        want_l = cache_lib.lookup_dual_multi(od, of, policy, qs, qk, 3000,
+                                             backend=backend)
+        got_l = coll.sharded_lookup_dual_multi(mesh, sd, sf, policy, qs, qk,
+                                               3000, backend=backend)
+        eq_tree(want_l, got_l, f"multi lookup {backend} s={n_shards}")
+print("multi ops ok")
+""")
+
+
+def test_sharded_serve_many_matches_oracle():
+    """End-to-end serve_many (jit + scan + donation + shard_map): sharded
+    servers return the oracle's outputs, counters, and final state byte
+    for byte — across eviction policies, backends, admission control, and
+    flush_every cadences."""
+    run_devices(PRELUDE + """
+B, D, S = 64, 8, 5
+
+def tower(params, feats):
+    return feats @ params
+
+params = jnp.asarray(rng.normal(size=(D, D)), jnp.float32)
+CFG = dict(model_id=1, model_type="ctr", n_buckets=64, ways=4, value_dim=D,
+           cache_ttl_ms=4000, failover_ttl_ms=40000)
+variants = [
+    ("ttl", {}, 1),
+    ("lru+touch", dict(eviction="lru"), 2),
+    ("pallas", dict(backend="pallas"), 0),
+    ("admission", dict(infer_budget_per_step=8, coalesce_misses=True), 1),
+]
+for name, extra, flush_every in variants:
+    cfg = CacheConfig(**{**CFG, **extra})
+    base = srv_lib.CachedEmbeddingServer(cfg=cfg, tower_fn=tower,
+                                         miss_budget=24)
+    k = keys_of(rng.integers(0, 200, size=(S, B)))
+    f = jnp.asarray(rng.normal(size=(S, B, D)), jnp.float32)
+    now = jnp.arange(S, dtype=jnp.int32) * 1000 + 1000
+    fail = jnp.asarray(rng.random((S, B)) < 0.1)
+    st0 = srv_lib.init_server_state(cfg, writebuf_capacity=512)
+    want = base.jit_serve_many(params, st0, k, f, now, fail,
+                               flush_every=flush_every)
+    for n_shards in (2, 8):
+        mesh = submesh(n_shards)
+        srv = dataclasses.replace(base, mesh=mesh)
+        st = srv_lib.init_server_state(cfg, writebuf_capacity=512,
+                                       mesh=mesh)
+        got = srv.jit_serve_many(params, st, k, f, now, fail,
+                                 flush_every=flush_every)
+        eq_tree(want, got, f"serve {name} fe={flush_every} s={n_shards}")
+print("serve ok")
+""")
+
+
+def test_sharded_multi_serve_many_matches_oracle():
+    """Multi-model serve_many parity (mixed-model batches, per-model
+    policies, both backends) on 2 and 8 shards — exact."""
+    run_devices(PRELUDE + """
+B, D, S = 64, 8, 4
+
+def tower(params, feats):
+    return feats @ params
+
+params = jnp.asarray(rng.normal(size=(D, D)), jnp.float32)
+cfgs = [
+    CacheConfig(model_id=1, model_type="ctr", n_buckets=64, ways=4,
+                value_dim=D, cache_ttl_ms=4000, failover_ttl_ms=40000,
+                eviction="lru"),
+    CacheConfig(model_id=2, model_type="cvr", n_buckets=16, ways=4,
+                value_dim=D, cache_ttl_ms=2000, failover_ttl_ms=20000,
+                infer_budget_per_step=6),
+    CacheConfig(model_id=3, model_type="ctr", n_buckets=32, ways=4,
+                value_dim=D, cache_ttl_ms=9000, failover_ttl_ms=90000,
+                coalesce_misses=True),
+]
+M = len(cfgs)
+for backend in ("jnp", "pallas"):
+    base = srv_lib.MultiModelServer(cfgs=tuple(cfgs), tower_fn=tower,
+                                    miss_budget=24, backend=backend)
+    slots = jnp.asarray(rng.integers(0, M, size=(S, B)), jnp.int32)
+    k = keys_of(rng.integers(0, 200, size=(S, B)))
+    f = jnp.asarray(rng.normal(size=(S, B, D)), jnp.float32)
+    now = jnp.arange(S, dtype=jnp.int32) * 1000 + 1000
+    fail = jnp.asarray(rng.random((S, B)) < 0.1)
+    st0 = srv_lib.init_multi_server_state(cfgs, writebuf_capacity=512)
+    want = base.jit_serve_many(params, st0, slots, k, f, now, fail,
+                               flush_every=1)
+    for n_shards in (2, 8):
+        mesh = submesh(n_shards)
+        srv = dataclasses.replace(base, mesh=mesh)
+        st = srv_lib.init_multi_server_state(cfgs, writebuf_capacity=512,
+                                             mesh=mesh)
+        got = srv.jit_serve_many(params, st, slots, k, f, now, fail,
+                                 flush_every=1)
+        eq_tree(want, got, f"multi serve {backend} s={n_shards}")
+print("multi serve ok")
+""")
+
+
+def test_sharded_snapshot_restore_reshard():
+    """Snapshot a server on N shards, restore onto M shards (N != M) and
+    onto one device: same geometry restores bit-exact; a grown geometry
+    restores through the elastic rehash and still serves every live entry
+    bit-exactly, on any shard count."""
+    run_devices(PRELUDE + """
+import tempfile
+from repro.ft import snapshot as snap_lib
+
+B, D, S = 64, 8, 4
+
+def tower(params, feats):
+    return feats @ params
+
+params = jnp.asarray(rng.normal(size=(D, D)), jnp.float32)
+cfg = CacheConfig(model_id=1, model_type="ctr", n_buckets=64, ways=4,
+                  value_dim=D, cache_ttl_ms=600000, failover_ttl_ms=3600000,
+                  eviction="lru")
+mesh4 = submesh(4)
+srv4 = srv_lib.CachedEmbeddingServer(cfg=cfg, tower_fn=tower,
+                                     miss_budget=32, mesh=mesh4)
+state = srv_lib.init_server_state(cfg, writebuf_capacity=512, mesh=mesh4)
+k = keys_of(rng.integers(0, 150, size=(S, B)))
+f = jnp.asarray(rng.normal(size=(S, B, D)), jnp.float32)
+now = jnp.arange(S, dtype=jnp.int32) * 1000 + 1000
+state, _, _ = srv4.jit_serve_many(params, state, k, f, now, flush_every=1)
+
+workdir = tempfile.mkdtemp(prefix="shard-snap-")
+t_snap = int(now[-1]) + 1
+state = snap_lib.snapshot_server(workdir, 1, srv4, state, t_snap)
+
+probe = keys_of(np.arange(150, dtype=np.int64))
+want = cache_lib.lookup(jax.device_get(state.direct), probe, t_snap,
+                        cfg.cache_ttl_ms)
+assert int(np.asarray(want.hit).sum()) > 0, "snapshot has no live entries"
+
+# same geometry, different shard counts (incl. unsharded): bit-exact
+for n_shards in (1, 2, 8):
+    mesh = submesh(n_shards) if n_shards > 1 else None
+    srv = srv_lib.CachedEmbeddingServer(cfg=cfg, tower_fn=tower,
+                                        miss_budget=32, mesh=mesh)
+    r = snap_lib.restore_server(workdir, srv, now_ms=t_snap,
+                                writebuf_capacity=512)
+    assert r.mode == "bitexact", (n_shards, r.mode, r.detail)
+    eq_tree(jax.device_get(r.state.direct), jax.device_get(state.direct),
+            f"restore direct M={n_shards}")
+    eq_tree(jax.device_get(r.state.failover),
+            jax.device_get(state.failover), f"restore failover M={n_shards}")
+    if mesh is not None:   # restored probe parity THROUGH the sharded path
+        got = coll.sharded_lookup_dual(mesh, r.state.direct,
+                                       r.state.failover, probe, t_snap,
+                                       cfg.cache_ttl_ms, cfg.failover_ttl_ms)
+        eq_tree(want, got[0], f"restore probe M={n_shards}")
+
+# grown geometry on a different shard count: elastic rehash, every live
+# snapshot entry still served bit-exactly by the sharded probe
+cfg2 = dataclasses.replace(cfg, n_buckets=128)
+mesh2 = submesh(2)
+srv2 = srv_lib.CachedEmbeddingServer(cfg=cfg2, tower_fn=tower,
+                                     miss_budget=32, mesh=mesh2)
+r2 = snap_lib.restore_server(workdir, srv2, now_ms=t_snap,
+                             writebuf_capacity=512)
+assert r2.mode == "rehash", (r2.mode, r2.detail)
+got2 = coll.sharded_lookup_dual(mesh2, r2.state.direct, r2.state.failover,
+                                probe, t_snap, cfg2.cache_ttl_ms,
+                                cfg2.failover_ttl_ms)[0]
+h_want, h_got = np.asarray(want.hit), np.asarray(got2.hit)
+assert (h_got | ~h_want).all(), "rehash lost a live entry"
+both = h_want & h_got
+assert np.array_equal(np.asarray(got2.values)[both],
+                      np.asarray(want.values)[both]), "values differ"
+# the resharded restore must keep SERVING: a serve_many on the new mesh
+st2 = r2.state
+st2, acc, _ = srv2.jit_serve_many(params, st2, k, f, now + 10000,
+                                  flush_every=1)
+assert int(acc["requests"]) == S * B
+print("reshard ok")
+""")
