@@ -23,6 +23,7 @@ from __future__ import annotations
 import json
 import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -64,8 +65,9 @@ def _steady_hit_rate(eviction: str, n_buckets: int, ways: int,
         res = srv.jit_serve_step(params, state, keys, feats, t)
         state = res.state
         if r >= rounds // 2:
-            hits += int(res.stats["direct_hits"])
-            reqs += int(res.stats["requests"])
+            s = jax.device_get(res.stats)  # erlint: allow[ER002] — one fetch per dispatch
+            hits += int(s["direct_hits"])
+            reqs += int(s["requests"])
         state = srv.jit_flush(state, t)
     return hits / max(reqs, 1)
 

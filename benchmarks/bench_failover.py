@@ -7,6 +7,7 @@ over the calibrated request stream with injected failures.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -72,9 +73,10 @@ def run(report: Report | None = None, n_users: int = 1500,
                                         Key64.from_int(ids), feats, now,
                                         fail)
             state = server.jit_flush(res.state, now)
-            requests += int(res.stats["requests"])
-            failures += int(res.stats["tower_failures"])
-            fallbacks += int(res.stats["fallbacks"])
+            s = jax.device_get(res.stats)  # erlint: allow[ER002] — one fetch per dispatch
+            requests += int(s["requests"])
+            failures += int(s["tower_failures"])
+            fallbacks += int(s["fallbacks"])
         got_wo = 100.0 * failures / max(requests, 1)
         got_w = 100.0 * fallbacks / max(requests, 1)
         label = f"table3_{name}"

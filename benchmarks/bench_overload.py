@@ -32,6 +32,7 @@ from __future__ import annotations
 import json
 import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -76,10 +77,11 @@ def _serve_rounds(srv, state, params, rng, users, batch, rounds, t0):
         feats = jnp.asarray(rng.standard_normal((batch, DIM)), jnp.float32)
         res = srv.jit_serve_step(params, state, keys, feats, t)
         state = res.state
+        s = jax.device_get(res.stats)  # erlint: allow[ER002] — one fetch per dispatch
         for k in tot:
-            tot[k] += int(res.stats[k])
-        stale_sum += (float(res.stats["failover_stale_ms"])
-                      * int(res.stats["failover_serves"]))
+            tot[k] += int(s[k])
+        stale_sum += (float(s["failover_stale_ms"])
+                      * int(s["failover_serves"]))
         state = srv.jit_flush(state, t)
         t += STEP_MS
     tot["mean_failover_stale_ms"] = stale_sum / max(tot["failover_serves"], 1)

@@ -86,10 +86,11 @@ def _run_loop(srv, keys, feats, now, batch, flush_every):
         # batched transfer: ONE device_get for the step's stats dict
         # (not per-key int() conversions) — still a sync every step
         counters.merge(ServingCounters.from_stats(
-            jax.device_get(res.stats)))
+            jax.device_get(res.stats)))  # erlint: allow[ER002] — see above
         if (i + 1) % flush_every == 0:
             state = srv.jit_flush(state, now[i])
     state = srv.jit_flush(state, now[-1])
+    # erlint: allow[ER002] — final drain so the timer covers real work
     jax.block_until_ready(jax.tree_util.tree_leaves(state))
     return time.perf_counter() - t0, counters
 
@@ -108,7 +109,9 @@ def _run_scan(srv, keys, feats, now, batch, flush_every, chunk_steps):
         state, acc, _ = srv.jit_serve_many(
             params, state, k, feats[sl], now[sl],
             flush_every=flush_every, collect=False)
+        # erlint: allow[ER002] — the one sanctioned fetch per dispatch
         counters.merge(ServingCounters.from_stats(jax.device_get(acc)))
+    # erlint: allow[ER002] — final drain so the timer covers real work
     jax.block_until_ready(jax.tree_util.tree_leaves(state))
     return time.perf_counter() - t0, counters
 

@@ -5,6 +5,7 @@ and shows the provenance accounting — the paper's Fig. 3 in miniature.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -48,7 +49,8 @@ def main():
     res = server.jit_serve_step(params, state, keys, feats, 60_000)
     state = server.jit_flush(res.state, 60_000)
     print("t=+1min:", [names[int(s)] for s in res.source])
-    print("         hit rate:", float(res.stats["direct_hits"]) / 8)
+    stats = jax.device_get(res.stats)  # erlint: allow[ER002] — one fetch per dispatch
+    print("         hit rate:", float(stats["direct_hits"]) / 8)
 
     # t=+10min: direct TTL expired; towers fail → failover cache recovers
     t = 10 * MINUTE_MS

@@ -69,10 +69,11 @@ def main():
             params, state, Key64.from_int(ids), tokens_of(ids), now,
             jnp.asarray(injector.mask(BATCH, now)))
         state = server.jit_flush(res.state, now)
-        totals["requests"] += int(res.stats["requests"])
-        totals["hits"] += int(res.stats["direct_hits"])
-        totals["towers"] += int(res.stats["tower_inferences"])
-        totals["fallbacks"] += int(res.stats["fallbacks"])
+        s = jax.device_get(res.stats)  # erlint: allow[ER002] — one fetch per dispatch
+        totals["requests"] += int(s["requests"])
+        totals["hits"] += int(s["direct_hits"])
+        totals["towers"] += int(s["tower_inferences"])
+        totals["fallbacks"] += int(s["fallbacks"])
 
     hit_rate = totals["hits"] / max(totals["requests"], 1)
     print(f"requests           : {totals['requests']}")

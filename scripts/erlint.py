@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""erlint CLI — static invariant checks for the ERCache serve path.
+
+Examples:
+
+    python scripts/erlint.py --check                 # CI gate (exit 1 on
+                                                     # any non-baseline
+                                                     # finding)
+    python scripts/erlint.py --json out.json         # machine-readable
+    python scripts/erlint.py src/repro/core          # lint a subtree
+    python scripts/erlint.py --update-baseline       # grandfather current
+                                                     # findings
+
+Default roots: src/repro benchmarks examples — the serve path, every
+dispatch-driver loop that can hold a donated state wrong, and the runnable
+docs. The committed baseline lives at tools/erlint/baseline.json and is
+expected to stay EMPTY; --update-baseline exists for emergencies, not
+workflow.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "tools"))
+
+from erlint import __version__, lint_paths          # noqa: E402
+from erlint.core import load_baseline, save_baseline  # noqa: E402
+from erlint.rules import RULES                      # noqa: E402
+
+DEFAULT_ROOTS = ("src/repro", "benchmarks", "examples")
+DEFAULT_BASELINE = os.path.join("tools", "erlint", "baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="erlint", description=__doc__)
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: {DEFAULT_ROOTS})")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when any non-baseline finding exists")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline JSON of grandfathered finding keys "
+                         "('' disables)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline with the current findings")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write machine-readable findings to this path "
+                         "('-' for stdout)")
+    ap.add_argument("--version", action="version",
+                    version=f"erlint {__version__}")
+    args = ap.parse_args(argv)
+
+    os.chdir(REPO_ROOT)          # paths + baseline keys are repo-relative
+    paths = args.paths or list(DEFAULT_ROOTS)
+    rules = None
+    if args.rules:
+        rules = [r.strip().upper() for r in args.rules.split(",")]
+        unknown = [r for r in rules if r not in RULES]
+        if unknown:
+            ap.error(f"unknown rules: {unknown} (have {sorted(RULES)})")
+
+    findings = lint_paths(paths, rules=rules)
+
+    if args.update_baseline:
+        save_baseline(args.baseline, findings)
+        print(f"erlint: baseline rewritten with {len(findings)} "
+              f"finding(s) -> {args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    fresh = [f for f in findings if f.key() not in baseline]
+    grandfathered = len(findings) - len(fresh)
+
+    if args.json_out:
+        payload = {
+            "schema": "erlint/1",
+            "version": __version__,
+            "roots": paths,
+            "rules": rules or sorted(RULES),
+            "counts": {"new": len(fresh), "baseline": grandfathered},
+            "findings": [dict(f.as_dict(), baseline=False) for f in fresh]
+            + [dict(f.as_dict(), baseline=True) for f in findings
+               if f.key() in baseline],
+        }
+        text = json.dumps(payload, indent=2, sort_keys=True) + "\n"
+        if args.json_out == "-":
+            sys.stdout.write(text)
+        else:
+            with open(args.json_out, "w", encoding="utf-8") as fh:
+                fh.write(text)
+
+    for f in fresh:
+        print(f.render())
+    tail = f"{len(fresh)} finding(s)"
+    if grandfathered:
+        tail += f" (+{grandfathered} baseline-grandfathered)"
+    print(f"erlint: {tail} in {', '.join(paths)}")
+
+    if args.check and fresh:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -211,14 +211,15 @@ def lookup(state: CacheState, keys: Key64, now_ms, ttl_ms,
     now_ms = jnp.int32(now_ms)
     ttl_b = _ttl_cols(ttl_ms)
     bucket, match, _, ts = _probe(state, keys, bucket=buckets)
-    fresh = (now_ms - ts) <= ttl_b           # garbage for empty slots,
-    valid = match & fresh                    # but match is False there.
+    fresh = (now_ms - ts) <= ttl_b  # erlint: allow[ER004] — garbage for
+    valid = match & fresh           # empty slots, but match is False there.
     hit = jnp.any(valid, axis=-1)
     # At most one way can match a given key (insert overwrites matches), so
     # argmax of the bool picks the unique valid way when hit.
     way = jnp.argmax(valid, axis=-1)
     vals = state.values[bucket, way]
     vals = jnp.where(hit[:, None], vals, jnp.zeros_like(vals))
+    # erlint: allow[ER004] — miss lanes (incl. TS_EMPTY wrap) forced to -1
     age = jnp.where(hit, now_ms - ts[jnp.arange(keys.hi.shape[0]), way],
                     jnp.int32(-1))
     return LookupResult(hit=hit, values=vals, age_ms=age, bucket=bucket,
@@ -462,7 +463,7 @@ def plan_insert(state: CacheState, keys: Key64, now_ms, ttl_ms,
     B = keys.hi.shape[0]
     now_ms = jnp.int32(now_ms)
     bucket, match, empty, ts = _probe(state, keys, bucket=buckets)
-    expired = (~empty) & ((now_ms - ts) > _ttl_cols(ttl_ms))
+    expired = (~empty) & ((now_ms - ts) > _ttl_cols(ttl_ms))  # erlint: allow[ER004] — ~empty masks the wrap
     live = (write_mask if write_mask is not None
             else jnp.ones((B,), bool))
     winner = _dedupe(keys, live, salt=dedupe_salt)
@@ -585,7 +586,7 @@ def insert_dual(direct: CacheState, failover: CacheState, keys: Key64,
 
     b_d, match_d, empty_d, ts_d = _probe(direct, keys, bucket=buckets_d)
     rank_d = _bucket_rank(b_d, winner, direct.n_buckets)
-    expired_d = (~empty_d) & ((now_ms - ts_d) > _ttl_cols(direct_ttl_ms))
+    expired_d = (~empty_d) & ((now_ms - ts_d) > _ttl_cols(direct_ttl_ms))  # erlint: allow[ER004] — ~empty_d masks the wrap
     way_d = _choose_way(match_d, empty_d, expired_d, ts_d, rank_d,
                         lru=evict_lru,
                         recency=jnp.maximum(ts_d,
@@ -605,7 +606,7 @@ def insert_dual(direct: CacheState, failover: CacheState, keys: Key64,
         rank_f = rank_d                       # identical bucket mapping
     else:
         rank_f = _bucket_rank(b_f, winner, failover.n_buckets)
-    expired_f = (~empty_f) & ((now_ms - ts_f) > _ttl_cols(failover_ttl_ms))
+    expired_f = (~empty_f) & ((now_ms - ts_f) > _ttl_cols(failover_ttl_ms))  # erlint: allow[ER004] — ~empty_f masks the wrap
     way_f = _choose_way(match_f, empty_f, expired_f, ts_f, rank_f,
                         lru=evict_lru,
                         recency=jnp.maximum(ts_f,

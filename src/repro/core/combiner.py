@@ -107,7 +107,7 @@ def lookup_member(spec: GroupSpec, state: GroupedCacheState, name: str,
     member = spec.members[idx]
     res = cache_lib.lookup(state.base, keys, now_ms, member.ttl_ms)
     bucket, match, _, ts = cache_lib._probe(state.base, keys)
-    fresh = (jnp.int32(now_ms) - ts) <= jnp.int32(member.ttl_ms)
+    fresh = (jnp.int32(now_ms) - ts) <= jnp.int32(member.ttl_ms)  # erlint: allow[ER004] — match masks the wrap
     valid = match & fresh
     way = jnp.argmax(valid, axis=-1)
     bit = (state.present[bucket, way] >> idx) & 1

@@ -53,6 +53,18 @@ DEFAULT_TILE_Q = 128
 # and, on the multi-model tier, ONE launch for the whole model registry.
 LAUNCHES = {"tiled": 0, "dual": 0, "dual_multi": 0, "perquery": 0}
 
+# Single-launch contract: entry wrapper -> LAUNCHES key. One source of
+# truth shared by the static checker (erlint ER003 verifies each entry
+# reaches exactly one pl.pallas_call) and the runtime contract tests
+# (which assert the counter deltas). Keys of LAUNCHES and values here
+# must stay in bijection.
+LAUNCH_CONTRACT = {
+    "cache_probe_tiled": "tiled",
+    "cache_probe_dual": "dual",
+    "cache_probe_dual_multi": "dual_multi",
+    "cache_probe_perquery": "perquery",
+}
+
 
 def resolve_interpret(interpret=None) -> bool:
     """None → interpret unless running on a real TPU backend.
@@ -83,12 +95,14 @@ def _match_tile(now, ttl, qhi, qlo, khi, klo, ts):
     way (-1 on miss) is both the phase-2 value-fetch index and the
     coordinate the serve path feeds the touch buffer."""
     match = (khi == qhi[:, None]) & (klo == qlo[:, None])
-    fresh = (now - ts) <= ttl
+    # TS_EMPTY lanes wrap negative here but never match a real key, so
+    # `match` masks them out of `valid`/`age` below.
+    fresh = (now - ts) <= ttl        # erlint: allow[ER004]
     valid = match & fresh
     hit = jnp.any(valid, axis=-1)
     # select exactly the first valid way without a dynamic gather
     first = valid & (jnp.cumsum(valid.astype(jnp.int32), axis=-1) == 1)
-    age = jnp.sum(jnp.where(first, now - ts, 0), axis=-1)
+    age = jnp.sum(jnp.where(first, now - ts, 0), axis=-1)  # erlint: allow[ER004]
     # TPU needs ≥2D iota: broadcasted over the (TQ, W) tile, one-hot summed
     w_iota = jax.lax.broadcasted_iota(jnp.int32, first.shape, 1)
     way = jnp.sum(jnp.where(first, w_iota, 0), axis=-1)
@@ -566,12 +580,13 @@ def _perquery_kernel(bucket_ref, scalars_ref,            # scalar prefetch
     klo = klo_ref[0]
     ts = ts_ref[0]
     match = (khi == qhi_ref[0]) & (klo == qlo_ref[0])
-    fresh = (now - ts) <= ttl
+    # TS_EMPTY wrap is masked by `match` exactly as in _match_tile.
+    fresh = (now - ts) <= ttl        # erlint: allow[ER004]
     valid = match & fresh
     hit = jnp.any(valid)
     first = valid & (jnp.cumsum(valid.astype(jnp.int32)) == 1)
     val = jnp.sum(jnp.where(first[:, None], val_ref[0], 0.0), axis=0)
-    age = jnp.sum(jnp.where(first, now - ts, 0))
+    age = jnp.sum(jnp.where(first, now - ts, 0))  # erlint: allow[ER004]
     hit_ref[0] = hit.astype(jnp.int32)
     out_ref[0] = val.astype(out_ref.dtype)
     age_ref[0] = jnp.where(hit, age, jnp.int32(-1))

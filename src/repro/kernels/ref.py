@@ -28,12 +28,14 @@ def cache_probe_ref(key_hi, key_lo, write_ts, values, q_hi, q_lo, buckets,
     k_lo = key_lo[buckets]
     ts = write_ts[buckets]
     match = (k_hi == q_hi[:, None]) & (k_lo == q_lo[:, None])
-    fresh = (jnp.int32(now_ms) - ts) <= jnp.int32(ttl_ms)
+    # TS_EMPTY lanes wrap negative but never match; `match` masks them.
+    fresh = (jnp.int32(now_ms) - ts) <= jnp.int32(ttl_ms)  # erlint: allow[ER004]
     valid = match & fresh
     hit = jnp.any(valid, axis=-1)
     way = jnp.argmax(valid, axis=-1)
     out = values[buckets, way]
     out = jnp.where(hit[:, None], out, 0.0)
+    # erlint: allow[ER004] — miss lanes forced to -1 by the hit mask
     age = jnp.where(hit, jnp.int32(now_ms) - ts[jnp.arange(buckets.shape[0]),
                                                 way], jnp.int32(-1))
     return hit, out, age, jnp.where(hit, way.astype(jnp.int32),

@@ -196,6 +196,7 @@ def run_serving(arch: str = "sasrec", minutes: int = 60, users: int = 2000,
             state, acc, _ = server.jit_serve_many(
                 params, state, keys, feats, nows, fails,
                 flush_every=1, collect=False)
+            # erlint: allow[ER002] — the one sanctioned fetch per dispatch
             counters.merge(ServingCounters.from_stats(jax.device_get(acc)))
     else:
         # cache-off baseline: still a Python loop, but the fallback count
@@ -337,7 +338,7 @@ def run_serving_overload(arch: str = "sasrec", minutes: int = 60,
             state, acc, _ = server.jit_serve_many(
                 params, state, keys, feats, nows, fails,
                 flush_every=1, collect=False)
-            s = jax.device_get(acc)          # ONE transfer per chunk
+            s = jax.device_get(acc)  # erlint: allow[ER002] — one fetch per chunk
             phases[phase].merge(ServingCounters.from_stats(s))
             stale[phase][0] += float(s["failover_stale_sum_ms"])
             stale[phase][1] += int(s["failover_serves"])
@@ -465,6 +466,7 @@ def run_serving_restart(arch: str = "sasrec", pre_steps: int = 240,
                                          features_of)
         state, acc, _ = server.jit_serve_many(
             params, state, keys, feats, nows, flush_every=1, collect=False)
+        # erlint: allow[ER002] — the one sanctioned fetch per dispatch
         pre_counters.merge(ServingCounters.from_stats(jax.device_get(acc)))
         state = snap_lib.snapshot_server(
             workdir, seg_lo + n, server, state,
@@ -515,7 +517,8 @@ def run_serving_restart(arch: str = "sasrec", pre_steps: int = 240,
             vstate, acc, _ = vsrv.jit_serve_many(
                 params, vstate, keys, feats, nows, flush_every=1,
                 collect=False)
-            c = ServingCounters.from_stats(jax.device_get(acc))
+            c = ServingCounters.from_stats(
+                jax.device_get(acc))  # erlint: allow[ER002] — one per chunk
             curve.append(round(c.hit_rate, 4))
             rec.merge(c)
         ledger.merge(rec)
@@ -642,7 +645,7 @@ def run_serving_multi(arch: str = "sasrec", minutes: int = 60,
         state, acc, _ = server.jit_serve_many(
             params, state, slots, keys, feats, nows, fails,
             flush_every=1, collect=False)
-        s = jax.device_get(acc)              # ONE transfer per chunk
+        s = jax.device_get(acc)  # erlint: allow[ER002] — one fetch per chunk
         counters.merge(ServingCounters.from_stats(s))
         pm_requests += np.asarray(s["per_model_requests"], np.int64)
         pm_hits += np.asarray(s["per_model_direct_hits"], np.int64)

@@ -1,0 +1,429 @@
+"""erlint self-tests: per-rule fixtures (true positive / true negative /
+pragma-suppressed) plus the repo self-check — the committed tree must be
+clean against the committed baseline, and the CLI must fail --check when a
+violation is injected.
+
+Pure-stdlib tests (no JAX import): the linter analyzes source text, so the
+fixtures are snippets written to tmp_path.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+from erlint import lint_paths                      # noqa: E402
+from erlint.core import GENERIC_CALLEES, Project   # noqa: E402
+from erlint.walker import PathSets                 # noqa: E402
+
+CLI = os.path.join(REPO, "scripts", "erlint.py")
+
+
+def lint(tmp_path, source, rules, name="snippet.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    return lint_paths([str(p)], rules=list(rules))
+
+
+def rule_ids(findings):
+    return sorted({f.rule for f in findings})
+
+
+# --------------------------------------------------------------- ER001
+ER001_TP = """
+    def drive(server, params, state, keys):
+        res = server.jit_serve_step(params, state, keys, 0)
+        leak = state.writebuf.count
+        return res, leak
+"""
+
+ER001_TN = """
+    def drive(server, params, state, keys):
+        res = server.jit_serve_step(params, state, keys, 0)
+        state = res.state
+        leak = state.writebuf.count
+        return res, leak
+"""
+
+ER001_PRAGMA = """
+    def drive(server, params, state, keys):
+        res = server.jit_serve_step(params, state, keys, 0)
+        leak = state.writebuf.count  # erlint: allow[ER001]
+        return res, leak
+"""
+
+ER001_LOOP_TP = """
+    def drive(server, params, state, batches):
+        for keys in batches:
+            res = server.jit_serve_step(params, state, keys, 0)
+        return res
+"""
+
+
+def test_er001_true_positive(tmp_path):
+    fs = lint(tmp_path, ER001_TP, ["ER001"])
+    assert rule_ids(fs) == ["ER001"]
+    assert "donated" in fs[0].message
+
+
+def test_er001_true_negative(tmp_path):
+    assert lint(tmp_path, ER001_TN, ["ER001"]) == []
+
+
+def test_er001_pragma_suppressed(tmp_path):
+    assert lint(tmp_path, ER001_PRAGMA, ["ER001"]) == []
+
+
+def test_er001_loop_wraparound(tmp_path):
+    """`state` donated in iteration i is read (re-donated) in i+1 without
+    rebinding — the loop body is scanned twice to catch the wrap."""
+    fs = lint(tmp_path, ER001_LOOP_TP, ["ER001"])
+    assert rule_ids(fs) == ["ER001"]
+
+
+# --------------------------------------------------------------- ER002
+ER002_HOT_TP = """
+    def serve_step(params, state, keys):
+        print("debug", keys)
+        return state
+"""
+
+ER002_HOT_TN = """
+    def serve_step(params, state, keys):
+        out = helper(state, keys)
+        return out
+
+    def helper(state, keys):
+        return state
+"""
+
+ER002_HOT_PRAGMA = """
+    def serve_step(params, state, keys):
+        print("debug", keys)  # erlint: allow[ER002]
+        return state
+"""
+
+ER002_DRIVER_TP = """
+    def drive(server, params, state, keys):
+        state, acc, _ = server.jit_serve_many(params, state, keys)
+        return state, int(acc["requests"]), int(acc["hits"])
+"""
+
+ER002_DRIVER_TN = """
+    import jax
+
+    def drive(server, params, state, keys):
+        state, acc, _ = server.jit_serve_many(params, state, keys)
+        acc = jax.device_get(acc)  # erlint: allow[ER002]
+        return state, int(acc["requests"]), int(acc["hits"])
+"""
+
+
+def test_er002_hot_true_positive(tmp_path):
+    fs = lint(tmp_path, ER002_HOT_TP, ["ER002"])
+    assert rule_ids(fs) == ["ER002"]
+    assert "hot path" in fs[0].message
+
+
+def test_er002_hot_true_negative(tmp_path):
+    assert lint(tmp_path, ER002_HOT_TN, ["ER002"]) == []
+
+
+def test_er002_pragma_suppressed(tmp_path):
+    assert lint(tmp_path, ER002_HOT_PRAGMA, ["ER002"]) == []
+
+
+def test_er002_driver_per_value_conversions(tmp_path):
+    """N int() reads of a device result = N blocking transfers."""
+    fs = lint(tmp_path, ER002_DRIVER_TP, ["ER002"])
+    assert len(fs) == 2
+    assert all("per-value transfer" in f.message for f in fs)
+
+
+def test_er002_driver_batched_fetch_ok(tmp_path):
+    """Rebinding through one pragma'd device_get makes the conversions
+    host-side and free."""
+    assert lint(tmp_path, ER002_DRIVER_TN, ["ER002"]) == []
+
+
+# --------------------------------------------------------------- ER003
+ER003_OK = """
+    import jax.experimental.pallas as pl
+
+    LAUNCHES = {"tiled": 0}
+    LAUNCH_CONTRACT = {"probe_tiled": "tiled"}
+
+    def _kernel_call(x):
+        return pl.pallas_call(lambda r: r)(x)
+
+    def probe_tiled(x):
+        LAUNCHES["tiled"] += 1
+        return _kernel_call(x)
+"""
+
+ER003_DOUBLE_LAUNCH = ER003_OK + """
+    def _kernel_call_2(x):
+        return pl.pallas_call(lambda r: r)(x)
+
+    def probe_tiled_extra(x):
+        return _kernel_call_2(x)
+"""
+
+ER003_NO_CONTRACT = """
+    LAUNCHES = {"tiled": 0}
+
+    def probe_tiled(x):
+        LAUNCHES["tiled"] += 1
+        return x
+"""
+
+ER003_PRAGMA = """
+    # erlint: allow[ER003]
+    LAUNCHES = {"tiled": 0}
+
+    def probe_tiled(x):
+        LAUNCHES["tiled"] += 1
+        return x
+"""
+
+
+def test_er003_clean_contract(tmp_path):
+    assert lint(tmp_path, ER003_OK, ["ER003"]) == []
+
+
+def test_er003_unaccounted_launch(tmp_path):
+    fs = lint(tmp_path, ER003_DOUBLE_LAUNCH, ["ER003"])
+    assert any("unaccounted" in f.message for f in fs)
+
+
+def test_er003_missing_contract(tmp_path):
+    fs = lint(tmp_path, ER003_NO_CONTRACT, ["ER003"])
+    assert rule_ids(fs) == ["ER003"]
+    assert "LAUNCH_CONTRACT" in fs[0].message
+
+
+def test_er003_pragma_suppressed(tmp_path):
+    assert lint(tmp_path, ER003_PRAGMA, ["ER003"]) == []
+
+
+# --------------------------------------------------------------- ER004
+ER004_TP = """
+    def lookup(now_ms, write_ts, ttl):
+        fresh = (now_ms - write_ts) <= ttl
+        return fresh
+"""
+
+ER004_TN = """
+    import jax.numpy as jnp
+
+    def lookup(now_ms, write_ts, ttl):
+        age = now_ms.astype(jnp.int64) - write_ts.astype(jnp.int64)
+        return age <= ttl
+"""
+
+ER004_PRAGMA = """
+    def lookup(now_ms, write_ts, ttl, match):
+        fresh = (now_ms - write_ts) <= ttl  # erlint: allow[ER004]
+        return match & fresh
+"""
+
+
+def test_er004_true_positive(tmp_path):
+    fs = lint(tmp_path, ER004_TP, ["ER004"])
+    assert rule_ids(fs) == ["ER004"]
+    assert "TS_EMPTY" in fs[0].message
+
+
+def test_er004_widened_ok(tmp_path):
+    assert lint(tmp_path, ER004_TN, ["ER004"]) == []
+
+
+def test_er004_pragma_suppressed(tmp_path):
+    assert lint(tmp_path, ER004_PRAGMA, ["ER004"]) == []
+
+
+# --------------------------------------------------------------- ER005
+ER005_TP = """
+    import jax.numpy as jnp
+
+    def serve_step(params, state, keys):
+        score = jnp.sum(keys)
+        if score > 0:
+            return state
+        return params
+"""
+
+ER005_TN = """
+    import jax.numpy as jnp
+
+    def serve_step(params, state, keys, cfg=None):
+        if cfg is None:
+            cfg = {}
+        padded = jnp.pad(keys, (0, 4))
+        B = padded.shape[0]
+        if B % 8:
+            B += 8 - B % 8
+        return state
+"""
+
+ER005_PRAGMA = """
+    import jax.numpy as jnp
+
+    def serve_step(params, state, keys):
+        score = jnp.sum(keys)
+        if score > 0:  # erlint: allow[ER005]
+            return state
+        return params
+"""
+
+
+def test_er005_true_positive(tmp_path):
+    fs = lint(tmp_path, ER005_TP, ["ER005"])
+    assert rule_ids(fs) == ["ER005"]
+    assert "lax.cond" in fs[0].message
+
+
+def test_er005_static_metadata_not_tainted(tmp_path):
+    """.shape / .ndim reads of traced arrays are concrete at trace time;
+    branching on them is the kernel wrappers' bread and butter."""
+    assert lint(tmp_path, ER005_TN, ["ER005"]) == []
+
+
+def test_er005_pragma_suppressed(tmp_path):
+    assert lint(tmp_path, ER005_PRAGMA, ["ER005"]) == []
+
+
+# --------------------------------------------------------------- ER006
+ER006_TP = """
+    import jax
+
+    def step(params, batch):
+        return params
+
+    jit_step = jax.jit(step, donate_argnums=(0,))
+"""
+
+ER006_TN = """
+    import jax
+
+    def step(state, batch):
+        return state
+
+    jit_step = jax.jit(step, donate_argnums=(0,))
+"""
+
+ER006_PRAGMA = ER006_TP.replace(
+    "jit_step = jax.jit(step, donate_argnums=(0,))",
+    "jit_step = jax.jit(step, donate_argnums=(0,))"
+    "  # erlint: allow[ER006]")
+
+ER006_METHOD_TN = """
+    import jax
+
+    class Server:
+        def serve_step(self, params, state, keys):
+            return state
+
+        def make_jit(self):
+            return jax.jit(self.serve_step, donate_argnums=(1,))
+"""
+
+
+def test_er006_true_positive(tmp_path):
+    fs = lint(tmp_path, ER006_TP, ["ER006"])
+    assert rule_ids(fs) == ["ER006"]
+    assert "drift" in fs[0].message
+
+
+def test_er006_true_negative(tmp_path):
+    assert lint(tmp_path, ER006_TN, ["ER006"]) == []
+
+
+def test_er006_pragma_suppressed(tmp_path):
+    assert lint(tmp_path, ER006_PRAGMA, ["ER006"]) == []
+
+
+def test_er006_bound_method_indexing(tmp_path):
+    """`self` is dropped when indexing bound-method donate positions:
+    donate_argnums=(1,) on self.serve_step(params, state, ...) lands on
+    `state`, not `keys`."""
+    assert lint(tmp_path, ER006_METHOD_TN, ["ER006"]) == []
+
+
+# ------------------------------------------------------- walker behavior
+def test_generic_callee_does_not_leak_hot(tmp_path):
+    """`acc.at[i].add(x)` in hot code must not pull every `def add` in the
+    project into the hot set (the NEAccumulator.add false positive)."""
+    p = tmp_path / "leak.py"
+    p.write_text(textwrap.dedent("""
+        import numpy as np
+
+        def serve_step(params, state, acc):
+            return acc.at[0].add(1)
+
+        class Metrics:
+            def add(self, x):
+                return np.asarray(x)
+    """))
+    project = Project.from_paths([str(p)])
+    sets = PathSets(project)
+    hot_names = {f.qualname for f in sets.hot}
+    assert "serve_step" in hot_names
+    assert "Metrics.add" not in hot_names
+    assert "add" in GENERIC_CALLEES
+
+
+# --------------------------------------------------------- repo self-check
+def run_cli(*argv):
+    return subprocess.run([sys.executable, CLI, *argv], cwd=REPO,
+                          capture_output=True, text=True)
+
+
+def test_repo_is_clean_with_check():
+    """The committed tree passes --check against the committed baseline."""
+    r = run_cli("--check")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_committed_baseline_is_empty():
+    with open(os.path.join(REPO, "tools", "erlint", "baseline.json")) as fh:
+        assert json.load(fh)["findings"] == []
+
+
+def test_check_fails_on_injected_violation(tmp_path):
+    """--check exits non-zero when a fixture violation is present."""
+    p = tmp_path / "bad.py"
+    p.write_text(textwrap.dedent(ER001_TP))
+    r = run_cli("--check", "--baseline", "", str(p))
+    assert r.returncode == 1
+    assert "ER001" in r.stdout
+
+
+def test_json_output_schema(tmp_path):
+    p = tmp_path / "bad.py"
+    p.write_text(textwrap.dedent(ER002_DRIVER_TP))
+    out = tmp_path / "findings.json"
+    r = run_cli("--baseline", "", "--json", str(out), str(p))
+    assert r.returncode == 0          # no --check: report, don't fail
+    data = json.loads(out.read_text())
+    assert data["schema"] == "erlint/1"
+    assert data["counts"]["new"] == 2
+    assert all(f["rule"] == "ER002" for f in data["findings"])
+
+
+def test_unknown_rule_rejected():
+    r = run_cli("--rules", "ER999")
+    assert r.returncode != 0
+    assert "unknown rules" in r.stderr
+
+
+@pytest.mark.parametrize("rule", ["ER001", "ER002", "ER003", "ER004",
+                                  "ER005", "ER006"])
+def test_rule_selection_runs_alone(rule):
+    r = run_cli("--check", "--rules", rule)
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -245,6 +245,16 @@ def test_serve_step_backend_parity():
                                        np.asarray(b.stats[key]))
 
 
+def test_launch_contract_registry_parity():
+    """LAUNCH_CONTRACT (the static source of truth erlint ER003 checks
+    against) and the runtime LAUNCHES counters are in bijection, and each
+    contract entry is a real callable that bumps exactly its own key."""
+    assert sorted(pk.LAUNCH_CONTRACT.values()) == sorted(pk.LAUNCHES)
+    assert len(set(pk.LAUNCH_CONTRACT.values())) == len(pk.LAUNCH_CONTRACT)
+    for entry in pk.LAUNCH_CONTRACT:
+        assert callable(getattr(pk, entry)), entry
+
+
 def test_serve_step_single_probe_launch():
     """serve_step on the pallas backend issues EXACTLY ONE probe kernel
     launch covering direct + failover (the fused dual probe)."""

@@ -1,0 +1,56 @@
+"""erlint — AST-based invariant checker for the ERCache serve path.
+
+The repo's SLA story (PAPER.md; DESIGN.md §2/§9) only holds while the hot
+path stays device-resident and single-dispatch. Those invariants were
+established by hand across PRs 1–7 and until now lived in prose and a few
+spot tests; erlint encodes them as a static pass that rejects violations
+at CI time:
+
+  ER001  use-after-donate      — a value passed in a donated position of a
+                                 ``jit_serve_step``/``jit_flush``/
+                                 ``jit_serve_many`` wrapper is read again
+                                 before being rebound.
+  ER002  host-sync-in-hot-path — ``jax.device_get`` / ``block_until_ready``
+                                 / ``np.asarray`` / ``.item()`` / ``print``
+                                 inside serve/flush/scan-body functions;
+                                 dispatch drivers get ONE sanctioned fetch
+                                 per dispatch via ``# erlint: allow[ER002]``.
+  ER003  single-launch drift   — the static ``pl.pallas_call`` count per
+                                 kernel entry point must agree with the
+                                 ``LAUNCHES``/``LAUNCH_CONTRACT`` registry.
+  ER004  sentinel-overflow     — int32 arithmetic mixing ``TS_EMPTY``/
+                                 timestamp planes without an int64 widen
+                                 (the overflow class PR 6 fixed at runtime).
+  ER005  traced-value branch   — Python ``if``/``while`` on traced values
+                                 inside jit-reachable functions.
+  ER006  donate-spec drift     — ``donate_argnums`` vs. the actual state
+                                 argument positions of the wrapped callable.
+
+Suppression: append ``# erlint: allow[ER00X]`` (comma-separate several
+rule ids) to the offending line, or put it on its own line directly above.
+``# erlint: skip-file`` disables the whole file.
+
+Usage (library):
+
+    from erlint import lint_paths
+    findings = lint_paths(["src/repro"])
+
+CLI: ``scripts/erlint.py`` (``--check`` for CI, ``--baseline`` for
+grandfathered findings, ``--json`` for machine-readable output).
+"""
+from __future__ import annotations
+
+from erlint.core import Finding, Project, load_baseline, save_baseline
+from erlint.rules import RULES, lint_project
+
+
+def lint_paths(paths, rules=None):
+    """Lint every ``*.py`` under ``paths``; return a list of Findings
+    (pragma-suppressed ones already removed, baseline NOT applied)."""
+    project = Project.from_paths(paths)
+    return lint_project(project, rules=rules)
+
+
+__version__ = "1.0"
+__all__ = ["Finding", "Project", "RULES", "lint_paths", "lint_project",
+           "load_baseline", "save_baseline", "__version__"]

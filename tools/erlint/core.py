@@ -1,0 +1,309 @@
+"""erlint core: findings, pragma handling, module/function indexing.
+
+Everything here is plain stdlib ``ast`` — the linter must run in an
+environment with no JAX (the CI lint job lints before installing the
+heavy deps) and must never import the code under analysis.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+PRAGMA_RE = re.compile(r"#\s*erlint:\s*allow\[([A-Za-z0-9_,\s]+)\]")
+SKIP_FILE_RE = re.compile(r"#\s*erlint:\s*skip-file")
+
+# Method names too generic to resolve by bare name across the project:
+# hot code says ``acc.at[idx].add(x)`` (jnp scatter) or ``d.get(k)`` and
+# the call-graph closure must not pull in every ``def add`` in the repo
+# (e.g. NEAccumulator.add, a host-side metrics method).
+GENERIC_CALLEES = frozenset({
+    "add", "get", "set", "append", "extend", "update", "pop", "items",
+    "keys", "values", "copy", "sum", "max", "min", "mean", "any", "all",
+    "astype", "reshape", "item", "join", "split", "strip", "format",
+    "write", "read", "close", "open", "sort", "count", "index",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str          # "ER001" … "ER006"
+    path: str          # path as given to the CLI (repo-relative in CI)
+    line: int          # 1-based
+    col: int           # 0-based
+    message: str
+    symbol: str = ""   # enclosing function qualname ("" = module level)
+
+    def key(self) -> str:
+        """Baseline identity. Deliberately EXCLUDES the line number so a
+        grandfathered finding survives unrelated edits above it; moving
+        the same defect to another function re-surfaces it."""
+        return f"{self.rule}|{self.path}|{self.symbol}|{self.message}"
+
+    def render(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return (f"{self.path}:{self.line}:{self.col + 1}: "
+                f"{self.rule} {self.message}{sym}")
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Pragmas:
+    """Per-file suppression map: line number -> set of allowed rule ids.
+
+    A pragma suppresses findings on its own line; a pragma on a
+    comment-only line also covers the next line (so long expressions can
+    carry the annotation above them)."""
+
+    def __init__(self, source: str):
+        self.by_line: Dict[int, set] = {}
+        self.skip_file = False
+        for i, text in enumerate(source.splitlines(), start=1):
+            if SKIP_FILE_RE.search(text):
+                self.skip_file = True
+            m = PRAGMA_RE.search(text)
+            if not m:
+                continue
+            rules = {r.strip().upper() for r in m.group(1).split(",")
+                     if r.strip()}
+            self.by_line.setdefault(i, set()).update(rules)
+            if text.lstrip().startswith("#"):      # comment-only line
+                self.by_line.setdefault(i + 1, set()).update(rules)
+
+    def allows(self, line: int, rule: str) -> bool:
+        return self.skip_file or rule in self.by_line.get(line, set())
+
+
+@dataclasses.dataclass(eq=False)   # identity semantics: used in sets
+class FuncInfo:
+    """One (possibly nested) function or method definition."""
+    node: ast.AST                 # FunctionDef | AsyncFunctionDef
+    module: "Module"
+    name: str
+    qualname: str                 # "Class.method" / "outer.inner"
+    class_name: Optional[str]     # immediately enclosing class, if any
+    parent: Optional[str]         # qualname of the enclosing function
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+        return names
+
+    def param_annotation(self, name: str) -> str:
+        a = self.node.args
+        for p in list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs):
+            if p.arg == name and p.annotation is not None:
+                try:
+                    return ast.unparse(p.annotation)
+                except Exception:
+                    return ""
+        return ""
+
+    def called_names(self) -> set:
+        """Bare names of everything this function calls (``f(...)`` -> f,
+        ``obj.m(...)`` -> m), nested defs excluded (indexed separately)."""
+        names = set()
+        for call in iter_calls(self.node, skip_nested=True):
+            n = callee_name(call)
+            if n:
+                names.add(n)
+        return names
+
+
+class Module:
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.pragmas = Pragmas(source)
+        self.functions: List[FuncInfo] = []
+        self._index_functions()
+
+    def _index_functions(self) -> None:
+        def walk(node, class_name, prefix, parent):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = f"{prefix}{child.name}" if prefix else child.name
+                    info = FuncInfo(node=child, module=self, name=child.name,
+                                    qualname=qual, class_name=class_name,
+                                    parent=parent)
+                    self.functions.append(info)
+                    walk(child, None, qual + ".", qual)
+                elif isinstance(child, ast.ClassDef):
+                    walk(child, child.name, child.name + ".", parent)
+                else:
+                    walk(child, class_name, prefix, parent)
+
+        walk(self.tree, None, "", None)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+
+class Project:
+    """All modules under the linted roots + cross-module function index."""
+
+    def __init__(self, modules: Sequence[Module]):
+        self.modules = list(modules)
+        self.by_name: Dict[str, List[FuncInfo]] = {}
+        for m in self.modules:
+            for f in m.functions:
+                self.by_name.setdefault(f.name, []).append(f)
+
+    @classmethod
+    def from_paths(cls, paths: Iterable[str]) -> "Project":
+        modules = []
+        for root in paths:
+            if os.path.isfile(root):
+                files = [root]
+            else:
+                files = []
+                for dirpath, dirnames, filenames in os.walk(root):
+                    dirnames[:] = [d for d in dirnames
+                                   if d not in ("__pycache__", ".git")]
+                    files.extend(os.path.join(dirpath, fn)
+                                 for fn in sorted(filenames)
+                                 if fn.endswith(".py"))
+            for path in files:
+                with open(path, "r", encoding="utf-8") as fh:
+                    src = fh.read()
+                try:
+                    modules.append(Module(path, src))
+                except SyntaxError as e:   # surfaced as a finding by rules
+                    raise SystemExit(f"erlint: cannot parse {path}: {e}")
+        return cls(modules)
+
+    def functions_named(self, name: str) -> List[FuncInfo]:
+        return self.by_name.get(name, [])
+
+    def reachable_from(self, roots: Iterable[FuncInfo]) -> set:
+        """Transitive closure over the bare-name call graph. Conservative:
+        a call to ``f`` reaches EVERY project function named ``f`` —
+        except GENERIC_CALLEES, which are container/array method names
+        that would otherwise alias unrelated definitions."""
+        seen = set()
+        stack = list(roots)
+        while stack:
+            fn = stack.pop()
+            if fn in seen:
+                continue
+            seen.add(fn)
+            for name in fn.called_names() - GENERIC_CALLEES:
+                for callee in self.functions_named(name):
+                    if callee not in seen:
+                        stack.append(callee)
+        return seen
+
+
+# --------------------------------------------------------------- ast utils
+def iter_calls(fn_node: ast.AST, skip_nested: bool = False):
+    """Yield every ast.Call in the function body; with ``skip_nested``,
+    calls inside nested function/class definitions are excluded (they are
+    indexed as their own FuncInfo)."""
+    for node in iter_nodes(fn_node, skip_nested=skip_nested):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+def iter_nodes(fn_node: ast.AST, skip_nested: bool = False):
+    stack = [c for c in ast.iter_child_nodes(fn_node)]
+    while stack:
+        node = stack.pop()
+        if skip_nested and isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef,
+                       ast.Lambda)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def callee_name(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def dotted_name(node: ast.AST) -> str:
+    """'jax.lax.scan' for nested Attribute/Name chains, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def expr_key(node: ast.AST) -> Optional[str]:
+    """Stable identity for a simple storage location: Name, Attribute
+    chain, or Subscript with a literal/simple index. None for anything
+    the donation tracker cannot follow."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = expr_key(node.value)
+        return f"{base}.{node.attr}" if base else None
+    if isinstance(node, ast.Subscript):
+        base = expr_key(node.value)
+        if base is None:
+            return None
+        try:
+            idx = ast.unparse(node.slice)
+        except Exception:
+            return None
+        return f"{base}[{idx}]"
+    return None
+
+
+def key_prefixes(key: str) -> List[str]:
+    """'a.b[c].d' -> ['a', 'a.b', 'a.b[c]', 'a.b[c].d'] — a read of any
+    component of a donated value is a read of the donated buffers."""
+    out = []
+    token = ""
+    depth = 0
+    for ch in key:
+        if ch == "[":
+            depth += 1
+        elif ch == "]":
+            depth -= 1
+        elif ch == "." and depth == 0:
+            out.append(token)
+            token += ch
+            continue
+        token += ch
+    out.append(token)
+    return out
+
+
+# --------------------------------------------------------------- baseline
+def load_baseline(path: str) -> set:
+    if not path or not os.path.exists(path):
+        return set()
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    return set(data.get("findings", []))
+
+
+def save_baseline(path: str, findings: Sequence[Finding]) -> None:
+    data = {
+        "schema": "erlint-baseline/1",
+        "note": ("Grandfathered findings: erlint --check only fails on "
+                 "findings NOT listed here. Regenerate with "
+                 "scripts/erlint.py --update-baseline; keep this empty."),
+        "findings": sorted({f.key() for f in findings}),
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+        fh.write("\n")

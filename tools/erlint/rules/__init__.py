@@ -1,0 +1,37 @@
+"""Rule registry: one module per rule, shared PathSets walker."""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from erlint.core import Finding, Project
+from erlint.walker import PathSets
+from erlint.rules import (er001_use_after_donate, er002_host_sync,
+                          er003_single_launch, er004_sentinel_overflow,
+                          er005_traced_branch, er006_donate_spec)
+
+RULES = {
+    "ER001": er001_use_after_donate.check,
+    "ER002": er002_host_sync.check,
+    "ER003": er003_single_launch.check,
+    "ER004": er004_sentinel_overflow.check,
+    "ER005": er005_traced_branch.check,
+    "ER006": er006_donate_spec.check,
+}
+
+
+def lint_project(project: Project,
+                 rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the selected rules (default: all) over the project; apply the
+    per-file pragma suppressions; return findings sorted by location."""
+    selected = sorted(rules) if rules else sorted(RULES)
+    sets = PathSets(project)
+    pragmas = {mod.path: mod.pragmas for mod in project.modules}
+    findings: List[Finding] = []
+    for rule_id in selected:
+        for f in RULES[rule_id](project, sets):
+            p = pragmas.get(f.path)
+            if p is not None and p.allows(f.line, f.rule):
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings

@@ -1,0 +1,225 @@
+"""ER001 — use-after-donate.
+
+``jit_serve_step`` / ``jit_serve_many`` donate their ``state`` argument
+(position 1) and ``jit_flush`` donates position 0 (core/server.py §jit):
+XLA aliases the multi-GB cache tables into the result instead of copying
+them, and the input buffers are DELETED. The only safe call pattern is
+the move idiom::
+
+    res = srv.jit_serve_step(params, state, ...)
+    state = res.state                   # rebind before ANY further read
+
+Reading the donated value again — even ``state.direct`` for a probe, or
+passing it to the next dispatch — dereferences deleted device buffers.
+On CPU JAX often tolerates it (buffers are host RAM and donation may not
+engage), which is exactly why benchmark loops written on CPU can ship a
+silent GPU/TPU crash; this rule rejects the pattern statically.
+
+Per function we linearize the statements in execution order (loop bodies
+twice, so a donation at the bottom of an iteration catches a read at the
+top of the next) and track donated *storage keys* (``state``,
+``self.states[r]``, …). A read of the key or any component of it before a
+rebind is a finding.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from erlint.core import (Finding, Module, Project, expr_key, key_prefixes)
+from erlint.walker import DONATING_WRAPPERS
+
+RULE = "ER001"
+
+# event kinds in linearized order
+_READ, _WRITE, _DONATE = 0, 1, 2
+
+
+def _call_donated_arg(call: ast.Call) -> Optional[Tuple[str, ast.AST]]:
+    """(wrapper_name, donated_arg_node) if this is a donating-wrapper
+    call with the donated position supplied positionally."""
+    f = call.func
+    name = None
+    if isinstance(f, ast.Attribute):
+        name = f.attr
+    elif isinstance(f, ast.Name):
+        name = f.id
+    if name not in DONATING_WRAPPERS:
+        return None
+    pos = DONATING_WRAPPERS[name]
+    if pos < len(call.args):
+        return name, call.args[pos]
+    for kw in call.keywords:                 # state= keyword spelling
+        if kw.arg == "state":
+            return name, kw.value
+    return None
+
+
+class _EventCollector(ast.NodeVisitor):
+    """Collect (kind, key, node) events for ONE expression, reads before
+    the donation the call performs."""
+
+    def __init__(self):
+        self.events: List[Tuple[int, str, ast.AST]] = []
+
+    def visit_Call(self, node: ast.Call) -> None:
+        donated = _call_donated_arg(node)
+        # argument reads happen before the dispatch consumes them
+        self.generic_visit(node)
+        if donated is not None:
+            _, arg = donated
+            key = expr_key(arg)
+            if key is not None:
+                self.events.append((_DONATE, key, node))
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if isinstance(node.ctx, ast.Load):
+            self.events.append((_READ, node.id, node))
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        key = expr_key(node)
+        if key is not None and isinstance(node.ctx, ast.Load):
+            self.events.append((_READ, key, node))
+            return                     # components covered via prefixes
+        self.generic_visit(node)
+
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        key = expr_key(node)
+        if key is not None and isinstance(node.ctx, ast.Load):
+            self.events.append((_READ, key, node))
+            return
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node):     # nested defs: own analysis
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        pass
+
+
+def _expr_events(node: ast.AST) -> List[Tuple[int, str, ast.AST]]:
+    c = _EventCollector()
+    c.visit(node)
+    return c.events
+
+
+def _target_writes(target: ast.AST) -> List[Tuple[int, str, ast.AST]]:
+    events = []
+    for node in ast.walk(target):
+        if isinstance(node, (ast.Name, ast.Attribute, ast.Subscript)):
+            if isinstance(getattr(node, "ctx", None), ast.Store):
+                key = expr_key(node)
+                if key is not None:
+                    events.append((_WRITE, key, node))
+        # subscript/attribute bases are READ when storing into them, but
+        # a read of state.x as a *store base* does not touch buffers.
+    return events
+
+
+def _stmt_events(stmt: ast.stmt) -> List[Tuple[int, str, ast.AST]]:
+    ev: List[Tuple[int, str, ast.AST]] = []
+    if isinstance(stmt, ast.Assign):
+        ev += _expr_events(stmt.value)
+        for t in stmt.targets:
+            ev += _target_writes(t)
+    elif isinstance(stmt, ast.AugAssign):
+        ev += _expr_events(stmt.value)
+        ev += _expr_events(stmt.target)     # augmented target is a read…
+        ev += _target_writes(stmt.target)   # …then a write
+    elif isinstance(stmt, ast.AnnAssign):
+        if stmt.value is not None:
+            ev += _expr_events(stmt.value)
+        ev += _target_writes(stmt.target)
+    elif isinstance(stmt, ast.Expr):
+        ev += _expr_events(stmt.value)
+    elif isinstance(stmt, ast.Return):
+        if stmt.value is not None:
+            ev += _expr_events(stmt.value)
+    elif isinstance(stmt, ast.If):
+        ev += _expr_events(stmt.test)
+        ev += _block_events(stmt.body)
+        ev += _block_events(stmt.orelse)
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        ev += _expr_events(stmt.iter)
+        body = _block_events(stmt.body) + _block_events(stmt.orelse)
+        ev += _target_writes(stmt.target) + body
+        ev += _target_writes(stmt.target) + body     # second iteration
+    elif isinstance(stmt, ast.While):
+        body = (_expr_events(stmt.test) + _block_events(stmt.body)
+                + _block_events(stmt.orelse))
+        ev += body + body                            # second iteration
+    elif isinstance(stmt, ast.With):
+        for item in stmt.items:
+            ev += _expr_events(item.context_expr)
+            if item.optional_vars is not None:
+                ev += _target_writes(item.optional_vars)
+        ev += _block_events(stmt.body)
+    elif isinstance(stmt, ast.Try):
+        ev += _block_events(stmt.body)
+        for h in stmt.handlers:
+            ev += _block_events(h.body)
+        ev += _block_events(stmt.orelse) + _block_events(stmt.finalbody)
+    elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+        pass                                         # analyzed separately
+    elif isinstance(stmt, (ast.Delete,)):
+        for t in stmt.targets:
+            key = expr_key(t)
+            if key is not None:
+                ev.append((_WRITE, key, t))          # del clears tracking
+    else:
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                ev += _expr_events(child)
+    return ev
+
+
+def _block_events(stmts) -> List[Tuple[int, str, ast.AST]]:
+    ev = []
+    for s in stmts:
+        ev += _stmt_events(s)
+    return ev
+
+
+def _scan_block(stmts, path: str, symbol: str) -> List[Finding]:
+    findings = []
+    donated = {}                       # key -> (wrapper name, line)
+    reported = set()
+    for kind, key, node in _block_events(stmts):
+        if kind == _DONATE:
+            donated[key] = (node.func.attr if isinstance(
+                node.func, ast.Attribute) else "jit", node.lineno)
+        elif kind == _WRITE:
+            # a write to the key or an enclosing object rebinds it
+            donated = {k: v for k, v in donated.items()
+                       if key not in key_prefixes(k)}
+        elif kind == _READ:
+            for pref in key_prefixes(key):
+                if pref in donated:
+                    wrapper, dline = donated[pref]
+                    mark = (node.lineno, pref)
+                    if mark in reported:
+                        continue
+                    reported.add(mark)
+                    findings.append(Finding(
+                        rule=RULE, path=path, line=node.lineno,
+                        col=node.col_offset, symbol=symbol,
+                        message=(f"`{pref}` was donated to {wrapper}() "
+                                 f"(line {dline}) and is read again "
+                                 f"before rebinding — deleted device "
+                                 f"buffers on GPU/TPU"),
+                    ))
+                    break
+    return findings
+
+
+def check(project: Project, sets) -> List[Finding]:
+    findings = []
+    for mod in project.modules:
+        for fn in mod.functions:
+            findings += _scan_block(fn.node.body, mod.path, fn.qualname)
+        # module-level statement sequences (scripts, examples)
+        findings += _scan_block(mod.tree.body, mod.path, "<module>")
+    return findings

@@ -1,0 +1,159 @@
+"""ER002 — host synchronization in the hot path.
+
+The serve path's throughput story (DESIGN.md §9: 2.15x sustained req/s
+from the scan driver) rests on the hot path staying device-resident:
+``serve_step`` / ``serve_many`` / ``flush`` and everything they trace
+must never force a device→host transfer. One ``jax.device_get`` per
+*dispatch* is the sanctioned budget, and it lives in the DRIVER, not the
+traced code.
+
+Two tiers:
+
+* **hot set** (jit-traced serve/flush/scan bodies and their callees):
+  any of ``jax.device_get``, ``.block_until_ready()``, ``np.asarray`` /
+  ``np.array``, ``.item()``, ``float(x)`` / ``int(x)`` on a non-trivial
+  expression, or ``print`` is a finding. There is no sanctioned use; a
+  pragma here should make a reviewer uncomfortable.
+* **drivers** (host loops that call the donating wrappers): staging work
+  (``np.asarray`` on host data, ``int()`` on python scalars) is their
+  job, so two things are policed. The explicit fetch/sync primitives —
+  ``jax.device_get``, ``.block_until_ready()``, ``.item()`` — must each
+  carry ``# erlint: allow[ER002]``, documenting the one sanctioned fetch
+  per dispatch. And ``int()`` / ``float()`` conversions on *device
+  results* of the donating wrappers (``int(res.stats[k])``,
+  ``float(acc[k])``) are findings with no pragma expected: each such
+  conversion is its own blocking transfer, so N stats reads = N syncs
+  per dispatch instead of one batched ``device_get``. Rebinding through
+  ``jax.device_get`` (``acc = jax.device_get(acc)``) marks the local as
+  host data and downstream conversions are free.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from erlint.core import Finding, Project, dotted_name, iter_nodes
+
+RULE = "ER002"
+
+_FETCH_FUNCS = {"device_get", "block_until_ready"}
+_NP_HOST_FUNCS = {"asarray", "array"}
+
+
+def _np_root(name: str) -> bool:
+    return name.split(".", 1)[0] in ("np", "numpy")
+
+
+def _classify(call: ast.Call, tier_a: bool) -> str:
+    """'' if fine, else a short description of the sync."""
+    f = call.func
+    name = dotted_name(f)
+    tail = name.rsplit(".", 1)[-1] if name else ""
+    if tail in _FETCH_FUNCS:
+        return f"{name or tail}() forces a device sync"
+    if isinstance(f, ast.Attribute) and f.attr == "item":
+        return ".item() fetches a scalar from device"
+    if not tier_a:
+        return ""
+    if name and _np_root(name) and tail in _NP_HOST_FUNCS:
+        return f"{name}() materializes a host array"
+    if isinstance(f, ast.Name) and f.id == "print":
+        return "print() in traced code runs at trace time / forces a sync"
+    if isinstance(f, ast.Name) and f.id in ("float", "int", "bool"):
+        # int(flush_every) on a static python scalar is fine; converting
+        # a subscript/attribute/call result is how stats fetches look.
+        if call.args and isinstance(
+                call.args[0], (ast.Subscript, ast.Attribute, ast.Call)):
+            return (f"{f.id}() on an array expression forces a "
+                    f"device fetch")
+    return ""
+
+
+def _assigned_names(target: ast.AST) -> List[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        return [e.id for e in target.elts if isinstance(e, ast.Name)]
+    return []
+
+
+def _is_device_get(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and dotted_name(node.func).rsplit(".", 1)[-1] == "device_get")
+
+
+def _driver_conversion_findings(fn, mod, wrapper_names) -> List[Finding]:
+    """Flag int()/float() on device results of the donating wrappers.
+
+    Line-order scan: locals bound (possibly tuple-unpacked) from a
+    donating-wrapper call become device-tainted; rebinding a name from
+    ``jax.device_get(...)`` makes it host again. A conversion whose
+    argument reads a tainted name is one blocking transfer per call —
+    the exact antipattern the batched-fetch contract exists to prevent.
+    """
+    events = []                           # (lineno, kind, payload)
+    for node in iter_nodes(fn.node, skip_nested=True):
+        if isinstance(node, ast.Assign):
+            v = node.value
+            if (isinstance(v, ast.Call)
+                    and dotted_name(v.func).rsplit(".", 1)[-1]
+                    in wrapper_names):
+                for t in node.targets:
+                    events.append((node.lineno, "taint",
+                                   _assigned_names(t)))
+            elif _is_device_get(v):
+                for t in node.targets:
+                    events.append((node.lineno, "host",
+                                   _assigned_names(t)))
+        elif (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int") and node.args):
+            reads = {n.id for n in ast.walk(node.args[0])
+                     if isinstance(n, ast.Name)
+                     and isinstance(n.ctx, ast.Load)}
+            events.append((node.lineno, "convert",
+                           (node, node.func.id, reads)))
+    events.sort(key=lambda e: e[0])
+
+    device: Set[str] = set()
+    findings = []
+    for _, kind, payload in events:
+        if kind == "taint":
+            device.update(payload)
+        elif kind == "host":
+            device.difference_update(payload)
+        else:
+            node, conv, reads = payload
+            hit = sorted(reads & device)
+            if hit:
+                findings.append(Finding(
+                    rule=RULE, path=mod.path, line=node.lineno,
+                    col=node.col_offset, symbol=fn.qualname,
+                    message=(f"{conv}() on device result `{hit[0]}` is a "
+                             f"blocking per-value transfer in dispatch "
+                             f"driver `{fn.qualname}` — batch with ONE "
+                             f"jax.device_get per dispatch")))
+    return findings
+
+
+def check(project: Project, sets) -> List[Finding]:
+    from erlint.walker import DONATING_WRAPPERS
+    findings = []
+    for mod in project.modules:
+        for fn in mod.functions:
+            tier_a = sets.is_hot(fn)
+            if not tier_a and not sets.is_driver(fn):
+                continue
+            where = "hot path" if tier_a else "dispatch driver"
+            for node in iter_nodes(fn.node, skip_nested=True):
+                if not isinstance(node, ast.Call):
+                    continue
+                msg = _classify(node, tier_a)
+                if msg:
+                    findings.append(Finding(
+                        rule=RULE, path=mod.path, line=node.lineno,
+                        col=node.col_offset, symbol=fn.qualname,
+                        message=f"{msg} in {where} `{fn.qualname}`"))
+            if not tier_a:
+                findings.extend(_driver_conversion_findings(
+                    fn, mod, set(DONATING_WRAPPERS)))
+    return findings

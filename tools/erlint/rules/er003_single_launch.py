@@ -1,0 +1,183 @@
+"""ER003 — single-launch drift in the probe kernels.
+
+PRs 1/2/5 hold a hard perf contract: each serve probe entry point in
+``kernels/cache_probe.py`` issues exactly ONE ``pl.pallas_call`` — the
+fused dual probe exists precisely so ``serve_step`` never pays a second
+full-batch dispatch. The runtime side is the ``LAUNCHES`` counter dict
+that contract tests assert on; the static side is this rule, and
+``LAUNCH_CONTRACT`` (entry wrapper -> LAUNCHES key) is the shared source
+of truth.
+
+Checks, per module that defines ``LAUNCHES``:
+
+1. ``LAUNCH_CONTRACT`` exists and its VALUES are exactly the keys of the
+   ``LAUNCHES`` dict literal (no orphan counters, no unregistered
+   kernels).
+2. Every contract entry names a real module-level function that
+   increments ``LAUNCHES[<its key>]`` exactly once — and no other
+   function increments that key.
+3. From each entry point, the intra-module call graph reaches exactly
+   ONE ``pl.pallas_call`` site (multi-launch drift) and at least one
+   (dead counter).
+4. Every ``pl.pallas_call`` site in the module is reachable from some
+   entry point (no unaccounted launches).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from erlint.core import Finding, Module, Project, dotted_name
+
+RULE = "ER003"
+
+
+def _dict_literal_keys(node: ast.AST) -> Optional[List[str]]:
+    if isinstance(node, ast.Dict) and all(
+            isinstance(k, ast.Constant) and isinstance(k.value, str)
+            for k in node.keys):
+        return [k.value for k in node.keys]
+    return None
+
+
+def _assigned_dict(mod: Module, name: str):
+    """(keys, lineno) of the module-level ``name = {...}`` literal."""
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    return _dict_literal_keys(node.value), node.lineno
+    return None, 0
+
+
+def _assigned_str_dict(mod: Module, name: str) -> Optional[Dict[str, str]]:
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    v = node.value
+                    if isinstance(v, ast.Dict) and all(
+                            isinstance(k, ast.Constant) for k in v.keys
+                    ) and all(isinstance(x, ast.Constant)
+                              for x in v.values):
+                        return {k.value: x.value
+                                for k, x in zip(v.keys, v.values)}
+    return None
+
+
+def _launch_increments(fn_node: ast.AST) -> List[str]:
+    """LAUNCHES["key"] += 1 keys incremented inside this function."""
+    keys = []
+    for node in ast.walk(fn_node):
+        if (isinstance(node, ast.AugAssign)
+                and isinstance(node.op, ast.Add)
+                and isinstance(node.target, ast.Subscript)
+                and isinstance(node.target.value, ast.Name)
+                and node.target.value.id == "LAUNCHES"
+                and isinstance(node.target.slice, ast.Constant)):
+            keys.append(node.target.slice.value)
+    return keys
+
+
+def _pallas_call_lines(fn_node: ast.AST) -> List[int]:
+    lines = []
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name.endswith("pallas_call"):
+                lines.append(node.lineno)
+    return lines
+
+
+def _reachable_pallas_sites(mod: Module, entry_name: str) -> Set[int]:
+    """pallas_call line numbers reachable from entry via the module's own
+    call graph (bare-name edges, module-local resolution)."""
+    by_name = {}
+    for fn in mod.functions:
+        by_name.setdefault(fn.name, []).append(fn)
+    seen_fns: Set[str] = set()
+    sites: Set[int] = set()
+    stack = [entry_name]
+    while stack:
+        name = stack.pop()
+        if name in seen_fns:
+            continue
+        seen_fns.add(name)
+        for fn in by_name.get(name, []):
+            sites.update(_pallas_call_lines(fn.node))
+            for node in ast.walk(fn.node):
+                if isinstance(node, ast.Call):
+                    callee = dotted_name(node.func).rsplit(".", 1)[-1]
+                    if callee and callee in by_name:
+                        stack.append(callee)
+                # kernel factories return the kernel as a value, so also
+                # chase plain function references (``_make_dual_kernel``
+                # used as an argument / returned closure)
+                if isinstance(node, ast.Name) and node.id in by_name:
+                    stack.append(node.id)
+    return sites
+
+
+def check(project: Project, sets) -> List[Finding]:
+    findings = []
+    for mod in project.modules:
+        launches, launches_line = _assigned_dict(mod, "LAUNCHES")
+        if launches is None:
+            continue
+
+        def flag(line, msg):
+            findings.append(Finding(rule=RULE, path=mod.path, line=line,
+                                    col=0, symbol="<module>", message=msg))
+
+        contract = _assigned_str_dict(mod, "LAUNCH_CONTRACT")
+        if contract is None:
+            flag(launches_line,
+                 "module defines LAUNCHES but no LAUNCH_CONTRACT "
+                 "(entry wrapper -> LAUNCHES key) registry")
+            continue
+        if sorted(contract.values()) != sorted(launches):
+            flag(launches_line,
+                 f"LAUNCH_CONTRACT values {sorted(contract.values())} "
+                 f"!= LAUNCHES keys {sorted(launches)}")
+
+        incremented_by: Dict[str, List[str]] = {}
+        for fn in mod.functions:
+            for key in _launch_increments(fn.node):
+                incremented_by.setdefault(key, []).append(fn.name)
+
+        for entry, key in contract.items():
+            entry_fns = [fn for fn in mod.functions
+                         if fn.name == entry and fn.parent is None]
+            if not entry_fns:
+                flag(1, f"LAUNCH_CONTRACT entry `{entry}` is not a "
+                        f"module-level function")
+                continue
+            fn = entry_fns[0]
+            incs = _launch_increments(fn.node)
+            if incs != [key]:
+                flag(fn.node.lineno,
+                     f"`{entry}` must increment LAUNCHES[{key!r}] exactly "
+                     f"once (found {incs})")
+            others = [n for n in incremented_by.get(key, [])
+                      if n != entry]
+            if others:
+                flag(fn.node.lineno,
+                     f"LAUNCHES[{key!r}] also incremented outside its "
+                     f"contract entry: {others}")
+            sites = _reachable_pallas_sites(mod, entry)
+            if len(sites) != 1:
+                flag(fn.node.lineno,
+                     f"`{entry}` reaches {len(sites)} pl.pallas_call "
+                     f"site(s) (lines {sorted(sites)}); the single-launch "
+                     f"contract requires exactly 1")
+
+        accounted: Set[int] = set()
+        for entry in contract:
+            accounted |= _reachable_pallas_sites(mod, entry)
+        for fn in mod.functions:
+            for line in _pallas_call_lines(fn.node):
+                if line not in accounted:
+                    flag(line, f"pl.pallas_call at line {line} is not "
+                               f"reachable from any LAUNCH_CONTRACT entry "
+                               f"point — unaccounted kernel launch")
+    return findings

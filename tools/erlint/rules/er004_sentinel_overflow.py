@@ -1,0 +1,93 @@
+"""ER004 — int32 arithmetic against the TS_EMPTY sentinel planes.
+
+Empty cache slots hold ``write_ts == TS_EMPTY == int32 min`` (and the
+recency plane ``last_access_ts`` starts there too). Any int32 ``now - ts``
+over a plane that can contain the sentinel overflows: ``now - int32min``
+wraps NEGATIVE, which made restored entries look fresh forever — the
+class of bug PR 6 fixed in ``ft/elastic.py`` by widening to int64 before
+the age compare.
+
+The rule flags ``+``/``-`` arithmetic where an operand mentions a
+sentinel-bearing plane (``TS_EMPTY`` itself, ``write_ts`` /
+``last_access_ts`` attributes or locals, or the probe-metadata locals
+``ts`` / ``ts_d`` / ``ts_f`` / ``wts``) and the enclosing statement shows
+no int64 widen. Sites where the wrapped lanes are provably masked out
+afterwards (the probe's ``match``/``empty`` guards) are sanctioned with
+an explicit ``# erlint: allow[ER004]`` pragma — the point of the rule is
+that overflow-tolerance must be VISIBLE, not accidental.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from erlint.core import Finding, Project, iter_nodes
+
+RULE = "ER004"
+
+# exact local names that conventionally hold probe metadata ts lanes
+_TS_LOCALS = {"ts", "ts_d", "ts_f", "wts"}
+# attribute / name basenames that ARE the sentinel planes
+_TS_PLANES = {"write_ts", "last_access_ts", "TS_EMPTY"}
+_WIDEN_MARKERS = ("int64", "float64")
+
+
+def _mentions_plane(node: ast.AST) -> str:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _TS_PLANES:
+            return sub.attr
+        if isinstance(sub, ast.Name):
+            if sub.id in _TS_PLANES:
+                return sub.id
+            if sub.id in _TS_LOCALS:
+                return sub.id
+    return ""
+
+
+def _has_widen(node: ast.AST) -> bool:
+    try:
+        text = ast.unparse(node)
+    except Exception:
+        return False
+    return any(m in text for m in _WIDEN_MARKERS)
+
+
+def check(project: Project, sets) -> List[Finding]:
+    findings = []
+    for mod in project.modules:
+        # one pass per function AND module level; statement-level widen
+        # detection needs the largest enclosing expression, so walk the
+        # tree once and inspect BinOps with their own subtree.
+        reported = set()
+        for fn_like in [None] + list(mod.functions):
+            nodes = (iter_nodes(fn_like.node, skip_nested=True)
+                     if fn_like is not None else
+                     (n for s in mod.tree.body
+                      if not isinstance(s, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef,
+                                            ast.ClassDef))
+                      for n in ast.walk(s)))
+            symbol = fn_like.qualname if fn_like is not None else "<module>"
+            for node in nodes:
+                if not isinstance(node, ast.BinOp):
+                    continue
+                if not isinstance(node.op, (ast.Add, ast.Sub)):
+                    continue
+                plane = (_mentions_plane(node.left)
+                         or _mentions_plane(node.right))
+                if not plane:
+                    continue
+                if _has_widen(node):
+                    continue
+                mark = (node.lineno, node.col_offset)
+                if mark in reported:
+                    continue
+                reported.add(mark)
+                op = "+" if isinstance(node.op, ast.Add) else "-"
+                findings.append(Finding(
+                    rule=RULE, path=mod.path, line=node.lineno,
+                    col=node.col_offset, symbol=symbol,
+                    message=(f"int32 `{op}` arithmetic on sentinel-bearing "
+                             f"plane `{plane}` without an int64 widen — "
+                             f"now-TS_EMPTY wraps negative (PR 6 class)")))
+    return findings

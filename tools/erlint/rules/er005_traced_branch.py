@@ -1,0 +1,133 @@
+"""ER005 — Python control flow on traced values.
+
+Inside jit-reachable functions, ``if``/``while`` on a traced array is a
+``TracerBoolConversionError`` at best and — when the value happens to be
+concrete at trace time (e.g. behind a ``static_argnames`` mix-up) — a
+silently specialized trace at worst: the branch is burned into the
+compiled program and the single-dispatch contract quietly stops meaning
+what it says. Structured control flow belongs to ``jnp.where`` /
+``lax.cond`` / ``lax.scan``.
+
+Detection is local-dataflow based to stay false-positive-free on the
+repo's pervasive *static* branching (``if cfg.coalesce_misses``,
+``if failure_mask is None``, ``if flush_every == 1`` — all fine):
+
+* a local is **traced-tainted** when assigned from a ``jnp.*`` /
+  ``jax.nn.*`` / ``jax.lax.*`` call or from an expression reading an
+  already-tainted local;
+* an ``if``/``while`` test is flagged when it reads a tainted local or
+  calls ``jnp.*`` directly — unless the test is an ``is``/``is not``
+  comparison (None checks never inspect array values);
+* reads under a **static-metadata attribute** (``x.shape[0]``,
+  ``jnp.asarray(t).ndim``, ``.dtype``, ``.size``) neither propagate
+  taint nor count as traced in a test: shape/dtype queries on tracers
+  are concrete Python values at trace time, and the kernel wrappers
+  branch on them constantly (``pad = (-B) % tq; if pad:``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set, Tuple
+
+from erlint.core import Finding, Project, dotted_name
+
+RULE = "ER005"
+
+_TRACED_ROOTS = ("jnp", "lax")
+_TRACED_DOTTED = ("jax.numpy", "jax.lax", "jax.nn", "jax.random")
+# attribute accesses that yield concrete (trace-time-static) Python values
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "weak_type", "sharding"}
+# jnp functions that return static metadata, not tracers
+_STATIC_FUNCS = {"ndim", "shape", "size", "result_type", "issubdtype"}
+
+
+def _is_traced_call(node: ast.Call) -> bool:
+    name = dotted_name(node.func)
+    if not name:
+        return False
+    if name.rsplit(".", 1)[-1] in _STATIC_FUNCS:
+        return False
+    root = name.split(".", 1)[0]
+    if root in _TRACED_ROOTS:
+        return True
+    return any(name.startswith(p + ".") for p in _TRACED_DOTTED)
+
+
+def _traced_reads(node: ast.AST) -> Tuple[Set[str], bool]:
+    """(names read, traced-call present) in ``node``, skipping any
+    subtree rooted at a static-metadata attribute access."""
+    names: Set[str] = set()
+    has_call = False
+
+    def visit(n: ast.AST) -> None:
+        nonlocal has_call
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            return
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+            names.add(n.id)
+        if isinstance(n, ast.Call) and _is_traced_call(n):
+            has_call = True
+        for child in ast.iter_child_nodes(n):
+            visit(child)
+
+    visit(node)
+    return names, has_call
+
+
+def _tainted_locals(fn_node: ast.AST) -> Set[str]:
+    """Fixed point over simple assignments: names fed (directly or
+    transitively) by jnp/lax calls."""
+    tainted: Set[str] = set()
+    assigns = []
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Assign):
+            names = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if names:
+                assigns.append((names, node.value))
+    changed = True
+    while changed:
+        changed = False
+        for names, value in assigns:
+            if all(n in tainted for n in names):
+                continue
+            reads, direct = _traced_reads(value)
+            via = bool(reads & tainted)
+            if direct or via:
+                for n in names:
+                    if n not in tainted:
+                        tainted.add(n)
+                        changed = True
+    return tainted
+
+
+def _is_identity_test(test: ast.AST) -> bool:
+    return isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+
+
+def check(project: Project, sets) -> List[Finding]:
+    findings = []
+    for mod in project.modules:
+        for fn in mod.functions:
+            if not sets.is_hot(fn):
+                continue
+            tainted = _tainted_locals(fn.node)
+            for node in ast.walk(fn.node):
+                if not isinstance(node, (ast.If, ast.While)):
+                    continue
+                test = node.test
+                if _is_identity_test(test):
+                    continue
+                reads, direct = _traced_reads(test)
+                via = reads & tainted
+                if direct or via:
+                    kind = "while" if isinstance(node, ast.While) else "if"
+                    what = (f"traced value{'s' if len(via) > 1 else ''} "
+                            f"{sorted(via)}" if via else "a jnp expression")
+                    findings.append(Finding(
+                        rule=RULE, path=mod.path, line=node.lineno,
+                        col=node.col_offset, symbol=fn.qualname,
+                        message=(f"Python `{kind}` on {what} in "
+                                 f"jit-reachable `{fn.qualname}` — use "
+                                 f"jnp.where/lax.cond")))
+    return findings

@@ -1,0 +1,130 @@
+"""ER006 — donate-spec drift.
+
+``donate_argnums`` is positional: it silently stops donating (or worse,
+donates the wrong buffer) when someone inserts a parameter into
+``serve_step``/``flush``/a train step without updating the jit wrapper.
+Nothing fails — the serve loop just starts COPYING the multi-GB cache
+tables every dispatch, which is a pure perf regression no test catches.
+
+For every ``jax.jit``/``pjit`` call with a literal ``donate_argnums``
+whose wrapped callable resolves statically (a module function, or
+``self.X`` -> method ``X`` on the enclosing class), each donated index
+must land on a parameter that is plausibly a mutable state pytree:
+named ``state``/``cache``/``*_state``/``carry``, or annotated with a
+``*State``/``*Cache``/``*Buffer`` type. Indexing is checked after
+dropping ``self``, mirroring how bound methods are traced.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from erlint.core import Finding, FuncInfo, Project, dotted_name
+
+RULE = "ER006"
+
+_JIT_TAILS = {"jit", "pjit"}
+_STATEY_SUFFIXES = ("state", "cache", "carry", "buf", "buffer")
+_STATEY_ANNOT = ("State", "Cache", "Buffer", "Carry")
+
+
+def _literal_indices(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)) and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, int)
+            for e in node.elts):
+        return tuple(e.value for e in node.elts)
+    return None
+
+
+def _resolve_target(call: ast.Call, mod, enclosing: Optional[FuncInfo]
+                    ) -> Optional[FuncInfo]:
+    if not call.args:
+        return None
+    target = call.args[0]
+    name = None
+    if isinstance(target, ast.Name):
+        name = target.id
+    elif (isinstance(target, ast.Attribute)
+          and isinstance(target.value, ast.Name)
+          and target.value.id == "self"):
+        name = target.attr
+    if name is None:
+        return None
+    cls = enclosing.class_name if enclosing is not None else None
+    # prefer a method on the same class, else any module-level function
+    same_class = [f for f in mod.functions
+                  if f.name == name and f.class_name == cls]
+    if same_class:
+        return same_class[0]
+    module_level = [f for f in mod.functions
+                    if f.name == name and f.class_name is None]
+    return module_level[0] if module_level else None
+
+
+def _is_statey(fn: FuncInfo, pname: str) -> bool:
+    low = pname.lower()
+    if low == "state" or low.endswith(_STATEY_SUFFIXES):
+        return True
+    ann = fn.param_annotation(pname)
+    return any(marker in ann for marker in _STATEY_ANNOT)
+
+
+def _enclosing_function(mod, call: ast.Call) -> Optional[FuncInfo]:
+    best = None
+    for fn in mod.functions:
+        node = fn.node
+        if (node.lineno <= call.lineno
+                and call.lineno <= max(getattr(node, "end_lineno",
+                                               node.lineno), node.lineno)):
+            if best is None or node.lineno > best.node.lineno:
+                best = fn
+    return best
+
+
+def check(project: Project, sets) -> List[Finding]:
+    findings = []
+    for mod in project.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            tail = dotted_name(node.func).rsplit(".", 1)[-1]
+            if tail not in _JIT_TAILS:
+                continue
+            donate = None
+            for kw in node.keywords:
+                if kw.arg in ("donate_argnums", "donate_argnames"):
+                    donate = kw
+            if donate is None or donate.arg == "donate_argnames":
+                continue                     # names cannot drift
+            idxs = _literal_indices(donate.value)
+            if idxs is None:
+                continue                     # dynamic spec: not checkable
+            enclosing = _enclosing_function(mod, node)
+            target = _resolve_target(node, mod, enclosing)
+            if target is None:
+                continue                     # unresolvable callable
+            params = target.params
+            if params and params[0] == "self":
+                params = params[1:]
+            symbol = enclosing.qualname if enclosing else "<module>"
+            for i in idxs:
+                if i >= len(params):
+                    findings.append(Finding(
+                        rule=RULE, path=mod.path, line=node.lineno,
+                        col=node.col_offset, symbol=symbol,
+                        message=(f"donate_argnums={idxs} donates position "
+                                 f"{i} but `{target.name}` has only "
+                                 f"{len(params)} positional params")))
+                    continue
+                pname = params[i]
+                if not _is_statey(target, pname):
+                    findings.append(Finding(
+                        rule=RULE, path=mod.path, line=node.lineno,
+                        col=node.col_offset, symbol=symbol,
+                        message=(f"donate_argnums donates `{target.name}` "
+                                 f"position {i} (`{pname}`) which does "
+                                 f"not look like a state pytree — "
+                                 f"donate-spec drift?")))
+    return findings

@@ -1,0 +1,119 @@
+"""Shared jit-reachability and hot-path call-graph walker.
+
+Three function sets drive the rules (DESIGN.md §12):
+
+* **jit roots** — functions literally handed to ``jax.jit`` / ``pjit``
+  (``jax.jit(self.serve_step, ...)`` -> ``serve_step``) or used as a
+  ``lax.scan`` / ``lax.cond`` / ``shard_map`` body.
+* **hot set** — the device-resident serve path: the jit roots, the
+  canonical serve/flush/scan-driver names, every function transitively
+  callable from them (conservative bare-name resolution), and every
+  function NESTED inside one of those (scan bodies). ER002 tier A and
+  ER005 police this set.
+* **drivers** — host-side dispatch loops: any function whose body calls a
+  donating wrapper (``jit_serve_step`` / ``jit_serve_many`` /
+  ``jit_flush``). They are allowed staging work, but each device fetch
+  (``jax.device_get`` / ``block_until_ready`` / ``.item()``) must carry an
+  explicit ``# erlint: allow[ER002]`` pragma — the "one sanctioned fetch
+  per dispatch" contract from DESIGN.md §9.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Set
+
+from erlint.core import (FuncInfo, Project, callee_name, dotted_name,
+                         iter_calls)
+
+# The donating jit wrappers and the positional index they donate
+# (``self`` excluded — these are bound-method call sites).
+DONATING_WRAPPERS = {
+    "jit_serve_step": 1,   # (params, state, ...)
+    "jit_serve_many": 1,   # (params, state, ...)
+    "jit_flush": 0,        # (state, now_ms)
+}
+
+# Canonical serve-path function names (DESIGN.md §2/§9): these are hot
+# even where the jit wrapping happens in another module.
+HOT_ROOT_RE = re.compile(
+    r"^(serve_step|serve_many|flush|flush_dual|flush_dual_multi"
+    r"|_serve_tail|_serve_many_scan)$")
+
+# Callables whose first/early args are traced function bodies.
+_BODY_TAKERS = {"scan", "cond", "while_loop", "fori_loop", "shard_map",
+                "switch", "checkpoint", "remat", "vmap", "pmap"}
+_JIT_NAMES = {"jit", "pjit"}
+
+
+def _referenced_function_names(call: ast.Call) -> Set[str]:
+    """Bare function names appearing as direct arguments of ``call``."""
+    names = set()
+    for arg in list(call.args) + [kw.value for kw in call.keywords]:
+        if isinstance(arg, ast.Name):
+            names.add(arg.id)
+        elif isinstance(arg, ast.Attribute):
+            names.add(arg.attr)
+    return names
+
+
+def jit_root_names(project: Project) -> Set[str]:
+    """Names of functions wrapped by jax.jit/pjit or passed as a
+    scan/cond/shard_map body anywhere in the project."""
+    roots: Set[str] = set()
+    for mod in project.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted_name(node.func)
+            tail = fname.rsplit(".", 1)[-1] if fname else ""
+            if tail in _JIT_NAMES or tail in _BODY_TAKERS:
+                roots |= _referenced_function_names(node)
+    return roots
+
+
+class PathSets:
+    """The computed hot / driver partition for a Project."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        root_names = jit_root_names(project)
+        roots = []
+        for mod in project.modules:
+            for fn in mod.functions:
+                if fn.name in root_names or HOT_ROOT_RE.match(fn.name):
+                    roots.append(fn)
+        hot = project.reachable_from(roots)
+        # nested defs (scan bodies, flush closures) inherit hot status
+        grew = True
+        while grew:
+            grew = False
+            for mod in project.modules:
+                for fn in mod.functions:
+                    if fn in hot or fn.parent is None:
+                        continue
+                    parents = [p for p in mod.functions
+                               if p.qualname == fn.parent]
+                    if any(p in hot for p in parents):
+                        hot |= project.reachable_from([fn])
+                        grew = True
+        self.hot: Set[FuncInfo] = hot
+
+        drivers = set()
+        for mod in project.modules:
+            for fn in mod.functions:
+                for call in iter_calls(fn.node, skip_nested=True):
+                    if callee_name(call) in DONATING_WRAPPERS:
+                        drivers.add(fn)
+                        break
+        # a driver is host-side BY DEFINITION (it owns the dispatch
+        # boundary); remove drivers from the hot set so tier-A rules do
+        # not police their staging work.
+        self.drivers: Set[FuncInfo] = drivers
+        self.hot -= drivers
+
+    def is_hot(self, fn: FuncInfo) -> bool:
+        return fn in self.hot
+
+    def is_driver(self, fn: FuncInfo) -> bool:
+        return fn in self.drivers
