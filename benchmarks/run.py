@@ -37,11 +37,12 @@ BENCHES = [
     ("stream", "benchmarks.bench_stream"),
     ("restart", "benchmarks.bench_restart"),
     ("shard", "benchmarks.bench_shard"),
+    ("regions", "benchmarks.bench_regions"),
 ]
 
 # the fast, serve-path-focused subset run by CI (--quick with no --only)
 QUICK_BENCHES = ("kernel_probe", "serve_path", "multi_model", "eviction",
-                 "overload", "stream", "restart", "shard")
+                 "overload", "stream", "restart", "shard", "regions")
 
 
 def main() -> None:

@@ -1,0 +1,309 @@
+"""Regional serving ON DEVICE — the drain test at paper scale (§3.6–3.7).
+
+The host-side simulator in core/regions.py routes one event at a time
+through a python loop; fine for Fig. 10 shapes, hopeless for paper-scale
+traffic. This module lifts the whole regional layer onto the device by
+playing the PR 2 stacking trick one level up: R regions become a leading
+axis over the multi-model cache tier. Concretely, :class:`RegionalServer`
+replicates the M-model registry R times and fronts ONE
+``MultiModelServer`` over the R*M combined slots — a request routed to
+region ``r`` for model ``m`` serves combined slot ``r*M + m``, so every
+probe/insert/flush/counter mechanism (and the locked per-slab parity it
+comes with) is inherited rather than reimplemented.
+
+Sticky routing is device-resident:
+
+* the **home-region table** is an int32 plane of shape (n_users,)
+  (−1 = unassigned) carried in :class:`RegionalState` and updated by a
+  scatter each step — users re-home **lazily** (only when routed while
+  their home is drained) and **permanently** (the scatter persists);
+* the **drain mask** / **drain epoch** / **event base** are staged
+  host-side per chunk as (S, R) / (S,) / (S,) scan inputs
+  (:func:`stage_drain_schedule`), so a drain + flash-crowd + diurnal mix
+  replays through chunked ``serve_many`` dispatches with no per-step
+  host sync;
+* all routing randomness is **deterministic counter-keyed hashing**
+  (``hashing.hash_u32`` with hi=counter, lo=uid — the same uint32
+  avalanche the host router's "hash" sampler computes), which is what
+  makes the numpy ``RegionRouter`` a bit-exact oracle
+  (tests/test_region_parity.py): re-homes are keyed by the drain epoch
+  so duplicate uids within one batch agree without a sequential pass,
+  excursions by the global event index so repeats of a user still
+  excurse independently.
+
+The cross-region excursion target EXCLUDES the home region by rank-skip
+over the sorted live set — matching the fixed host router.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import server as server_lib
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64, hash_u32
+from repro.core.regions import (AllRegionsDrainedError, EXC_SALT, HOME_SALT,
+                                TGT_SALT, excursion_threshold)
+
+
+def _salted(seed: int, salt: int) -> int:
+    return (seed + salt) & 0xFFFFFFFF
+
+
+class RegionalState(NamedTuple):
+    home: jnp.ndarray                   # (n_users,) int32; -1 = unassigned
+    inner: server_lib.MultiServerState  # stacked (R*M)-slot tier
+
+
+def route_batch(home, uids, drained, epoch, event_base, *,
+                locality: float, seed: int):
+    """One step of on-device sticky routing (pure jnp, scan-body safe).
+
+    ``home`` (U,) int32 table, ``uids`` (B,) int32, ``drained`` (R,)
+    bool, ``epoch``/``event_base`` int32 scalars (staged). Returns
+    ``(regions (B,), new_home (U,), rehomed, excursions)``. The caller
+    guarantees at least one live region (stage_drain_schedule raises
+    otherwise); with every region drained the gather below is undefined.
+    """
+    uids = jnp.asarray(uids, jnp.int32)
+    R = drained.shape[0]
+    B = uids.shape[0]
+    region_iota = jnp.arange(R, dtype=jnp.int32)
+    # live regions ascending, drained pushed past the end via sentinel R
+    live_sorted = jnp.sort(jnp.where(drained, jnp.int32(R), region_iota))
+    n_live = jnp.sum(~drained).astype(jnp.uint32)
+
+    # lazy re-home: assign/refresh only the rows whose home is unassigned
+    # or currently drained; keyed by (uid, drain epoch) so duplicates of
+    # a user inside one batch pick the same fresh home the sequential
+    # oracle picks, and the choice is stable until the NEXT drain event.
+    cur = home[uids]
+    invalid = (cur < 0) | drained[jnp.clip(cur, 0, R - 1)]
+    aux = jnp.broadcast_to(jnp.asarray(epoch, jnp.int32), (B,))
+    h = hash_u32(Key64(hi=aux, lo=uids), _salted(seed, HOME_SALT))
+    fresh = live_sorted[(h % n_live).astype(jnp.int32)]
+    homes = jnp.where(invalid, fresh, cur)
+    new_home = home.at[uids].set(homes)
+    rehomed = jnp.sum(invalid.astype(jnp.int32))
+
+    if locality >= 1.0:
+        return homes, new_home, rehomed, jnp.int32(0)
+
+    # cross-region excursion: coin and target keyed by the global event
+    # index; the target rank-skips the home's position among the live
+    # regions, so an excursion never lands on the region already serving
+    # the user (and degenerates to home when it is the only live one).
+    ev = jnp.asarray(event_base, jnp.int32) + jnp.arange(B, dtype=jnp.int32)
+    u = hash_u32(Key64(hi=ev, lo=uids), _salted(seed, EXC_SALT))
+    n_others = n_live.astype(jnp.int32) - 1
+    exc = (u >= jnp.uint32(excursion_threshold(locality))) & (n_others > 0)
+    j = (hash_u32(Key64(hi=ev, lo=uids), _salted(seed, TGT_SALT))
+         % jnp.maximum(n_others, 1).astype(jnp.uint32)).astype(jnp.int32)
+    hrank = jnp.searchsorted(live_sorted, homes).astype(jnp.int32)
+    j = j + (j >= hrank).astype(jnp.int32)
+    regions = jnp.where(exc, live_sorted[j], homes)
+    return regions, new_home, rehomed, jnp.sum(exc.astype(jnp.int32))
+
+
+def stage_drain_schedule(n_steps: int, n_regions: int,
+                         events: Sequence[Tuple[int, str, int]] = ()
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Host-side staging of a drain/undrain schedule into scan inputs.
+
+    ``events`` is a sequence of ``(step, op, region)`` with op in
+    {"drain", "undrain"}, applied BEFORE serving that step (the oracle
+    replay calls ``router.drain/undrain`` at the same boundaries). Each
+    event bumps the drain epoch, mirroring the host router's counter.
+    Returns ``(drained (S, R) bool, epoch (S,) int32)`` device arrays;
+    raises :class:`AllRegionsDrainedError` if any step would have no
+    live region — loudly at staging time, not as garbage indices mid-scan.
+    """
+    by_step: dict = {}
+    for step, op, region in events:
+        if not 0 <= int(step) < n_steps:
+            raise ValueError(f"event step {step} outside [0, {n_steps})")
+        if not 0 <= int(region) < n_regions:
+            raise ValueError(f"event region {region} outside "
+                             f"[0, {n_regions})")
+        by_step.setdefault(int(step), []).append((op, int(region)))
+    drained = np.zeros((n_steps, n_regions), bool)
+    epoch = np.zeros((n_steps,), np.int32)
+    cur = np.zeros((n_regions,), bool)
+    ep = 0
+    for s in range(n_steps):
+        for op, r in by_step.get(s, ()):
+            if op == "drain":
+                cur[r] = True
+            elif op == "undrain":
+                cur[r] = False
+            else:
+                raise ValueError(f"unknown drain op {op!r}")
+            ep += 1
+        if cur.all():
+            raise AllRegionsDrainedError(
+                f"step {s}: all {n_regions} regions drained")
+        drained[s] = cur
+        epoch[s] = ep
+    return jnp.asarray(drained), jnp.asarray(epoch)
+
+
+def event_bases(start_event: int, n_steps: int, batch: int) -> jnp.ndarray:
+    """(S,) int32 global-event-index bases (step s covers events
+    ``base[s] .. base[s]+B-1``). Wraps at 2^32 — the routing hash only
+    consumes the low 32 bits, and the host oracle masks the same way."""
+    e = (int(start_event)
+         + np.arange(n_steps, dtype=np.int64) * int(batch)) & 0xFFFFFFFF
+    return jnp.asarray(e.astype(np.uint32).view(np.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionalServer:
+    """R regions over the M-model tier as ONE stacked (R*M)-slot server.
+
+    ``cfgs`` is the per-model registry (M entries); it is replicated R
+    times region-major, so region ``r`` / model ``m`` lives at combined
+    slot ``r*M + m`` and per-region counters are the inherited (R*M,)
+    per-model counters reshaped to (R, M) (:meth:`per_region`).
+    ``n_users`` sizes the device-resident home table; uids must be
+    int32-range and < n_users.
+    """
+
+    cfgs: Tuple[CacheConfig, ...]
+    n_regions: int
+    n_users: int
+    tower_fn: Callable
+    miss_budget: int
+    locality: float = 0.98
+    seed: int = 0
+    fallback_value: float = 0.0
+    backend: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.n_regions < 1:
+            raise ValueError(f"n_regions must be >= 1, got {self.n_regions}")
+        if self.n_users < 1:
+            raise ValueError(f"n_users must be >= 1, got {self.n_users}")
+        rep = tuple(c for _ in range(self.n_regions) for c in self.cfgs)
+        object.__setattr__(self, "inner", server_lib.MultiModelServer(
+            cfgs=rep, tower_fn=self.tower_fn, miss_budget=self.miss_budget,
+            fallback_value=self.fallback_value, backend=self.backend))
+
+    @property
+    def n_models(self) -> int:
+        return len(self.cfgs)
+
+    def init_state(self, dtype=jnp.float32, writebuf_capacity: int = 4096,
+                   touchbuf_capacity: Optional[int] = None) -> RegionalState:
+        return RegionalState(
+            home=jnp.full((self.n_users,), -1, jnp.int32),
+            inner=server_lib.init_multi_server_state(
+                self.inner.cfgs, dtype, writebuf_capacity,
+                touchbuf_capacity))
+
+    def per_region(self, per_model_counter, n_regions: Optional[int] = None):
+        """Reshape an inherited (R*M,) per-model counter to (R, M)."""
+        R = self.n_regions if n_regions is None else n_regions
+        return per_model_counter.reshape(R, self.n_models)
+
+    # ----------------------------------------------------------------- serve
+    def serve_step(self, params, state: RegionalState, uids, slots,
+                   keys: Key64, features, now_ms, drained, epoch,
+                   event_base,
+                   failure_mask: Optional[jnp.ndarray] = None
+                   ) -> server_lib.ServeResult:
+        """Route one mixed batch, then serve it on the stacked tier.
+
+        ``uids`` (B,) int32 routes each request (``keys`` stays the cache
+        identity); ``slots`` (B,) picks each request's model within its
+        region; ``drained`` (R,) bool + ``epoch``/``event_base`` scalars
+        come from :func:`stage_drain_schedule` / :func:`event_bases`.
+        Stats gain ``rehomed`` / ``excursions`` routing counters on top
+        of the inherited per-model breakdowns."""
+        regions, new_home, rehomed, excursions = route_batch(
+            state.home, uids, drained, epoch, event_base,
+            locality=self.locality, seed=self.seed)
+        combined = (regions * jnp.int32(self.n_models)
+                    + jnp.asarray(slots, jnp.int32))
+        res = self.inner.serve_step(params, state.inner, combined, keys,
+                                    features, now_ms, failure_mask)
+        stats = dict(res.stats)
+        stats["rehomed"] = rehomed
+        stats["excursions"] = excursions
+        return server_lib.ServeResult(
+            embeddings=res.embeddings, source=res.source, age_ms=res.age_ms,
+            state=RegionalState(home=new_home, inner=res.state),
+            stats=stats)
+
+    # ------------------------------------------------------------ serve_many
+    def serve_many(self, params, state: RegionalState, uids, slots,
+                   keys: Key64, features, now_ms, drained, epoch,
+                   event_base, failure_mask: Optional[jnp.ndarray] = None,
+                   *, flush_every: int = 1, collect: bool = True):
+        """S routed serve steps in ONE dispatch: the shared scan driver
+        over a staged (S, B) stream plus the (S, R)/(S,)/(S,) drain
+        payload — the whole drain scenario replays with one counter
+        fetch per dispatch."""
+        now_ms = jnp.asarray(now_ms, jnp.int32)
+        if failure_mask is None:
+            failure_mask = jnp.zeros(keys.hi.shape, bool)
+
+        def step(st, pay, now, fail):
+            u, sl, k, f, dr, ep, eb = pay
+            return self.serve_step(params, st, u, sl, k, f, now, dr, ep,
+                                   eb, fail)
+
+        acc0 = server_lib._zero_acc(self.inner.n_models)
+        acc0["rehomed"] = jnp.int32(0)
+        acc0["excursions"] = jnp.int32(0)
+        return server_lib._serve_many_scan(
+            step, self.flush, state,
+            (jnp.asarray(uids, jnp.int32), jnp.asarray(slots, jnp.int32),
+             keys, features, drained, epoch, event_base),
+            now_ms, failure_mask, acc0,
+            flush_every=flush_every, collect=collect)
+
+    # ----------------------------------------------------------------- flush
+    def flush(self, state: RegionalState, now_ms) -> RegionalState:
+        """Drain the shared rings into every region's slabs (one insert
+        plan across all R*M slots); the home table passes through."""
+        return RegionalState(home=state.home,
+                             inner=self.inner.flush(state.inner, now_ms))
+
+    # ------------------------------------------------------------------ jit
+    # Same donation contract as the inner tier: RegionalState is donated,
+    # callers follow the move pattern and never reuse old state.
+    @functools.cached_property
+    def jit_serve_step(self):
+        return jax.jit(self.serve_step, donate_argnums=(1,))
+
+    @functools.cached_property
+    def jit_serve_many(self):
+        return jax.jit(self.serve_many, donate_argnums=(1,),
+                       static_argnames=("flush_every", "collect"))
+
+    @functools.cached_property
+    def jit_flush(self):
+        return jax.jit(self.flush, donate_argnums=(0,))
+
+
+# ------------------------------------------------------------------ snapshot
+def cache_image(state: RegionalState) -> dict:
+    """Durable subset for warm restarts: the inner tier's image plus the
+    home-region plane (sticky routing state IS reliability state — a
+    restore that forgot homes would re-spread every user)."""
+    img = dict(server_lib.cache_image(state.inner))
+    img["home"] = state.home
+    return img
+
+
+def with_cache_image(state: RegionalState, image: dict) -> RegionalState:
+    """Graft a restored regional image onto a same-shape cold state."""
+    image = dict(image)
+    home = image.pop("home")
+    return RegionalState(
+        home=home, inner=server_lib.with_cache_image(state.inner, image))

@@ -21,42 +21,136 @@ import numpy as np
 from repro.core.ratelimit import RegionalRateLimiter
 
 
+class AllRegionsDrainedError(RuntimeError):
+    """Every region is drained — there is nowhere to route a request.
+
+    Raised by :meth:`RegionRouter.route` (and the device-path drain-
+    schedule staging, core/regional.py) instead of crashing inside
+    ``rng.choice`` on an empty live list: an operator draining the LAST
+    region is a config error that must be loud, not an index error."""
+
+
+# ------------------------------------------------- deterministic sampling
+# The "hash" sampler below replaces the router's RNG draws with pure
+# functions of (seed, uid, counter) so the on-device router
+# (core/regional.py) can replay the EXACT same decisions in jnp: both
+# sides compute the same xxhash32-style avalanche (core/hashing.hash_u32
+# with hi=counter, lo=uid) in uint32 arithmetic. This host twin uses
+# plain python ints masked to 32 bits — bit-identical by construction.
+_P2, _P3, _P4, _P5 = 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F, 0x165667B1
+HOME_SALT = 0x9E3779B9     # re-home draw (keyed by drain epoch)
+EXC_SALT = 0x7F4A7C15      # excursion coin (keyed by event index)
+TGT_SALT = 0x94D049BB      # excursion target (keyed by event index)
+
+
+def _u32(x: int) -> int:
+    return x & 0xFFFFFFFF
+
+
+def _rotl32_host(x: int, r: int) -> int:
+    return _u32((x << r) | (x >> (32 - r)))
+
+
+def hash_u32_host(lo: int, hi: int, seed: int) -> int:
+    """Host twin of ``hashing.hash_u32`` on a (hi, lo) word pair."""
+    h = _u32(seed + _P5 + 8)
+    h = _u32(h + _u32(lo) * _P3)
+    h = _u32(_rotl32_host(h, 17) * _P4)
+    h = _u32(h + _u32(hi) * _P3)
+    h = _u32(_rotl32_host(h, 17) * _P4)
+    h ^= h >> 15
+    h = _u32(h * _P2)
+    h ^= h >> 13
+    h = _u32(h * _P3)
+    h ^= h >> 16
+    return h
+
+
+def excursion_threshold(locality: float) -> int:
+    """uint32 cutoff shared by both routers: a request excurses iff its
+    excursion hash is >= this, so P(excursion) = 1 - locality."""
+    return _u32(int(locality * 4294967296.0))
+
+
 @dataclasses.dataclass
 class RegionRouter:
     """Sticky routing: a user keeps hitting their home region until a drain
-    (or random re-shuffle with prob. 1-locality) moves them."""
+    (or random re-shuffle with prob. 1-locality) moves them.
+
+    ``sampler`` picks how the routing randomness is drawn: ``"rng"`` (the
+    default, a seeded numpy Generator) or ``"hash"`` — deterministic
+    counter-keyed hashing (re-home keyed by the drain EPOCH, a counter
+    bumped on every drain/undrain; excursions keyed by the global EVENT
+    index) that the device router in core/regional.py replays bit-exactly.
+    """
 
     n_regions: int
     locality: float = 0.98           # prob. request lands in home region
     seed: int = 0
+    sampler: str = "rng"             # "rng" | "hash"
 
     def __post_init__(self) -> None:
+        if self.sampler not in ("rng", "hash"):
+            raise ValueError(f"unknown sampler {self.sampler!r}")
         self._rng = np.random.default_rng(self.seed)
         self._home: Dict[int, int] = {}
         self.drained: set = set()
+        self._epoch = 0              # bumped on every drain/undrain
+        self._event = 0              # bumped on every route() call
+
+    def _live(self) -> List[int]:
+        return [r for r in range(self.n_regions) if r not in self.drained]
 
     def _fresh_region(self, exclude: Optional[set] = None) -> int:
-        live = [r for r in range(self.n_regions)
-                if r not in self.drained and r not in (exclude or set())]
+        if len(self.drained) >= self.n_regions:
+            raise AllRegionsDrainedError(
+                f"all {self.n_regions} regions are drained")
+        live = [r for r in self._live() if r not in (exclude or set())]
         return int(self._rng.choice(live))
 
     def route(self, user_id: int) -> int:
+        event = self._event
+        self._event += 1
+        live = self._live()
+        if not live:
+            raise AllRegionsDrainedError(
+                f"all {self.n_regions} regions are drained")
         home = self._home.get(user_id)
         if home is None or home in self.drained:
-            home = self._fresh_region()
+            if self.sampler == "hash":
+                h = hash_u32_host(user_id, self._epoch,
+                                  _u32(self.seed + HOME_SALT))
+                home = live[h % len(live)]
+            else:
+                home = self._fresh_region()
             self._home[user_id] = home
-        if self._rng.random() > self.locality:
-            # cross-region excursion (does NOT move home — the paper's
-            # "most of the time" qualifier)
-            return self._fresh_region()
+        # cross-region excursion (does NOT move home — the paper's "most
+        # of the time" qualifier). The target EXCLUDES the home region:
+        # an "excursion" to the region already serving you is a no-op
+        # that would under-count real cross-region traffic. With no other
+        # live region the request stays home.
+        if self.locality < 1.0 and len(live) > 1:
+            if self.sampler == "hash":
+                u = hash_u32_host(user_id, event,
+                                  _u32(self.seed + EXC_SALT))
+                if u >= excursion_threshold(self.locality):
+                    j = hash_u32_host(user_id, event,
+                                      _u32(self.seed + TGT_SALT)) \
+                        % (len(live) - 1)
+                    hrank = live.index(home)
+                    return live[j + (1 if j >= hrank else 0)]
+            elif self._rng.random() > self.locality:
+                return self._fresh_region(exclude={home})
         return home
 
     def drain(self, region: int) -> None:
         """Take a region down; its users re-home lazily on next request."""
         self.drained.add(region)
+        self._epoch += 1
 
     def undrain(self, region: int) -> None:
         self.drained.discard(region)
+        self._epoch += 1
 
 
 @dataclasses.dataclass

@@ -199,3 +199,27 @@ def simulate_hit_rate(times_ms: np.ndarray, users: np.ndarray,
         if not h:
             last_write[u] = t
     return hits / max(total, 1)
+
+
+def diurnal_weight(times_ms: np.ndarray, period_h: float = 24.0,
+                   trough: float = 0.3, peak_h: float = 20.0) -> np.ndarray:
+    """Relative traffic intensity in [trough, 1] at each timestamp — a
+    cosine day/night envelope peaking at ``peak_h`` hours into the day
+    (ads traffic peaks in the evening). Drives the drain scenario's
+    diurnal mix: the renewal-process generator is stationary, so the
+    time-of-day shape is applied by thinning (below)."""
+    t_h = np.asarray(times_ms, np.float64) / 3_600_000.0
+    phase = 2.0 * np.pi * (t_h - peak_h) / period_h
+    return trough + (1.0 - trough) * 0.5 * (1.0 + np.cos(phase))
+
+
+def thin_diurnal(times_ms: np.ndarray, users: np.ndarray, seed: int = 0,
+                 period_h: float = 24.0, trough: float = 0.3,
+                 peak_h: float = 20.0) -> Tuple[np.ndarray, np.ndarray]:
+    """Thin a stationary stream to the diurnal envelope: each event is
+    kept with probability ``diurnal_weight`` at its timestamp (independent
+    thinning — the standard way to modulate a renewal process without
+    touching per-user interval structure). Returns (times_ms, users)."""
+    w = diurnal_weight(times_ms, period_h, trough, peak_h)
+    keep = np.random.default_rng(seed).random(w.shape[0]) < w
+    return times_ms[keep], users[keep]

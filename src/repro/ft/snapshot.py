@@ -38,6 +38,7 @@ from typing import Any, Dict, Optional
 import jax.numpy as jnp
 
 from repro.core import cache as cache_lib
+from repro.core import regional as regional_lib
 from repro.core import server as server_lib
 from repro.core.metrics import ServingCounters
 from repro.core.ratelimit import InferBudget
@@ -55,6 +56,14 @@ def _shape_meta(server, state) -> Dict[str, Any]:
     else ⇒ elastic rehash. Per-model bucket counts come from the CONFIGS
     (the capacity masks), not the stack allocation — two stacks of equal
     shape but different per-model capacity still need a rehash."""
+    if isinstance(state, regional_lib.RegionalState):
+        # the inner stacked tier's fingerprint plus the regional axes; a
+        # changed region count (or home-table size) is a different world
+        # and restores fail-open to cold, never a silent remap.
+        shapes = _shape_meta(server.inner, state.inner)
+        shapes["n_regions"] = int(server.n_regions)
+        shapes["n_users"] = int(state.home.shape[0])
+        return shapes
     if isinstance(state, server_lib.MultiServerState):
         cfgs = list(server.cfgs)
         return {
@@ -84,17 +93,23 @@ def snapshot_server(directory: str, step: int, server, state, now_ms: int,
     its input, and a snapshot must never consume the serving state.
     """
     state = server.flush(state, now_ms)
+    if isinstance(state, regional_lib.RegionalState):
+        kind, image, tier = ("regional", regional_lib.cache_image(state),
+                             state.inner)
+    elif isinstance(state, server_lib.MultiServerState):
+        kind, image, tier = "multi", server_lib.cache_image(state), state
+    else:
+        kind, image, tier = "single", server_lib.cache_image(state), state
     meta = {
         "schema": SCHEMA,
-        "kind": ("multi" if isinstance(state, server_lib.MultiServerState)
-                 else "single"),
+        "kind": kind,
         "now_ms": int(now_ms),
-        "value_dim": int(state.direct.dim),
-        "dtype": str(state.direct.values.dtype),
+        "value_dim": int(tier.direct.dim),
+        "dtype": str(tier.direct.values.dtype),
         "shapes": _shape_meta(server, state),
         "counters": None if counters is None else counters.as_dict(),
     }
-    ckpt.save(directory, step, server_lib.cache_image(state), meta=meta,
+    ckpt.save(directory, step, image, meta=meta,
               retain_last_k=retain_last_k)
     return state
 
@@ -129,13 +144,18 @@ def restore_server(directory: str, server, now_ms: int,
     never aborts serving. ``now_ms`` is the stream clock used to drop
     already-expired entries during a rehash.
     """
+    regional = isinstance(server, regional_lib.RegionalServer)
     multi = isinstance(server, server_lib.MultiModelServer)
-    if multi:
+    if regional:
+        cold = server.init_state(dtype, writebuf_capacity,
+                                 touchbuf_capacity)
+    elif multi:
         cold = server_lib.init_multi_server_state(
             server.cfgs, dtype, writebuf_capacity, touchbuf_capacity)
     else:
         cold = server_lib.init_server_state(
             server.cfg, dtype, writebuf_capacity, touchbuf_capacity)
+    cold_tier = cold.inner if regional else cold
 
     # Restore targets the server's PLACEMENT as well as its geometry: a
     # bucket-sharded server (server.mesh set) gets its restored tables
@@ -167,12 +187,53 @@ def restore_server(directory: str, server, now_ms: int,
                 f"step {step}: not an ercache snapshot "
                 f"(schema={None if not meta else meta.get('schema')!r})",
                 step)
-        if int(meta.get("value_dim", -1)) != int(cold.direct.dim):
+        if int(meta.get("value_dim", -1)) != int(cold_tier.direct.dim):
             return cold_result(
                 f"step {step}: value_dim {meta.get('value_dim')} != "
-                f"target {cold.direct.dim}", step)
+                f"target {cold_tier.direct.dim}", step)
         kind = meta.get("kind")
         shapes = meta["shapes"]
+
+        # Regional snapshots restore BIT-EXACT or not at all: the home
+        # plane has no meaningful rehash across a changed region count
+        # (a region that no longer exists is not a geometry change, it is
+        # a different routing world), so any fingerprint drift — region
+        # count, user-table size, inner tier geometry — fails open to a
+        # cold start. Kind mismatches in either direction land here too.
+        if regional or kind == "regional":
+            if not regional:
+                return cold_result(
+                    f"step {step}: regional snapshot into a "
+                    "non-regional server", step)
+            if kind != "regional":
+                return cold_result(
+                    f"step {step}: {kind!r} snapshot into a regional "
+                    "server", step)
+            if shapes != _shape_meta(server, cold):
+                return cold_result(
+                    f"step {step}: regional geometry changed (snapshot "
+                    f"{shapes.get('n_regions')} regions x "
+                    f"{shapes.get('n_models')} slots, "
+                    f"{shapes.get('n_users')} users; target "
+                    f"{server.n_regions} regions x "
+                    f"{server.inner.n_models} slots, {server.n_users} "
+                    "users) — regional restore is bit-exact only", step)
+            dim = int(meta["value_dim"])
+            old_d = cache_lib.init_multi_cache(
+                shapes["direct_nb"], shapes["direct_ways"], dim, dtype)
+            old_f = cache_lib.init_multi_cache(
+                shapes["failover_nb"], shapes["failover_ways"], dim, dtype)
+            image = ckpt.restore(directory, step, {
+                "direct": old_d, "failover": old_f,
+                "budget": InferBudget(tokens=jnp.zeros(
+                    (int(shapes["n_models"]),), jnp.float32)),
+                "home": jnp.zeros((int(shapes["n_users"]),), jnp.int32)})
+            counters = (ServingCounters.from_dict(meta["counters"])
+                        if meta.get("counters") else ServingCounters())
+            state = regional_lib.with_cache_image(cold, image)
+            return RestoreResult(state=state, counters=counters,
+                                 mode="bitexact", step=step,
+                                 detail=f"loaded step {step} in place")
 
         # Rebuild the image at its ORIGINAL geometry (restore() is
         # shape-checked against this, so a manifest/meta mismatch lands

@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import cache as cache_lib
+from repro.core import regional as rg_lib
 from repro.core import server as srv_lib
 from repro.core.config import (CacheConfig, MINUTE_MS, HOUR_MS,
                                multi_model_tier_configs)
@@ -57,7 +58,7 @@ from repro.core.hashing import Key64
 from repro.core.metrics import ServingCounters, power_savings
 from repro.data.access_patterns import (FIG6_KNOTS, InterArrivalDist,
                                         StreamConfig, generate_stream_fast,
-                                        simulate_hit_rate)
+                                        simulate_hit_rate, thin_diurnal)
 from repro.ft import snapshot as snap_lib
 from repro.ft.failure import FailureInjector
 from repro.models import recsys as rec_lib
@@ -681,6 +682,167 @@ def run_serving_multi(arch: str = "sasrec", minutes: int = 60,
     return d
 
 
+def run_serving_regional(arch: str = "sasrec", n_regions: int = 4,
+                         minutes: int = 60, users: int = 2000,
+                         batch: int = 256, ttl_min: float = 5.0,
+                         failover_ttl_h: float = 1.0,
+                         locality: float = 0.98, drain: bool = False,
+                         drain_start_frac: float = 0.4,
+                         drain_len_frac: float = 0.25,
+                         n_buckets: int = 1 << 12, backend: str = "jnp",
+                         eviction: str = "ttl", chunk_steps: int = 64,
+                         seed: int = 0, log=print):
+    """The regional drain scenario ON DEVICE (paper §3.6–3.7, Fig. 10).
+
+    R regions are stacked as a leading axis over the cache tier
+    (core/regional.py): sticky routing reads/updates a device-resident
+    home-region table, the drain mask + epoch + event base ride along as
+    scan inputs, and the whole drain + flash-crowd + diurnal mix replays
+    through chunked ``serve_many`` dispatches with ONE stats fetch per
+    chunk — no per-step host sync (contrast the host-loop
+    ``DrainTestHarness``, the numpy oracle this path is parity-locked
+    against in tests/test_region_parity.py).
+
+    Timeline: the stationary renewal stream is thinned to a day/night
+    envelope compressed into the run's horizon (``thin_diurnal``); at
+    ``drain_start_frac`` (batch index, aligned to chunk boundaries so
+    every chunk is entirely pre/drain/post) region R-1 drains and a
+    flash crowd of uniform re-accesses over a hot user pool mixes into
+    the window — drain and crowd coincide, the worst case; after
+    ``drain_len_frac`` the region undrains. Its users re-home lazily and
+    PERMANENTLY (no undrain flap), the Fig. 10 claim being that the
+    global hit rate barely dips. The report carries the per-chunk
+    hit-rate curve, pre/drain/post means + dip, per-region load, and the
+    drained region's in-window load (exactly 0 by construction — routing
+    never targets a drained region)."""
+    tower_cfg, params, tower_fn, features_of = build_tower(arch)
+    cache_cfg = CacheConfig(
+        model_id=1, model_type="ctr",
+        cache_ttl_ms=int(ttl_min * MINUTE_MS),
+        failover_ttl_ms=int(failover_ttl_h * HOUR_MS),
+        n_buckets=n_buckets, ways=8,
+        value_dim=tower_cfg.user_embed_dim,
+        backend=backend, eviction=eviction)
+    server = rg_lib.RegionalServer(
+        cfgs=(cache_cfg,), n_regions=n_regions, n_users=users,
+        tower_fn=tower_fn, miss_budget=batch, locality=locality, seed=seed)
+    state = server.init_state(writebuf_capacity=batch * 4)
+
+    stream_cfg = StreamConfig(n_users=users, horizon_s=minutes * 60.0,
+                              seed=seed)
+    times_ms, uids = generate_stream_fast(
+        stream_cfg, InterArrivalDist(FIG6_KNOTS))
+    # diurnal mix: one full day/night cycle compressed into the horizon,
+    # peak mid-run (so the drain window lands on non-trivial load)
+    horizon_h = max(minutes / 60.0, 1e-9)
+    times_ms, uids = thin_diurnal(times_ms, uids, seed=seed + 1,
+                                  period_h=horizon_h,
+                                  peak_h=horizon_h / 2.0)
+
+    n_batches = len(uids) // batch
+
+    def align(b: int) -> int:
+        return (b // chunk_steps) * chunk_steps
+
+    drain_lo = align(int(n_batches * drain_start_frac))
+    drain_hi = align(int(n_batches * (drain_start_frac + drain_len_frac)))
+    if drain:
+        # guarantee at least one pre chunk and one in-window chunk even
+        # on smoke-sized runs (the window stays chunk-aligned so every
+        # chunk is entirely in one phase)
+        drain_lo = max(drain_lo, chunk_steps)
+        drain_hi = max(drain_hi, drain_lo + chunk_steps)
+    drain_region = n_regions - 1
+    events = []
+    if drain and n_regions > 1 and drain_lo < n_batches:
+        events.append((drain_lo, "drain", drain_region))
+        if drain_hi < n_batches:
+            events.append((drain_hi, "undrain", drain_region))
+    drained_all, epoch_all = rg_lib.stage_drain_schedule(
+        max(n_batches, 1), n_regions, events)
+    ebase_all = rg_lib.event_bases(0, max(n_batches, 1), batch)
+
+    # flash crowd: uniform re-accesses over a small hot pool, mixed into
+    # half the window's slots — re-access demand beyond the renewal stream
+    crowd_rng = np.random.default_rng(seed + 2)
+    hot = crowd_rng.integers(0, users, size=max(users // 50, 1))
+
+    counters = ServingCounters()
+    curve = []
+    region_load = np.zeros(n_regions, np.int64)
+    drained_load = 0
+    rehomed = excursions = 0
+    t0 = time.perf_counter()
+    for lo, n_steps in _chunks(n_batches, chunk_steps):
+        ids_mat = uids[lo * batch:(lo + n_steps) * batch].reshape(
+            n_steps, batch).astype(np.int64)
+        in_window = drain_lo <= lo < drain_hi
+        if in_window:
+            mix = crowd_rng.random(ids_mat.shape) < 0.5
+            ids_mat = np.where(
+                mix, hot[crowd_rng.integers(0, hot.size, ids_mat.shape)],
+                ids_mat)
+        keys, feats, nows, _ = _stage_chunk(
+            uids, times_ms, features_of, lo * batch, n_steps, batch,
+            override_ids=ids_mat)
+        slots = jnp.zeros((n_steps, batch), jnp.int32)
+        state, acc, _ = server.jit_serve_many(
+            params, state, jnp.asarray(ids_mat, jnp.int32), slots, keys,
+            feats, nows, drained_all[lo:lo + n_steps],
+            epoch_all[lo:lo + n_steps], ebase_all[lo:lo + n_steps],
+            flush_every=1, collect=False)
+        s = jax.device_get(acc)  # erlint: allow[ER002] — one fetch per chunk
+        c = ServingCounters.from_stats(s)
+        counters.merge(c)
+        pr = np.asarray(s["per_model_requests"],
+                        np.int64).reshape(n_regions, 1).sum(axis=1)
+        region_load += pr
+        if drain and in_window:
+            drained_load += int(pr[drain_region])
+        rehomed += int(s["rehomed"])
+        excursions += int(s["excursions"])
+        phase = ("pre" if lo < drain_lo
+                 else "drain" if lo < drain_hi else "post")
+        curve.append({"batch_lo": lo, "phase": phase,
+                      "hit_rate": round(c.hit_rate, 4)})
+    wall = time.perf_counter() - t0
+
+    def phase_mean(p):
+        xs = [pt["hit_rate"] for pt in curve if pt["phase"] == p]
+        return round(float(np.mean(xs)), 4) if xs else None
+
+    d = counters.as_dict()
+    d["wall_s"] = round(wall, 2)
+    d["batches"] = n_batches
+    d["req_per_s"] = round(counters.requests / max(wall, 1e-9), 1)
+    d["n_regions"] = n_regions
+    d["locality"] = locality
+    d["drain"] = bool(drain)
+    d["drain_region"] = drain_region if drain else None
+    d["drain_batches"] = [drain_lo, drain_hi]
+    d["rehomed"] = rehomed
+    d["excursions"] = excursions
+    d["region_load"] = region_load.tolist()
+    d["drained_load_during_drain"] = drained_load
+    d["hit_rate_pre"] = phase_mean("pre")
+    d["hit_rate_drain"] = phase_mean("drain")
+    d["hit_rate_post"] = phase_mean("post")
+    d["dip_pp"] = (round((d["hit_rate_pre"] - d["hit_rate_drain"]) * 100, 2)
+                   if d["hit_rate_pre"] is not None
+                   and d["hit_rate_drain"] is not None else None)
+    d["hit_rate_curve"] = [pt["hit_rate"] for pt in curve]
+    log(f"[serve-regional {arch}] regions={n_regions}"
+        f" locality={locality:g}"
+        f" drain={'batches[%d:%d]' % (drain_lo, drain_hi) if drain else 'off'}"
+        f" requests={d['requests']} hit_rate={d['hit_rate']:.3f}"
+        f" pre/drain/post={d['hit_rate_pre']}/{d['hit_rate_drain']}"
+        f"/{d['hit_rate_post']} dip_pp={d['dip_pp']}"
+        f" rehomed={rehomed} excursions={excursions}"
+        f" drained_load={drained_load}"
+        f" ({wall:.1f}s, {d['req_per_s']:.0f} req/s)")
+    return d
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="sasrec")
@@ -726,6 +888,17 @@ def main():
                          "(DESIGN.md §10)")
     ap.add_argument("--checkpoint-every", type=int, default=40,
                     help="--restart: serve steps between snapshots")
+    ap.add_argument("--regions", type=int, default=None,
+                    help="regional serving on device: stack N regions as a "
+                         "leading axis over the cache tier, sticky routing "
+                         "via a device-resident home table (DESIGN.md §13)")
+    ap.add_argument("--drain", action="store_true",
+                    help="--regions: drain one region mid-run (the Fig. 10 "
+                         "drain test) — its users re-home lazily while a "
+                         "flash crowd coincides with the window")
+    ap.add_argument("--locality", type=float, default=0.98,
+                    help="--regions: probability a request stays in its "
+                         "home region (paper: 'good locality')")
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--eviction", default="ttl", choices=["ttl", "lru"],
                     help="direct/failover victim order (paper §3.3); lru "
@@ -743,7 +916,27 @@ def main():
         if args.restart or args.overload or args.no_cache:
             ap.error("--shards drives the plain/--multi serving modes")
         ensure_shard_devices(args.shards)
-    if args.restart:
+    if args.drain and args.regions is None:
+        ap.error("--drain requires --regions")
+    if args.regions is not None:
+        if args.regions < 1:
+            ap.error("--regions must be >= 1")
+        if args.restart or args.overload or args.multi:
+            ap.error("--regions drives the regional server; drop "
+                     "--restart/--overload/--multi")
+        if args.no_cache or args.coalesce:
+            ap.error("--regions is a cache-tier scenario; drop "
+                     "--no-cache/--coalesce")
+        if args.shards > 1:
+            ap.error("--regions stacks regions on one device; drop --shards")
+        run_serving_regional(
+            arch=args.arch, n_regions=args.regions, minutes=args.minutes,
+            users=args.users, batch=args.batch,
+            ttl_min=5.0 if args.ttl_min is None else args.ttl_min,
+            locality=args.locality, drain=args.drain,
+            backend=args.backend, eviction=args.eviction,
+            chunk_steps=args.chunk_steps)
+    elif args.restart:
         if args.multi or args.overload:
             ap.error("--restart drives the single-model server; drop "
                      "--multi/--overload")

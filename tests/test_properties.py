@@ -26,8 +26,10 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 from _hypothesis_compat import given, settings, st  # noqa: E402
 
 from repro.core import cache as cache_lib
+from repro.core import regional
 from repro.core.hashing import Key64
 from repro.ft import elastic
+from repro.core.regions import RegionRouter
 
 # Small bounded geometry space: powers of two (the bucket-mask contract)
 # and short key streams keep each example fast while still hitting bucket
@@ -172,3 +174,151 @@ def test_dedupe_first_groups_picks_first_occurrences(rows):
             assert src[i] == first[(u, s)], (i, rows)
         else:
             assert src[i] == -1 and not rep[i]
+
+
+# ---------------------------------------------------- routing invariants
+# Random drain schedules against the sticky-routing contracts the drain
+# test leans on (DESIGN.md §13): sticky absent drain/excursion, drained
+# regions never served, re-homing lazy and permanent — on the host
+# router AND the device router (core/regional.route_batch), which must
+# also agree with each other decision-for-decision.
+ROUTE_UIDS = st.lists(st.integers(min_value=0, max_value=24), min_size=4,
+                      max_size=40)
+DRAIN_OPS = st.lists(
+    st.tuples(st.integers(0, 5),                 # step the event fires at
+              st.booleans(),                     # True=drain False=undrain
+              st.integers(0, 3)),                # region
+    max_size=8)
+
+
+def _schedule_of(ops, n_steps, n_regions):
+    """Normalize hypothesis ops into a staging-safe event list: drop
+    events that would drain the last live region (that config is locked
+    to raise — tested separately in test_regions.py)."""
+    events = []
+    cur = np.zeros(n_regions, bool)
+    for step, is_drain, reg in sorted(ops, key=lambda e: e[0]):
+        if is_drain:
+            if cur.sum() == n_regions - 1 and not cur[reg]:
+                continue
+            cur[reg] = True
+            events.append((step, "drain", reg))
+        elif cur[reg]:
+            cur[reg] = False
+            events.append((step, "undrain", reg))
+    return events
+
+
+@settings(max_examples=40, deadline=None)
+@given(ROUTE_UIDS, st.integers(0, 2 ** 16))
+def test_routing_sticky_without_drain_or_excursion(uids, seed):
+    """locality=1.0, no drains: one user, one region, forever — on both
+    samplers and on the device router."""
+    for sampler in ("rng", "hash"):
+        r = RegionRouter(n_regions=4, locality=1.0, seed=seed,
+                         sampler=sampler)
+        first = {u: r.route(u) for u in uids}
+        for u in uids * 2:
+            assert r.route(u) == first[u], sampler
+    home = jnp.full((25,), -1, jnp.int32)
+    drained = jnp.zeros((4,), bool)
+    got = []
+    for step, u in enumerate(uids * 3):
+        regions, home, _, _ = regional.route_batch(
+            home, jnp.asarray([u], jnp.int32), drained, jnp.int32(0),
+            jnp.int32(step), locality=1.0, seed=seed)
+        got.append(int(regions[0]))
+    first_dev = {}
+    for u, reg in zip(uids * 3, got):
+        assert first_dev.setdefault(u, reg) == reg
+
+
+@settings(max_examples=40, deadline=None)
+@given(ROUTE_UIDS, DRAIN_OPS, st.integers(0, 2 ** 16))
+def test_drained_regions_never_receive_traffic(uids, ops, seed):
+    """Under a random drain schedule no request ever routes to a region
+    drained at that moment — host router (both samplers) and device
+    router agree on the invariant AND (hash mode) on every decision."""
+    n_steps, n_regions = 6, 4
+    events = _schedule_of(ops, n_steps, n_regions)
+    batch = len(uids)
+    stream = np.asarray([uids] * n_steps, np.int32)
+
+    routed = {}
+    for sampler in ("rng", "hash"):
+        r = RegionRouter(n_regions=n_regions, locality=0.8, seed=seed,
+                         sampler=sampler)
+        by_step = {}
+        for step, op, reg in events:
+            by_step.setdefault(step, []).append((op, reg))
+        out = np.zeros((n_steps, batch), np.int32)
+        for s in range(n_steps):
+            for op, reg in by_step.get(s, ()):
+                getattr(r, op)(reg)
+            for i, u in enumerate(stream[s]):
+                out[s, i] = r.route(int(u))
+                assert out[s, i] not in r.drained, sampler
+        routed[sampler] = out
+
+    drained, epoch = regional.stage_drain_schedule(n_steps, n_regions,
+                                                   events)
+    ebase = regional.event_bases(0, n_steps, batch)
+    home = jnp.full((25,), -1, jnp.int32)
+    dev = np.zeros((n_steps, batch), np.int32)
+    for s in range(n_steps):
+        regions, home, _, _ = regional.route_batch(
+            home, jnp.asarray(stream[s]), drained[s], epoch[s], ebase[s],
+            locality=0.8, seed=seed)
+        dev[s] = np.asarray(regions)
+        assert not np.asarray(drained[s])[dev[s]].any()
+    np.testing.assert_array_equal(dev, routed["hash"])
+
+
+@settings(max_examples=40, deadline=None)
+@given(ROUTE_UIDS, st.integers(0, 3), st.integers(0, 2 ** 16))
+def test_rehoming_is_lazy_and_permanent(uids, drain_reg, seed):
+    """Only users ROUTED during the drain move (lazy), they never flap
+    back after undrain (permanent), and untouched users keep their
+    original home — host hash sampler and device router in lockstep."""
+    uids = sorted(set(uids))
+    n_regions = 4
+    r = RegionRouter(n_regions=n_regions, locality=1.0, seed=seed,
+                     sampler="hash")
+    before = {u: r.route(u) for u in uids}
+    touched = uids[::2]                      # routed during the drain
+    untouched = [u for u in uids if u not in set(touched)]
+    r.drain(drain_reg)
+    during = {u: r.route(u) for u in touched}
+    r.undrain(drain_reg)
+    after = {u: r.route(u) for u in uids}
+    for u in touched:
+        assert during[u] != drain_reg
+        assert after[u] == during[u]                    # permanent
+        if before[u] != drain_reg:
+            assert during[u] == before[u]               # others unmoved
+    for u in untouched:
+        assert after[u] == before[u]                    # lazy: never moved
+
+    # device replay of the same three phases
+    home = jnp.full((25,), -1, jnp.int32)
+    n_steps = 3
+    events = [(1, "drain", drain_reg), (2, "undrain", drain_reg)]
+    drained, epoch = regional.stage_drain_schedule(n_steps, n_regions,
+                                                   events)
+    phase_uids = [uids, touched, uids]
+    got = []
+    ev = 0
+    for s in range(n_steps):
+        if not phase_uids[s]:
+            got.append({})
+            continue
+        regions, home, _, _ = regional.route_batch(
+            home, jnp.asarray(phase_uids[s], jnp.int32), drained[s],
+            epoch[s], jnp.int32(ev), locality=1.0, seed=seed)
+        ev += len(phase_uids[s])
+        got.append(dict(zip(phase_uids[s], np.asarray(regions).tolist())))
+    for u in touched:
+        assert got[1][u] != drain_reg
+        assert got[2][u] == got[1][u]
+    for u in untouched:
+        assert got[2][u] == got[0][u]

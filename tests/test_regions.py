@@ -2,9 +2,11 @@
 router drain behavior — the previously untested reliability pieces
 (DESIGN.md §6)."""
 import numpy as np
+import pytest
 
 from repro.core.ratelimit import RegionalRateLimiter, TokenBucket
-from repro.core.regions import RegionRouter
+from repro.core.regions import (AllRegionsDrainedError,
+                                RegionRouter)
 
 
 # ------------------------------------------------------------- TokenBucket
@@ -109,3 +111,64 @@ def test_router_excursions_do_not_move_home():
     assert seen.count(home) > 150                # majority at home
     assert len(set(seen)) > 1                    # excursions exist
     assert r._home[uid] == home                  # home never moved
+
+
+def test_router_all_drained_raises_clear_error():
+    """Draining the LAST region is a config error that must surface as
+    AllRegionsDrainedError, not an index crash inside rng.choice."""
+    r = RegionRouter(n_regions=3, locality=1.0, seed=0)
+    r.route(7)                                   # user has a home
+    for reg in range(3):
+        r.drain(reg)
+    with pytest.raises(AllRegionsDrainedError):
+        r.route(7)                               # homed user: still raises
+    with pytest.raises(AllRegionsDrainedError):
+        r.route(999)                             # fresh user: same error
+    r.undrain(1)
+    assert r.route(7) == 1                       # recovers once one is live
+
+
+def test_router_excursions_exclude_home_region():
+    """A cross-region excursion must actually leave the home region —
+    "excursing" to the region already serving the user is a no-op. With
+    locality=0 EVERY route is an excursion, so the home region must never
+    appear; with a single live region the request degrades to home."""
+    for sampler in ("rng", "hash"):
+        r = RegionRouter(n_regions=4, locality=0.0, seed=3, sampler=sampler)
+        uid = 5
+        r.route(uid)
+        home = r._home[uid]
+        seen = [r.route(uid) for _ in range(200)]
+        assert home not in seen, sampler
+        assert set(seen) == set(range(4)) - {home}, sampler
+        assert r._home[uid] == home, sampler
+    # only one region live → nowhere to excurse to: serve home
+    r = RegionRouter(n_regions=3, locality=0.0, seed=3)
+    r.drain(0)
+    r.drain(2)
+    assert all(r.route(11) == 1 for _ in range(20))
+
+
+def test_router_hash_sampler_is_deterministic_and_sticky():
+    """The deterministic "hash" sampler (the device router's oracle mode)
+    replays identically across router instances and keeps the sticky /
+    drain semantics of the rng mode."""
+    def replay():
+        r = RegionRouter(n_regions=5, locality=0.9, seed=11, sampler="hash")
+        out = [r.route(uid) for uid in list(range(30)) * 10]
+        r.drain(2)
+        out += [r.route(uid) for uid in range(30)]
+        r.undrain(2)
+        out += [r.route(uid) for uid in range(30)]
+        return out, dict(r._home)
+
+    a, homes_a = replay()
+    b, homes_b = replay()
+    assert a == b and homes_a == homes_b
+    # sticky under locality=1.0: same user, same region, every time
+    r = RegionRouter(n_regions=5, locality=1.0, seed=11, sampler="hash")
+    homes = {uid: r.route(uid) for uid in range(40)}
+    assert all(r.route(uid) == homes[uid] for uid in range(40))
+    # drained region never appears post-drain
+    r.drain(1)
+    assert all(r.route(uid) != 1 for uid in range(40))

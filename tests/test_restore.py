@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.core import cache as C
+from repro.core import regional
 from repro.core import server as S
 from repro.core.config import CacheConfig
 from repro.core.hashing import Key64
@@ -370,3 +371,120 @@ def test_single_snapshot_restores_into_m1_multi_tier(tmp_path):
     np.testing.assert_array_equal(np.asarray(res1.hit), live)
     np.testing.assert_array_equal(np.asarray(res1.values)[live],
                                   np.asarray(res0.values)[live])
+
+
+# ------------------------------------------------------- regional snapshots
+def regional_server(n_regions=3, n_users=50, seed=3):
+    return regional.RegionalServer(
+        cfgs=(BASE,), n_regions=n_regions, n_users=n_users,
+        tower_fn=tower, miss_budget=8, locality=0.9, seed=seed)
+
+
+def regional_stream(n_steps, batch, n_users, start_step=0, seed=7):
+    rng = np.random.default_rng(seed)
+    uids = rng.integers(0, n_users, size=(n_steps, batch)).astype(np.int32)
+    flat = keys_of(uids.reshape(-1))
+    keys = Key64(hi=flat.hi.reshape(n_steps, batch),
+                 lo=flat.lo.reshape(n_steps, batch))
+    feats = feats_of(uids.reshape(-1)).reshape(n_steps, batch, DIM)
+    nows = ((start_step + np.arange(n_steps)) * 10_000).astype(np.int32)
+    return uids, keys, feats, nows
+
+
+def test_regional_snapshot_round_trips_bitexact(tmp_path):
+    """Snapshot/restore of RegionalServer: every cache leaf AND the
+    home-region plane come back bit-identical (mode 'bitexact')."""
+    srv = regional_server()
+    params = jnp.eye(DIM, dtype=jnp.float32)
+    state = srv.init_state(writebuf_capacity=64)
+    uids, keys, feats, nows = regional_stream(4, 8, srv.n_users)
+    drained, epoch = regional.stage_drain_schedule(4, srv.n_regions)
+    ebase = regional.event_bases(0, 4, 8)
+    state, _, _ = srv.serve_many(params, state, uids, np.zeros_like(uids),
+                                 keys, feats, nows, drained, epoch, ebase)
+    drained_state = snap.snapshot_server(
+        str(tmp_path), 5, srv, state, int(nows[-1]),
+        counters=ServingCounters(requests=32, direct_hits=9))
+    r = snap.restore_server(str(tmp_path), regional_server(), int(nows[-1]),
+                            writebuf_capacity=64)
+    assert r.mode == "bitexact" and r.step == 5
+    assert r.counters.requests == 32 and r.counters.direct_hits == 9
+    for a, b in zip(
+            jax.tree_util.tree_leaves(regional.cache_image(drained_state)),
+            jax.tree_util.tree_leaves(regional.cache_image(r.state))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (np.asarray(r.state.home) >= -1).all()
+    assert (np.asarray(r.state.home) >= 0).any()   # homes survived
+
+
+def test_regional_restore_fails_open_across_region_count(tmp_path):
+    """A snapshot taken at R=3 must NOT load into R=5 (a region that no
+    longer exists is a routing world change, not a resize): fail-open
+    cold, never an exception into the serve path. Same for a changed
+    home-table size, and for kind mismatches in both directions."""
+    srv = regional_server(n_regions=3)
+    state = srv.init_state(writebuf_capacity=64)
+    snap.snapshot_server(str(tmp_path), 1, srv, state, 0)
+    r = snap.restore_server(str(tmp_path), regional_server(n_regions=5), 0,
+                            writebuf_capacity=64)
+    assert r.mode == "cold" and "regions" in r.detail
+    assert (np.asarray(r.state.home) == -1).all()
+    r2 = snap.restore_server(
+        str(tmp_path), regional_server(n_regions=3, n_users=99), 0,
+        writebuf_capacity=64)
+    assert r2.mode == "cold"
+    # regional snapshot into a plain multi server: cold, not a crash
+    msrv = S.MultiModelServer(cfgs=(BASE,), tower_fn=tower, miss_budget=8)
+    r3 = snap.restore_server(str(tmp_path), msrv, 0, writebuf_capacity=64)
+    assert r3.mode == "cold" and "non-regional" in r3.detail
+    # plain multi snapshot into a regional server: cold, not a crash
+    mstate = S.init_multi_server_state((BASE,), writebuf_capacity=64)
+    snap.snapshot_server(str(tmp_path), 2, msrv, mstate, 0)
+    r4 = snap.restore_server(str(tmp_path), regional_server(), 0,
+                             writebuf_capacity=64)
+    assert r4.mode == "cold" and "'multi'" in r4.detail
+
+
+def test_regional_post_drain_snapshot_replays_identical_counters(tmp_path):
+    """Kill/restore mid-scenario, right after a drain: replaying the
+    remaining stream from the restored state must produce the SAME
+    counters and cache planes as the uninterrupted run — the home plane
+    in the snapshot is what makes re-homed users stay re-homed."""
+    srv = regional_server(n_regions=4, n_users=60)
+    params = jnp.eye(DIM, dtype=jnp.float32)
+    n_steps, batch = 10, 8
+    uids, keys, feats, nows = regional_stream(n_steps, batch, srv.n_users)
+    events = [(2, "drain", 1), (7, "undrain", 1)]
+    drained, epoch = regional.stage_drain_schedule(n_steps, srv.n_regions,
+                                                   events)
+    ebase = regional.event_bases(0, n_steps, batch)
+    cut = 5                     # snapshot boundary: drained, pre-undrain
+
+    def first_half(state):
+        return srv.serve_many(
+            params, state, uids[:cut], np.zeros_like(uids[:cut]),
+            Key64(hi=keys.hi[:cut], lo=keys.lo[:cut]), feats[:cut],
+            nows[:cut], drained[:cut], epoch[:cut], ebase[:cut])
+
+    def second_half(state):
+        _, acc, _ = srv.serve_many(
+            params, state, uids[cut:], np.zeros_like(uids[cut:]),
+            Key64(hi=keys.hi[cut:], lo=keys.lo[cut:]), feats[cut:],
+            nows[cut:], drained[cut:], epoch[cut:], ebase[cut:])
+        return jax.device_get(acc)  # erlint: allow[ER002]
+
+    mid, _, _ = first_half(srv.init_state(writebuf_capacity=64))
+    mid = snap.snapshot_server(str(tmp_path), cut, srv, mid,
+                               int(nows[cut - 1]))
+    straight = second_half(mid)
+
+    r = snap.restore_server(str(tmp_path), regional_server(
+        n_regions=4, n_users=60), int(nows[cut - 1]), writebuf_capacity=64)
+    assert r.mode == "bitexact"
+    resumed = second_half(r.state)
+    for k in ("requests", "direct_hits", "tower_inferences", "rehomed",
+              "excursions", "fallbacks"):
+        assert int(straight[k]) == int(resumed[k]), k
+    np.testing.assert_array_equal(
+        np.asarray(straight["per_model_requests"]),
+        np.asarray(resumed["per_model_requests"]))
