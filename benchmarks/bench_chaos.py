@@ -1,0 +1,157 @@
+"""Chaos engine bench: the degradation ledger under the preset multi-fault
+scenarios, CI-asserted (DESIGN.md §14).
+
+Three arms:
+
+* **scenarios** — each ``launch/serve.py --chaos`` preset (``incident``,
+  ``cascade``, ``rolling``) replayed end to end through chunked
+  ``serve_many`` dispatches on the compiled fault schedule; the ledger's
+  SLA-served rate must clear its floor (0.99 single-fault, 0.95 for the
+  compounding cascade), recovery must land within
+  ``RECOVERY_MAX_WINDOWS`` tail windows of the faults clearing, and the
+  conservation identity (requests == direct + computed + failover +
+  defaults) must hold in EVERY window;
+* **parity** — serving a stream on an all-quiet ``benign_schedule`` must
+  be bit-exact with ``chaos=None`` (embeddings, counters, final cache
+  image) on both cache backends: the chaos hooks cost nothing when off;
+* **hedging** — the ``StragglerHedger`` p99 with/without hedging and its
+  extra-compute cost, reported from the scenario runs.
+
+Writes ``BENCH_chaos.json`` (schema ``ercache-bench-chaos/1``), asserted
+and rendered by CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import Report
+from repro.core import server as srv_lib
+from repro.core.config import CacheConfig, MINUTE_MS
+from repro.core.hashing import Key64
+from repro.ft import chaos as chaos_lib
+from repro.launch.serve import run_serving_chaos
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_chaos.json")
+
+SLA_FLOORS = {"incident": 0.99, "cascade": 0.95, "rolling": 0.99}
+RECOVERY_MAX_WINDOWS = 2     # recovery bound: hit rate back within tol_pp
+DIM = 16
+
+
+def _tower(params, feats):
+    return feats @ params
+
+
+def _parity_probe(backend: str) -> str:
+    """Benign schedule vs chaos=None on the multi-model tier: outputs,
+    counters, and the final cache image must agree bit for bit."""
+    cfgs = tuple(CacheConfig(
+        model_id=m + 1, model_type="ctr", n_buckets=32, ways=4,
+        value_dim=DIM, cache_ttl_ms=5 * MINUTE_MS,
+        failover_ttl_ms=30 * MINUTE_MS, infer_budget_per_step=32.0,
+        backend=backend) for m in range(2))
+    n_steps, batch, n_users = 6, 16, 30
+    rng = np.random.default_rng(11)
+    ids = rng.integers(0, n_users, size=(n_steps, batch))
+    flat = Key64.from_int(ids.reshape(-1).astype(np.int64))
+    keys = Key64(hi=flat.hi.reshape(n_steps, batch),
+                 lo=flat.lo.reshape(n_steps, batch))
+    feats = jnp.asarray(
+        (ids[..., None] * 31 + np.arange(DIM)) % 97, jnp.float32) / 97.0
+    nows = jnp.asarray((np.arange(n_steps) + 1) * 1000, jnp.int32)
+    slots = jnp.asarray(ids % 2, jnp.int32)
+    params = jnp.eye(DIM, dtype=jnp.float32)
+
+    def serve(chaos):
+        srv = srv_lib.MultiModelServer(cfgs=cfgs, tower_fn=_tower,
+                                       miss_budget=batch)
+        st = srv_lib.init_multi_server_state(cfgs, writebuf_capacity=128)
+        return srv.serve_many(params, st, slots, keys, feats, nows, None,
+                              chaos)
+
+    st_a, acc_a, ys_a = serve(None)
+    st_b, acc_b, ys_b = serve(chaos_lib.benign_schedule(n_steps, batch,
+                                                        n_models=2))
+    a = jax.device_get(acc_a)  # erlint: allow[ER002] — the parity fetch
+    b = jax.device_get(acc_b)  # erlint: allow[ER002] — the parity fetch
+    ok = all(np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+             for k in a)
+    ok = ok and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(ys_a[:2], ys_b[:2]))
+    ok = ok and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree_util.tree_leaves(srv_lib.cache_image(st_a)),
+                        jax.tree_util.tree_leaves(srv_lib.cache_image(st_b))))
+    return "exact" if ok else "MISMATCH"
+
+
+def run(report: Report | None = None) -> None:
+    report = report or Report()
+    quick = common.QUICK
+    kw = (dict(steps=120, batch=128, users=128) if quick else {})
+
+    scenarios = {}
+    floors_ok = True
+    for name in chaos_lib.PRESETS:
+        out = run_serving_chaos(scenario=name, log=lambda *a, **k: None,
+                                **kw)
+        floor = SLA_FLOORS[name]
+        rec = out["recovery"]
+        ok = (out["sla_served_rate"] >= floor
+              and out["conservation_ok"]
+              and rec["recovered"]
+              and rec["recovered_after_windows"] <= RECOVERY_MAX_WINDOWS)
+        floors_ok = floors_ok and ok
+        out["sla_floor"] = floor
+        out["floor_ok"] = ok
+        scenarios[name] = out
+        report.add(f"chaos_{name}_sla", 0.0,
+                   f"served={out['sla_served_rate']:.4f} "
+                   f"(floor {floor:g} ok={ok}) "
+                   f"fo={out['failover_serves']} "
+                   f"defaults={out['fallbacks']} retries={out['retries']}")
+        report.add(f"chaos_{name}_recovery", 0.0,
+                   f"{rec['recovered_after_windows']}/{rec['tail_windows']}"
+                   f" windows (bound {RECOVERY_MAX_WINDOWS})")
+        h = out["hedging"]
+        report.add(f"chaos_{name}_hedging", 0.0,
+                   f"p99={h['p99_ms']}ms vs {h['p99_unhedged_ms']}ms "
+                   f"unhedged (+{h['extra_compute_frac']:.1%} compute)")
+
+    parity = {}
+    for backend in ("jnp", "pallas"):
+        try:
+            parity[backend] = _parity_probe(backend)
+        except Exception as e:  # noqa: BLE001 — report, don't crash the run
+            parity[backend] = f"ERROR: {type(e).__name__}"
+        report.add(f"chaos_parity_{backend}", 0.0, parity[backend])
+
+    metrics = {
+        "schema": "ercache-bench-chaos/1",
+        "quick": quick,
+        "sla_floors": SLA_FLOORS,
+        "recovery_max_windows": RECOVERY_MAX_WINDOWS,
+        "floors_ok": floors_ok,
+        "parity": parity,
+        "conservation_ok": all(s["conservation_ok"]
+                               for s in scenarios.values()),
+        "scenarios": scenarios,
+    }
+    if common.WRITE_JSON:
+        with open(JSON_PATH, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+    return None     # owns its JSON; nothing to merge into benchmarks.json
+
+
+if __name__ == "__main__":
+    r = Report()
+    run(r)
+    r.print_csv(header=True)

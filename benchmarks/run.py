@@ -38,11 +38,13 @@ BENCHES = [
     ("restart", "benchmarks.bench_restart"),
     ("shard", "benchmarks.bench_shard"),
     ("regions", "benchmarks.bench_regions"),
+    ("chaos", "benchmarks.bench_chaos"),
 ]
 
 # the fast, serve-path-focused subset run by CI (--quick with no --only)
 QUICK_BENCHES = ("kernel_probe", "serve_path", "multi_model", "eviction",
-                 "overload", "stream", "restart", "shard", "regions")
+                 "overload", "stream", "restart", "shard", "regions",
+                 "chaos")
 
 
 def main() -> None:

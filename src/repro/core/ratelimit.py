@@ -27,7 +27,7 @@ duplicates.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
@@ -140,16 +140,26 @@ def refill(budget: InferBudget, rates: jnp.ndarray, bursts: jnp.ndarray
 
 
 def grant_from(budget: InferBudget, limited: jnp.ndarray,
-               demand: jnp.ndarray) -> jnp.ndarray:
+               demand: jnp.ndarray,
+               blocked: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Per-model grant against a REFILLED bucket: ``min(demand,
     floor(tokens))`` for limited models (trim-don't-drop, the
     :meth:`TokenBucket.admit` contract), demand passthrough otherwise.
     Does NOT spend — callers may tighten the grant further (e.g. the
     serve path's global ``miss_budget`` window) and then :func:`spend`
-    exactly what ran."""
+    exactly what ran.
+
+    ``blocked`` (M,) bool forces a model's grant to 0 regardless of its
+    tokens or limit — a full capacity outage (the chaos engine's
+    ``Outage`` fault family, DESIGN.md §14): during the window every
+    miss defers down the degradation chain. None (the default) grants
+    normally."""
     demand = jnp.asarray(demand, jnp.int32)
     cap = jnp.floor(budget.tokens).astype(jnp.int32)
-    return jnp.where(limited, jnp.minimum(demand, cap), demand)
+    grant = jnp.where(limited, jnp.minimum(demand, cap), demand)
+    if blocked is not None:
+        grant = jnp.where(blocked, jnp.int32(0), grant)
+    return grant
 
 
 def spend(budget: InferBudget, limited: jnp.ndarray, used: jnp.ndarray

@@ -145,12 +145,19 @@ _ACC_PM_I32 = ("per_model_requests", "per_model_direct_hits",
                "per_model_admitted", "per_model_deferred",
                "per_model_failover_serves")
 _ACC_PM_F32 = ("per_model_failover_stale_sum_ms",)
+# Chaos-only additive keys (DESIGN.md §14): the degradation ledger's
+# retry/drop accounting. Only materialized when a fault schedule rides
+# the scan, so the chaos-off accumulator (and trace) is unchanged.
+_ACC_CHAOS_STEP = ("computed_serves", "retries", "retry_successes",
+                   "blackout_write_drops")
+_ACC_CHAOS_SCAN = ("write_ring_drops", "touch_ring_drops")
 
 
-def _zero_acc(n_models: Optional[int] = None) -> dict:
+def _zero_acc(n_models: Optional[int] = None, chaos: bool = False) -> dict:
     """The scan carry's zeroed counter pytree. ``steps`` counts scan
     iterations (one grouped async write per step — the combined_writes
-    analogue)."""
+    analogue). ``chaos`` adds the degradation-ledger keys a fault
+    schedule feeds."""
     acc = {k: jnp.int32(0) for k in _ACC_I32}
     acc.update({k: jnp.float32(0) for k in _ACC_F32})
     acc["steps"] = jnp.int32(0)
@@ -159,42 +166,80 @@ def _zero_acc(n_models: Optional[int] = None) -> dict:
                     for k in _ACC_PM_I32})
         acc.update({k: jnp.zeros((n_models,), jnp.float32)
                     for k in _ACC_PM_F32})
+    if chaos:
+        acc.update({k: jnp.int32(0)
+                    for k in _ACC_CHAOS_STEP + _ACC_CHAOS_SCAN})
     return acc
 
 
 def _acc_add(acc: dict, stats: dict) -> dict:
-    """One scan step's counter contribution — device adds, no host sync."""
-    out = {k: acc[k] + stats[k] for k in acc if k != "steps"}
+    """One scan step's counter contribution — device adds, no host sync.
+    Keys the step's stats don't carry (the scan-level ring-drop counters)
+    pass through untouched; the scan body owns them."""
+    out = {k: (acc[k] + stats[k] if k in stats else acc[k])
+           for k in acc if k != "steps"}
     out["steps"] = acc["steps"] + jnp.int32(1)
     return out
 
 
 def _serve_many_scan(step_fn, flush_fn, state, payload, now_ms,
-                     failure_mask, acc0, *, flush_every: int, collect: bool):
+                     failure_mask, acc0, *, flush_every: int, collect: bool,
+                     chaos=None):
     """The scan driver shared by both servers' ``serve_many``: scan
     ``step_fn(state, payload_row, now, fail) -> ServeResult`` over the
     staged stream, accumulating counters in the carry, folding the flush
     in every ``flush_every`` steps (statically inlined at 1, ``lax.cond``
-    otherwise, 0 = tail only) and always tail-flushing."""
+    otherwise, 0 = tail only) and always tail-flushing.
+
+    ``chaos`` (a compiled ``ft.chaos.ChaosSchedule`` with (S, ...)
+    leading axes) rides the scan as an extra input: each step consumes
+    its own row, ``FlushStall`` windows gate the folded flush off
+    (``lax.cond`` — the tail flush still runs, so recovery always
+    drains), and the ring-overflow drops the stall causes are accounted
+    on device (``write_ring_drops`` / ``touch_ring_drops``: the records
+    each ring's last-capacity-wins contract discarded). With
+    ``chaos=None`` the scan's structure — and trace — is EXACTLY the
+    pre-chaos one."""
     S = now_ms.shape[0]
     flush_every = int(flush_every)
 
+    def flush_pred(i, ch):
+        on = jnp.asarray(True) if flush_every == 1 else (
+            (i + 1) % flush_every == 0)
+        return on if ch is None else on & ~ch.flush_off
+
     def body(carry, x):
         st, acc = carry
-        i, pay, now, fail = x
-        res = step_fn(st, pay, now, fail)
+        if chaos is None:
+            i, pay, now, fail = x
+            ch = None
+            res = step_fn(st, pay, now, fail)
+        else:
+            i, pay, now, fail, ch = x
+            wb0 = jnp.maximum(st.writebuf.count - st.writebuf.capacity, 0)
+            tb0 = jnp.maximum(st.touchbuf.count - st.touchbuf.capacity, 0)
+            res = step_fn(st, pay, now, fail, ch)
         acc = _acc_add(acc, res.stats)
         st = res.state
-        if flush_every == 1:
+        if chaos is not None:
+            # ring-drop deltas BEFORE the (possibly stalled) flush: how
+            # far past capacity this step's appends pushed each ring
+            wb1 = jnp.maximum(st.writebuf.count - st.writebuf.capacity, 0)
+            tb1 = jnp.maximum(st.touchbuf.count - st.touchbuf.capacity, 0)
+            acc["write_ring_drops"] = acc["write_ring_drops"] + (wb1 - wb0)
+            acc["touch_ring_drops"] = acc["touch_ring_drops"] + (tb1 - tb0)
+        if flush_every == 1 and chaos is None:
             st = flush_fn(st, now)
-        elif flush_every > 1:
-            st = jax.lax.cond((i + 1) % flush_every == 0,
+        elif flush_every >= 1:
+            st = jax.lax.cond(flush_pred(i, ch),
                               lambda s: flush_fn(s, now), lambda s: s, st)
         ys = ((res.embeddings, res.source, res.age_ms) if collect
               else None)
         return (st, acc), ys
 
     xs = (jnp.arange(S, dtype=jnp.int32), payload, now_ms, failure_mask)
+    if chaos is not None:
+        xs = xs + (chaos,)
     (state, acc), ys = jax.lax.scan(body, (state, acc0), xs)
     return flush_fn(state, now_ms[-1]), acc, ys
 
@@ -206,7 +251,8 @@ def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
                 admit: Optional[jnp.ndarray] = None,
                 fo_strict_hit: Optional[jnp.ndarray] = None,
                 infer: Optional[jnp.ndarray] = None,
-                src_row: Optional[jnp.ndarray] = None):
+                src_row: Optional[jnp.ndarray] = None,
+                write_drop: Optional[jnp.ndarray] = None):
     """Steps (2)–(4) of the Fig. 3 serve sequence, shared by the single-
     and multi-model servers (step (1), the dual probe, differs):
 
@@ -231,6 +277,12 @@ def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
     uncoalesced bit-exact legacy path). ``admit`` then covers every
     duplicate of an admitted representative while the tower and the token
     budget pay once per distinct user.
+
+    ``write_drop`` (B,) bool (chaos ``BucketBlackout``, DESIGN.md §14)
+    marks rows whose cache INSERT would land in a blacked-out bucket
+    range: their computed embeddings still SERVE this batch but never
+    enter the write buffer, and the drops are counted
+    (``blackout_write_drops``).
 
     Returns (embeddings, source, age, new_writebuf, stats).
     """
@@ -288,8 +340,9 @@ def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
 
     # (4) async cache update: append computed rows to the write buffer ----
     sel_keys = Key64(hi=keys.hi[sel], lo=keys.lo[sel])
+    wb_mask = sel_ok if write_drop is None else sel_ok & ~write_drop[sel]
     new_wb = wb_lib.append(
-        writebuf, sel_keys, towered, now_ms, mask=sel_ok,
+        writebuf, sel_keys, towered, now_ms, mask=wb_mask,
         model_ids=None if model_slots is None else model_slots[sel])
 
     def count(flag):
@@ -334,7 +387,13 @@ def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
         "failover_stale_sum_ms": fo_age_sum,
         "served_age_sum_ms": age_sum,
         "served_age_count": age_served,
+        # tower-served request rows (duplicates included): with
+        # direct_hits / failover_serves / fallbacks this partitions the
+        # batch — the degradation ledger's conservation identity
+        "computed_serves": count(computed),
     }
+    if write_drop is not None:
+        stats["blackout_write_drops"] = count(sel_ok & write_drop[sel])
     if model_slots is not None:
         # per-model (M,) breakdowns for Table-1-style accounting
         def per_model(flag, dtype=jnp.int32):
@@ -355,6 +414,81 @@ def _serve_tail(tower_fn: Callable, miss_budget: int, fallback_value: float,
             / jnp.maximum(per_model(use_fo), 1).astype(jnp.float32))
         stats["per_model_failover_stale_sum_ms"] = pm_stale_sum
     return emb, source, age.astype(jnp.int32), new_wb, stats
+
+
+# ------------------------------------------------------- chaos serve hooks
+# The serve-step side of the chaos engine (DESIGN.md §14). The schedule
+# row is DUCK-TYPED — any pytree with fields ``fail`` (B,) bool,
+# ``retry_fail`` (R, B) bool, ``outage`` (M,) bool, ``blackout_lo``/
+# ``blackout_hi`` () int32 works (ft/chaos.py compiles one) — so core
+# never imports ft. ``flush_off``/``skew_ms`` are consumed by the scan
+# driver / the launcher's clock staging, not here.
+
+def _chaos_blackout(direct, ch):
+    """Mask a bucket-range blackout onto the direct probe: hits whose
+    bucket lands in ``[blackout_lo, blackout_hi)`` become COLD misses
+    (values zeroed, age/way -1 — indistinguishable from a real miss, so
+    touch/coalesce/admission all see a cold row) and the returned (B,)
+    drop mask marks every row whose INSERT would land in the range
+    (``_serve_tail`` drops those appends — the blacked-out shard's write
+    path is down for both tiers, since the shared ring feeds both).
+    Probes hash to the same bucket they insert to, so one mask covers
+    both directions. The failover READ path stays up: it is what absorbs
+    the blacked-out range. An empty range (lo == hi, the benign row)
+    masks nothing — bit-identical values to the unmasked probe."""
+    bl = (direct.bucket >= ch.blackout_lo) & (direct.bucket < ch.blackout_hi)
+    masked = direct._replace(
+        hit=direct.hit & ~bl,
+        values=jnp.where(bl[:, None], 0, direct.values),
+        age_ms=jnp.where(bl, jnp.int32(-1), direct.age_ms),
+        way=jnp.where(bl, jnp.int32(-1), direct.way),
+    )
+    return masked, bl
+
+
+def _chaos_retries(ch, infer, failure_mask, budget, limited,
+                   slots=None, n_models: Optional[int] = None):
+    """Bounded retry-with-backoff for this step's FAILED tower attempts,
+    inside the admission budget (DESIGN.md §14): attempt r is granted
+    from the tokens LEFT after the initial grant (retries charge tokens,
+    so a saturated bucket starves its own retries), and succeeds iff the
+    schedule's ``retry_fail[r]`` row clears it — that row was sampled at
+    the backoff-shifted time with outage windows OR'd in, so a retry
+    landing in an outage re-fails deterministically. Recovered rows get
+    their failure bit CLEARED: the tower output for the row is already
+    materialized in the execution window, so clearing the bit is exactly
+    "the retry produced the embedding" (the sim's tower is
+    deterministic). Unlimited models grant retries freely, matching the
+    initial-grant passthrough.
+
+    Returns (effective failure mask, spent budget, retries, successes);
+    the loop is a static unroll over the policy's max_retries."""
+    still = infer & failure_mask
+    n_att = jnp.int32(0)
+    n_succ = jnp.int32(0)
+    for r in range(ch.retry_fail.shape[0]):
+        if slots is None:
+            s_i = still.astype(jnp.int32)
+            rank = jnp.cumsum(s_i) - s_i                     # exclusive
+            demand = jnp.sum(s_i)[None]
+            grant = rl_lib.grant_from(budget, limited, demand)
+            att = still & (rank < grant[0])
+            spent = jnp.sum(att.astype(jnp.int32))[None]
+        else:
+            rank = _per_model_miss_rank(slots, still, n_models)
+            demand = (jnp.zeros((n_models,), jnp.int32)
+                      .at[slots].add(still.astype(jnp.int32)))
+            grant = rl_lib.grant_from(budget, limited, demand)
+            att = still & (rank < grant[slots])
+            spent = (jnp.zeros((n_models,), jnp.int32)
+                     .at[slots].add(att.astype(jnp.int32)))
+        budget = rl_lib.spend(budget, limited, spent)
+        succ = att & ~ch.retry_fail[r]
+        n_att = n_att + jnp.sum(att.astype(jnp.int32))
+        n_succ = n_succ + jnp.sum(succ.astype(jnp.int32))
+        still = still & ~succ
+    recovered = (infer & failure_mask) & ~still
+    return failure_mask & ~recovered, budget, n_att, n_succ
 
 
 @dataclasses.dataclass(frozen=True)
@@ -391,12 +525,25 @@ class CachedEmbeddingServer:
     # ----------------------------------------------------------------- serve
     def serve_step(self, params, state: ServerState, keys: Key64,
                    features, now_ms, failure_mask: Optional[jnp.ndarray] = None,
-                   ) -> ServeResult:
+                   chaos=None) -> ServeResult:
+        """``chaos`` (None = today's serve path, bit-exact) is one step's
+        fault-schedule row — a duck-typed pytree with ``fail`` (B,),
+        ``retry_fail`` (R, B), ``outage`` ((1,) here), ``blackout_lo``/
+        ``blackout_hi`` scalars (``ft.chaos.slice_schedule`` /
+        ``_serve_many_scan`` produce rows). Fault schedules require
+        admission control: outage and retry accounting live in the token
+        bucket."""
         B = keys.hi.shape[0]
         cfg = self.cfg
         now_ms = jnp.int32(now_ms)
         if failure_mask is None:
             failure_mask = jnp.zeros((B,), bool)
+        if chaos is not None:
+            if not self._admission:
+                raise ValueError(
+                    "chaos fault schedules require admission control: set "
+                    "CacheConfig.infer_budget_per_step")
+            failure_mask = failure_mask | chaos.fail
 
         # (1) direct + failover cache check — ONE dispatch ----------------
         # Both probes read the pre-step state, so they fuse into a single
@@ -416,6 +563,12 @@ class CachedEmbeddingServer:
             direct, fo = cache_lib.lookup_dual(
                 state.direct, state.failover, keys, now_ms, cfg.cache_ttl_ms,
                 fo_ttl, backend=cfg.backend)
+
+        # (1a') bucket-range blackout: mask BEFORE touch/coalesce/admission
+        # so a blacked-out row is a cold miss to every downstream stage.
+        write_drop = None
+        if chaos is not None:
+            direct, write_drop = _chaos_blackout(direct, chaos)
 
         # (1b) record hit coordinates for the deferred last-access bump —
         # an O(B) ring scatter, never a cache-table write on this path.
@@ -452,8 +605,9 @@ class CachedEmbeddingServer:
             demand = jnp.sum(unit.astype(jnp.int32))[None]       # (1,)
             refilled = rl_lib.refill(state.budget, self._budget_rates,
                                      self._budget_bursts)
-            grant = rl_lib.grant_from(refilled, self._budget_limited,
-                                      demand)
+            grant = rl_lib.grant_from(
+                refilled, self._budget_limited, demand,
+                blocked=None if chaos is None else chaos.outage)
             # batch-order rank of each inference unit: first grant[0] are
             # admitted, clipped to the tower's execution window
             u_i = unit.astype(jnp.int32)
@@ -470,12 +624,26 @@ class CachedEmbeddingServer:
         elif cfg.coalesce_misses:
             infer = rep          # window clipping happens in the tail
 
+        # (1e) bounded retry/backoff: re-attempt this step's failed
+        # inferences from the remaining tokens; recovered rows serve
+        # their computed embedding (failure bit cleared before the tail).
+        n_retries = n_retry_succ = None
+        if chaos is not None and chaos.retry_fail.shape[0] > 0:
+            failure_mask, new_budget, n_retries, n_retry_succ = \
+                _chaos_retries(chaos, infer, failure_mask, new_budget,
+                               self._budget_limited)
+
         # (2)–(4): shared serve tail
         emb, source, age, new_wb, stats = _serve_tail(
             self.tower_fn, self.miss_budget, self.fallback_value, params,
             features, keys, now_ms, failure_mask, direct, fo,
             state.writebuf, admit=admit, fo_strict_hit=fo_strict,
-            infer=infer, src_row=src_row)
+            infer=infer, src_row=src_row, write_drop=write_drop)
+        if chaos is not None:
+            stats["retries"] = (jnp.int32(0) if n_retries is None
+                                else n_retries)
+            stats["retry_successes"] = (jnp.int32(0) if n_retry_succ is None
+                                        else n_retry_succ)
         return ServeResult(
             embeddings=emb, source=source, age_ms=age,
             state=ServerState(direct=state.direct, failover=state.failover,
@@ -486,7 +654,7 @@ class CachedEmbeddingServer:
     # ------------------------------------------------------------ serve_many
     def serve_many(self, params, state: ServerState, keys: Key64,
                    features, now_ms, failure_mask: Optional[jnp.ndarray] = None,
-                   *, flush_every: int = 1, collect: bool = True):
+                   chaos=None, *, flush_every: int = 1, collect: bool = True):
         """Device-resident streaming driver (DESIGN.md §9): run S serve
         steps in ONE dispatch via ``lax.scan`` over a pre-staged (S, B)
         stream, flush folded in, counters accumulated on device.
@@ -511,19 +679,23 @@ class CachedEmbeddingServer:
         ``outputs`` is ``(embeddings (S, B, D), source, age_ms)`` or None
         with ``collect=False`` (throughput drivers that never read the
         embeddings back skip materializing them).
+
+        ``chaos`` is a compiled ``ft.chaos.ChaosSchedule`` with S-row
+        fault streams (None = the pre-chaos scan, trace-identical); the
+        accumulator then carries the degradation-ledger keys too.
         """
         now_ms = jnp.asarray(now_ms, jnp.int32)
         if failure_mask is None:
             failure_mask = jnp.zeros(keys.hi.shape, bool)
 
-        def step(st, pay, now, fail):
+        def step(st, pay, now, fail, ch=None):
             k, f = pay
-            return self.serve_step(params, st, k, f, now, fail)
+            return self.serve_step(params, st, k, f, now, fail, ch)
 
         return _serve_many_scan(
             step, self.flush, state, (keys, features), now_ms,
-            failure_mask, _zero_acc(), flush_every=flush_every,
-            collect=collect)
+            failure_mask, _zero_acc(chaos=chaos is not None),
+            flush_every=flush_every, collect=collect, chaos=chaos)
 
     # ----------------------------------------------------------------- flush
     def flush(self, state: ServerState, now_ms) -> ServerState:
@@ -715,18 +887,26 @@ class MultiModelServer:
     # ----------------------------------------------------------------- serve
     def serve_step(self, params, state: MultiServerState, slots,
                    keys: Key64, features, now_ms,
-                   failure_mask: Optional[jnp.ndarray] = None
-                   ) -> ServeResult:
+                   failure_mask: Optional[jnp.ndarray] = None,
+                   chaos=None) -> ServeResult:
         """Serve a MIXED-model batch: ``slots`` (B,) int32 assigns each
         request its model. Steps mirror CachedEmbeddingServer.serve_step
         (the shared ``_serve_tail``); step (1) covers every model in the
         registry in one dispatch, and the stats gain per-model (M,)
-        breakdowns."""
+        breakdowns. ``chaos`` is one fault-schedule row (same contract as
+        the single-model server; ``outage`` is (M,), ``blackout_lo/hi``
+        index POOLED buckets); requires admission control on some model."""
         B = keys.hi.shape[0]
         now_ms = jnp.int32(now_ms)
         slots = jnp.asarray(slots, jnp.int32)
         if failure_mask is None:
             failure_mask = jnp.zeros((B,), bool)
+        if chaos is not None:
+            if not self._any_admission:
+                raise ValueError(
+                    "chaos fault schedules require admission control: set "
+                    "infer_budget_per_step on some model")
+            failure_mask = failure_mask | chaos.fail
 
         # (1) direct + failover check, ALL models — ONE dispatch ----------
         # (the probe policy carries each model's RELAXED failover TTL when
@@ -741,6 +921,11 @@ class MultiModelServer:
             direct, fo = cache_lib.lookup_dual_multi(
                 state.direct, state.failover, self._probe_policy, slots,
                 keys, now_ms, backend=self.backend)
+
+        # (1a') pooled-bucket-range blackout, before every downstream stage
+        write_drop = None
+        if chaos is not None:
+            direct, write_drop = _chaos_blackout(direct, chaos)
 
         # (1b) buffer hit coordinates (POOLED bucket indices) for deferred
         # last-access bumps, gated by each query's per-model touch policy.
@@ -784,8 +969,9 @@ class MultiModelServer:
                       .at[slots].add(unit.astype(jnp.int32)))
             refilled = rl_lib.refill(state.budget, self._budget_rates,
                                      self._budget_bursts)
-            grant = rl_lib.grant_from(refilled, self._budget_limited,
-                                      demand)
+            grant = rl_lib.grant_from(
+                refilled, self._budget_limited, demand,
+                blocked=None if chaos is None else chaos.outage)
             rank = _per_model_miss_rank(slots, unit, self.n_models)
             admit0 = unit & (rank < grant[slots])
             a_i = admit0.astype(jnp.int32)
@@ -802,13 +988,26 @@ class MultiModelServer:
         elif self._any_coalesce:
             infer = unit         # window clipping happens in the tail
 
+        # (1e) bounded retry/backoff from the remaining per-model tokens
+        n_retries = n_retry_succ = None
+        if chaos is not None and chaos.retry_fail.shape[0] > 0:
+            failure_mask, new_budget, n_retries, n_retry_succ = \
+                _chaos_retries(chaos, infer, failure_mask, new_budget,
+                               self._budget_limited, slots=slots,
+                               n_models=self.n_models)
+
         # (2)–(4): shared serve tail, with model-tagged buffer records
         emb, source, age, new_wb, stats = _serve_tail(
             self.tower_fn, self.miss_budget, self.fallback_value, params,
             features, keys, now_ms, failure_mask, direct, fo,
             state.writebuf, model_slots=slots, n_models=self.n_models,
             admit=admit, fo_strict_hit=fo_strict, infer=infer,
-            src_row=src_row)
+            src_row=src_row, write_drop=write_drop)
+        if chaos is not None:
+            stats["retries"] = (jnp.int32(0) if n_retries is None
+                                else n_retries)
+            stats["retry_successes"] = (jnp.int32(0) if n_retry_succ is None
+                                        else n_retry_succ)
         return ServeResult(
             embeddings=emb, source=source, age_ms=age,
             state=MultiServerState(direct=state.direct,
@@ -821,25 +1020,26 @@ class MultiModelServer:
     def serve_many(self, params, state: MultiServerState, slots,
                    keys: Key64, features, now_ms,
                    failure_mask: Optional[jnp.ndarray] = None,
-                   *, flush_every: int = 1, collect: bool = True):
+                   chaos=None, *, flush_every: int = 1, collect: bool = True):
         """The streaming scan driver for the multi-model tier: S
         mixed-model serve steps per dispatch. Same contract as
         :meth:`CachedEmbeddingServer.serve_many` with an extra (S, B)
         ``slots`` stream; the accumulated counters include the per-model
-        (M,) breakdowns."""
+        (M,) breakdowns. ``chaos`` is a compiled S-row fault schedule
+        (None = trace-identical to the pre-chaos scan)."""
         now_ms = jnp.asarray(now_ms, jnp.int32)
         slots = jnp.asarray(slots, jnp.int32)
         if failure_mask is None:
             failure_mask = jnp.zeros(keys.hi.shape, bool)
 
-        def step(st, pay, now, fail):
+        def step(st, pay, now, fail, ch=None):
             sl, k, f = pay
-            return self.serve_step(params, st, sl, k, f, now, fail)
+            return self.serve_step(params, st, sl, k, f, now, fail, ch)
 
         return _serve_many_scan(
             step, self.flush, state, (slots, keys, features), now_ms,
-            failure_mask, _zero_acc(self.n_models),
-            flush_every=flush_every, collect=collect)
+            failure_mask, _zero_acc(self.n_models, chaos=chaos is not None),
+            flush_every=flush_every, collect=collect, chaos=chaos)
 
     # ----------------------------------------------------------------- flush
     def flush(self, state: MultiServerState, now_ms) -> MultiServerState:

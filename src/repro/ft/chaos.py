@@ -1,0 +1,366 @@
+"""Chaos engine: composable fault schedules staged as device-resident
+scan inputs (DESIGN.md §14).
+
+The paper's reliability claim (§3.6–3.7, Table 3) is about *compounding*
+failures — an inference-failure burst during a capacity outage while a
+cache shard is dark. The point tools (``--overload``, ``--restart``,
+``--regions --drain``) each inject one fault; this module composes them.
+
+The mechanism is the PR 9 ``stage_drain_schedule`` trick, generalized: a
+scenario — a list of :class:`Fault` events with wall-clock windows — is
+**compiled on the host** into per-step device arrays (one leading (S,)
+axis per fault family) and threaded through ``serve_many``'s ``lax.scan``
+as ordinary scan inputs. The whole multi-fault timeline then replays
+through chunked single-dispatch scans with ONE stats fetch per chunk and
+no per-step host sync; invalid scenarios fail loudly at staging time,
+never inside a trace.
+
+Fault families (all windows are half-open ``[t0_ms, t1_ms)`` on the
+serve clock):
+
+* :class:`InferFailure` — per-model Bernoulli inference-failure bursts
+  (the Table 3 regimes; ``model=None`` hits every model).
+* :class:`Outage` — a model's inference capacity vanishes: its admission
+  grant is forced to 0 (``ratelimit.grant_from(blocked=...)``), every
+  miss defers down the degradation chain.
+* :class:`BucketBlackout` — a contiguous range of the direct tier's
+  (pooled) bucket space goes dark, the shard-loss analogue: probes in
+  the range miss and the corresponding cache inserts are dropped (with
+  accounting) — the failover tier absorbs the reads.
+* :class:`FlushStall` — the async flush stops running; the write/touch
+  rings ride through and oldest records drop once capacity is exceeded
+  (counted in the ledger), exactly the ring contract.
+* :class:`ClockSkew` — an offset injected into the TTL ``now`` stream
+  (operator clock jumps); age math must stay exact (the ER004
+  int64-widen invariant, exercised dynamically).
+
+On top, :class:`RetryPolicy` schedules bounded retry-with-backoff for
+failed inferences INSIDE the admission budget: each retry attempt is
+evaluated at its backoff-shifted wall time against the same fault
+timeline — so a retry that lands inside an outage window re-fails
+deterministically — and every attempt that runs charges a token
+(``ratelimit.spend``), never more than the bucket holds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------- fault spec
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """A wall-clock fault window ``[t0_ms, t1_ms)``."""
+
+    t0_ms: int
+    t1_ms: int
+
+    def active(self, now_ms: int) -> bool:
+        return self.t0_ms <= now_ms < self.t1_ms
+
+
+@dataclasses.dataclass(frozen=True)
+class InferFailure(Fault):
+    """Inference-failure burst: tower calls fail with ``rate`` inside the
+    window (``model=None`` → every model)."""
+
+    rate: float = 1.0
+    model: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Outage(Fault):
+    """Full capacity outage for one model: admission grant forced to 0."""
+
+    model: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketBlackout(Fault):
+    """Direct-tier bucket range ``[lo, hi)`` (pooled index space on the
+    multi-model tier) goes dark: probes miss, inserts drop."""
+
+    lo: int = 0
+    hi: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushStall(Fault):
+    """The async flush stops running for the window (delay/drop: rings
+    absorb until capacity, then drop oldest — accounted)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockSkew(Fault):
+    """``skew_ms`` added to the TTL ``now`` stream inside the window."""
+
+    skew_ms: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry-with-backoff for failed inferences.
+
+    Attempt ``r`` (1-based) of a step at wall time ``t`` is evaluated at
+    ``t + backoff_ms * multiplier**(r-1)`` against the fault timeline; the
+    compiler pre-samples each attempt's failure there (outage windows
+    force failure). Every attempt that runs charges one admission token.
+    """
+
+    max_retries: int = 2
+    backoff_ms: int = 500
+    multiplier: int = 2
+
+    def attempt_offset_ms(self, r: int) -> int:
+        """Backoff delay of 1-based attempt ``r`` after its serve step."""
+        return int(self.backoff_ms * self.multiplier ** (r - 1))
+
+
+# ------------------------------------------------------------- the schedule
+class ChaosSchedule(NamedTuple):
+    """A compiled scenario: per-step device arrays, ready to ride through
+    ``serve_many``'s scan as inputs (``lax.scan`` slices the leading (S,)
+    axis, handing each serve step its own row — the per-step view the
+    servers consume as the ``chaos`` argument)."""
+
+    fail: jnp.ndarray          # (S, B) bool — first-attempt tower failures
+    retry_fail: jnp.ndarray    # (S, R, B) bool — per-attempt re-failures
+                               # at backoff-shifted times (R may be 0)
+    outage: jnp.ndarray        # (S, M) bool — admission grant forced to 0
+    blackout_lo: jnp.ndarray   # (S,) int32 — dark bucket range [lo, hi)
+    blackout_hi: jnp.ndarray   # (S,) int32 — (lo == hi → no blackout)
+    flush_off: jnp.ndarray     # (S,) bool — skip the folded flush
+    skew_ms: jnp.ndarray       # (S,) int32 — clock skew on the now stream
+
+    @property
+    def n_steps(self) -> int:
+        return self.fail.shape[0]
+
+    @property
+    def n_retries(self) -> int:
+        return self.retry_fail.shape[1]
+
+
+def slice_schedule(sched: ChaosSchedule, lo: int, hi: int) -> ChaosSchedule:
+    """The ``[lo, hi)`` step span of a compiled schedule — what a chunked
+    driver hands each ``serve_many`` dispatch."""
+    return jax.tree_util.tree_map(lambda a: a[lo:hi], sched)
+
+
+def skewed_now(sched: ChaosSchedule, now_ms) -> jnp.ndarray:
+    """The TTL clock the serve path should run on: the staged (S,) step
+    clock plus the scenario's injected skew."""
+    return (jnp.asarray(now_ms, jnp.int32)
+            + jnp.asarray(sched.skew_ms, jnp.int32))
+
+
+def _check_window(f: Fault) -> None:
+    if f.t1_ms <= f.t0_ms:
+        raise ValueError(f"{type(f).__name__}: empty window "
+                         f"[{f.t0_ms}, {f.t1_ms})")
+
+
+def compile_schedule(faults: Sequence[Fault], now_ms,
+                     batch: int, *, n_models: int = 1,
+                     n_buckets: int, slots=None,
+                     base_fail_rate: float = 0.0,
+                     retry: Optional[RetryPolicy] = None,
+                     seed: int = 0) -> ChaosSchedule:
+    """Compile a scenario into per-step scan inputs (host-side numpy, one
+    ``jnp.asarray`` per family at the end — the ``stage_drain_schedule``
+    pattern).
+
+    ``now_ms`` is the (S,) per-step serve clock BEFORE skew (the driver
+    serves on :func:`skewed_now`). ``slots`` is the (S, B) model-slot
+    matrix (None → single-model, all slot 0). ``n_buckets`` is the direct
+    tier's bucket count — POOLED (``M * n_buckets_stack``) on the
+    multi-model tier — used to validate blackout ranges. Invalid
+    scenarios (empty windows, out-of-range models or buckets, overlapping
+    blackouts or skews) raise HERE, at staging time, never inside a jit
+    trace.
+    """
+    now = np.asarray(now_ms, np.int64)
+    S = int(now.shape[0])
+    if slots is None:
+        slots_np = np.zeros((S, batch), np.int32)
+    else:
+        slots_np = np.asarray(slots, np.int32)
+        if slots_np.shape != (S, batch):
+            raise ValueError(f"slots shape {slots_np.shape} != {(S, batch)}")
+        if slots_np.size and (slots_np.min() < 0
+                              or slots_np.max() >= n_models):
+            raise ValueError("slots reference models outside "
+                             f"[0, {n_models})")
+
+    by_family: dict = {InferFailure: [], Outage: [], BucketBlackout: [],
+                       FlushStall: [], ClockSkew: []}
+    for f in faults:
+        _check_window(f)
+        for fam, lst in by_family.items():
+            if isinstance(f, fam):
+                lst.append(f)
+                break
+        else:
+            raise TypeError(f"unknown fault family: {type(f).__name__}")
+    for f in by_family[InferFailure]:
+        if not (0.0 <= f.rate <= 1.0):
+            raise ValueError(f"InferFailure rate {f.rate} outside [0, 1]")
+        if f.model is not None and not (0 <= f.model < n_models):
+            raise ValueError(f"InferFailure model {f.model} outside "
+                             f"[0, {n_models})")
+    for f in by_family[Outage]:
+        if not (0 <= f.model < n_models):
+            raise ValueError(f"Outage model {f.model} outside "
+                             f"[0, {n_models})")
+    for f in by_family[BucketBlackout]:
+        if not (0 <= f.lo < f.hi <= n_buckets):
+            raise ValueError(f"BucketBlackout [{f.lo}, {f.hi}) outside "
+                             f"[0, {n_buckets}]")
+
+    def overlap(events) -> bool:
+        spans = sorted((f.t0_ms, f.t1_ms) for f in events)
+        return any(a[1] > b[0] for a, b in zip(spans, spans[1:]))
+
+    # Two simultaneous blackouts/skews have no single (lo, hi)/offset per
+    # step — a scenario bug, rejected at staging (bursts/outages compose).
+    if overlap(by_family[BucketBlackout]):
+        raise ValueError("overlapping BucketBlackout windows")
+    if overlap(by_family[ClockSkew]):
+        raise ValueError("overlapping ClockSkew windows")
+
+    R = 0 if retry is None else int(retry.max_retries)
+    if R < 0:
+        raise ValueError(f"max_retries must be >= 0, got {R}")
+
+    rng = np.random.default_rng(seed)
+
+    def fail_rate_at(t: int) -> np.ndarray:
+        """(M,) per-model failure probability at wall time ``t``: the base
+        rate, maxed with every active burst (compounding bursts take the
+        worst — probabilities don't add)."""
+        rate = np.full(n_models, base_fail_rate, np.float64)
+        for f in by_family[InferFailure]:
+            if f.active(t):
+                if f.model is None:
+                    rate = np.maximum(rate, f.rate)
+                else:
+                    rate[f.model] = max(rate[f.model], f.rate)
+        return rate
+
+    def outage_at(t: int) -> np.ndarray:
+        out = np.zeros(n_models, bool)
+        for f in by_family[Outage]:
+            if f.active(t):
+                out[f.model] = True
+        return out
+
+    fail = np.zeros((S, batch), bool)
+    retry_fail = np.zeros((S, R, batch), bool)
+    outage = np.zeros((S, n_models), bool)
+    bl_lo = np.zeros(S, np.int32)
+    bl_hi = np.zeros(S, np.int32)
+    flush_off = np.zeros(S, bool)
+    skew = np.zeros(S, np.int32)
+    for s in range(S):
+        t = int(now[s])
+        sl = slots_np[s]
+        fail[s] = rng.uniform(size=batch) < fail_rate_at(t)[sl]
+        for r in range(R):
+            tr = t + retry.attempt_offset_ms(r + 1)
+            # a retry landing in an outage window re-fails DETERMINISTICALLY
+            retry_fail[s, r] = ((rng.uniform(size=batch)
+                                 < fail_rate_at(tr)[sl])
+                                | outage_at(tr)[sl])
+        outage[s] = outage_at(t)
+        for f in by_family[BucketBlackout]:
+            if f.active(t):
+                bl_lo[s], bl_hi[s] = f.lo, f.hi
+        flush_off[s] = any(f.active(t) for f in by_family[FlushStall])
+        for f in by_family[ClockSkew]:
+            if f.active(t):
+                skew[s] = f.skew_ms
+    return ChaosSchedule(
+        fail=jnp.asarray(fail),
+        retry_fail=jnp.asarray(retry_fail),
+        outage=jnp.asarray(outage),
+        blackout_lo=jnp.asarray(bl_lo),
+        blackout_hi=jnp.asarray(bl_hi),
+        flush_off=jnp.asarray(flush_off),
+        skew_ms=jnp.asarray(skew),
+    )
+
+
+def benign_schedule(n_steps: int, batch: int, *, n_models: int = 1
+                    ) -> ChaosSchedule:
+    """An all-quiet schedule: every fault family staged but inactive.
+    Serving with it must be BIT-EXACT with ``chaos=None`` (the parity
+    gate bench_chaos asserts)."""
+    return compile_schedule([], np.zeros(n_steps, np.int64), batch,
+                            n_models=n_models, n_buckets=1)
+
+
+# ------------------------------------------------------- scenario presets
+def preset_faults(name: str, horizon_ms: int, *, n_models: int = 1,
+                  n_buckets: int, fail_rate: float = 0.9,
+                  skew_ms: int = 90_000) -> List[Fault]:
+    """The named scenarios ``launch/serve.py --chaos`` ships.
+
+    All faults live inside the middle ``[0.3, 0.6)`` of the horizon so
+    every run has a warm pre-fault baseline and a recovery tail the
+    ledger can assert against.
+
+    * ``incident`` — ONE fault: an inference-failure burst across the
+      registry (the Table 3 regime; SLA floor 0.99).
+    * ``cascade`` — compounding faults: the burst PLUS a model-0 capacity
+      outage, a direct-tier bucket blackout over the lower quarter of the
+      (pooled) bucket space, a flush stall, and forward clock skew — all
+      overlapping (SLA floor 0.95).
+    * ``rolling`` — a rolling restart: each model's capacity outage in
+      turn, back to back across the window (single fault at any instant;
+      SLA floor 0.99).
+    """
+    lo = int(horizon_ms * 0.3)
+    hi = int(horizon_ms * 0.6)
+    if name == "incident":
+        return [InferFailure(lo, hi, rate=fail_rate)]
+    if name == "cascade":
+        mid = (lo + hi) // 2
+        return [
+            InferFailure(lo, hi, rate=fail_rate),
+            Outage(lo, mid, model=0),
+            BucketBlackout(lo, hi, lo=0, hi=max(n_buckets // 4, 1)),
+            FlushStall(lo, mid),
+            ClockSkew(mid, hi, skew_ms=skew_ms),
+        ]
+    if name == "rolling":
+        span = max((hi - lo) // n_models, 1)
+        return [Outage(lo + m * span, min(lo + (m + 1) * span, hi), model=m)
+                for m in range(n_models)]
+    raise ValueError(f"unknown chaos scenario {name!r}; "
+                     "presets: incident, cascade, rolling")
+
+
+PRESETS = ("incident", "cascade", "rolling")
+
+
+def fault_windows(faults: Sequence[Fault], horizon_ms: int
+                  ) -> List[Tuple[int, int, str]]:
+    """Cut ``[0, horizon_ms)`` at every fault edge: the degradation
+    ledger's reporting windows. Each span is labeled ``quiet`` or by the
+    (sorted, deduped) fault families active inside it."""
+    edges = {0, int(horizon_ms)}
+    for f in faults:
+        _check_window(f)
+        edges.add(int(min(f.t0_ms, horizon_ms)))
+        edges.add(int(min(f.t1_ms, horizon_ms)))
+    cuts = sorted(e for e in edges if 0 <= e <= horizon_ms)
+    out = []
+    for a, b in zip(cuts, cuts[1:]):
+        fams = sorted({type(f).__name__ for f in faults
+                       if f.t0_ms < b and a < f.t1_ms})
+        out.append((a, b, "+".join(fams) if fams else "quiet"))
+    return out

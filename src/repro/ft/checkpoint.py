@@ -34,6 +34,7 @@ import json
 import os
 import secrets
 import shutil
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -41,6 +42,13 @@ import numpy as np
 
 PyTree = Any
 _COMMITTED = "COMMITTED"
+
+
+class ChecksumError(ValueError):
+    """A restored leaf's content hash disagrees with the manifest: silent
+    bit-rot in a COMMITTED shard. Restore paths that have a cold fallback
+    (ft/snapshot.restore_server) catch this and fail open to cold — a
+    corrupt warm start must never serve garbage embeddings."""
 
 
 def _leaf_paths(tree: PyTree) -> List[Tuple[str, Any]]:
@@ -112,6 +120,11 @@ def save(directory: str, step: int, tree: PyTree,
     for key, leaf in leaves:
         arr = np.asarray(leaf)
         entry = {"shape": list(arr.shape), "dtype": str(arr.dtype),
+                 # Whole-leaf content hash, computed BEFORE row-splitting so
+                 # restore verifies the reassembled array end-to-end (a part
+                 # landing at the wrong offset fails too, not just bit-rot).
+                 "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                 & 0xFFFFFFFF,
                  "parts": []}
         if arr.nbytes > max_shard_bytes and arr.ndim >= 1 and arr.shape[0] > 1:
             rows_per = max(1, int(max_shard_bytes
@@ -205,6 +218,15 @@ def restore_raw(directory: str, step: int) -> Dict[str, np.ndarray]:
             else:
                 lo, hi = part["rows"]
                 arr[lo:hi] = data
+        want = entry.get("crc32")   # absent in pre-checksum checkpoints
+        if want is not None:
+            got = zlib.crc32(np.ascontiguousarray(arr).tobytes()) \
+                & 0xFFFFFFFF
+            if got != want:
+                raise ChecksumError(
+                    f"checkpoint leaf {key!r} at step {step}: crc32 "
+                    f"{got:#010x} != manifest {want:#010x} (bit-rot or "
+                    "misassembled parts)")
         out_by_key[key] = arr
     return out_by_key
 

@@ -15,7 +15,7 @@ report p99 with/without hedging.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -47,19 +47,26 @@ class FailureInjector:
         """(n,) bool — True = this inference request fails."""
         return self._rng.uniform(size=n) < self.rate_at(now_ms)
 
+    def kill_steps(self, step_times_ms, checkpoint_every: int
+                   ) -> List[int]:
+        """EVERY checkpoint-boundary step whose clock falls inside a
+        burst window, in stream order — the rolling-restart chaos
+        scenario (launch/serve.py --chaos rolling) kills at each one in
+        turn. Empty when no boundary lands in a window."""
+        return [s for s in range(checkpoint_every, len(step_times_ms),
+                                 checkpoint_every)
+                if self.in_burst(int(step_times_ms[s]))]
+
     def kill_step(self, step_times_ms, checkpoint_every: int
                   ) -> Optional[int]:
-        """The first checkpoint-boundary step whose clock falls inside a
+        """The FIRST checkpoint-boundary step whose clock falls inside a
         burst window — where the kill/restore harness (launch/serve.py
         --restart) crashes the server: a process death mid-incident,
         landing exactly on a snapshot boundary so the restore's recovery
         is measured from a committed checkpoint. None when no boundary
-        lands in a window."""
-        for s in range(checkpoint_every, len(step_times_ms),
-                       checkpoint_every):
-            if self.in_burst(int(step_times_ms[s])):
-                return s
-        return None
+        lands in a window (the head of :meth:`kill_steps`)."""
+        steps = self.kill_steps(step_times_ms, checkpoint_every)
+        return steps[0] if steps else None
 
 
 @dataclasses.dataclass

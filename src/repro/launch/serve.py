@@ -59,8 +59,9 @@ from repro.core.metrics import ServingCounters, power_savings
 from repro.data.access_patterns import (FIG6_KNOTS, InterArrivalDist,
                                         StreamConfig, generate_stream_fast,
                                         simulate_hit_rate, thin_diurnal)
+from repro.ft import chaos as chaos_lib
 from repro.ft import snapshot as snap_lib
-from repro.ft.failure import FailureInjector
+from repro.ft.failure import FailureInjector, StragglerHedger
 from repro.models import recsys as rec_lib
 
 
@@ -591,6 +592,241 @@ def run_serving_restart(arch: str = "sasrec", pre_steps: int = 240,
     return out
 
 
+def _window_steps(windows_ms, nows_ms, tail_win: int):
+    """Map the fault-edge windows (ms spans from ``chaos.fault_windows``)
+    onto step ranges of the staged clock, subdividing the trailing quiet
+    span into ``tail_win``-step recovery windows (the bounded tail the
+    ledger asserts recovery within). Returns [(lo, hi, label), ...] in
+    step indices; empty spans are dropped."""
+    nows = np.asarray(nows_ms, np.int64)
+    spans = []
+    for a, b, label in windows_ms:
+        steps = np.nonzero((nows >= a) & (nows < b))[0]
+        if steps.size:
+            spans.append((int(steps[0]), int(steps[-1]) + 1, label))
+    if spans and spans[-1][2] == "quiet" and len(spans) > 1:
+        lo, hi, _ = spans.pop()
+        for s in range(lo, hi, tail_win):
+            spans.append((s, min(s + tail_win, hi), "recovery"))
+    return spans
+
+
+def run_serving_chaos(arch: str = "sasrec", scenario: str = "incident",
+                      n_models: int = 4, steps: int = 240,
+                      users: int = 1000, batch: int = 256,
+                      step_ms: int = 250, ttl_min: float = 0.2,
+                      failover_ttl_h: float = 2.0, zipf_a: float = 1.2,
+                      n_buckets: int = 1 << 10, backend: str = "jnp",
+                      chunk_steps: int = 64, fail_rate: float = 0.9,
+                      max_retries: int = 2, backoff_ms: int = 500,
+                      hedge_after_ms: float = 25.0,
+                      checkpoint_every: int = 40, recovery_win: int = 24,
+                      recovery_tol_pp: float = 2.0, seed: int = 0,
+                      log=print):
+    """The chaos engine end to end (DESIGN.md §14): one of the preset
+    multi-fault scenarios (``incident`` / ``cascade`` / ``rolling``)
+    compiled into a device-resident fault schedule and replayed against
+    the multi-model tier through chunked ``serve_many`` dispatches — the
+    whole compounding-failure timeline runs with ONE stats fetch per
+    chunk and no per-step host sync.
+
+    A Zipf-skewed stream over ``n_models`` (round-robin fan-out, the
+    ``--multi`` shape) serves on the schedule's SKEWED clock
+    (``ClockSkew`` faults move the TTL ``now`` stream); every model runs
+    admission control (ample budget — ``Outage`` windows force its grant
+    to 0 regardless) with bounded retry/backoff for failed inferences.
+    The degradation ledger reports every fault window and the recovery
+    tail separately: SLA-served rate, failover serves + staleness,
+    defaults, retry and drop accounting, and the conservation identity
+    (requests == direct + computed + failover + defaults). The
+    ``StragglerHedger`` rides along: per-window inference latencies are
+    sampled with and without hedging (paired draws) so the report carries
+    the p99 win and its ``extra_compute_frac`` cost.
+
+    Recovery is asserted against the PRE-fault baseline: the first
+    ``recovery_win``-step tail window whose hit rate is back within
+    ``recovery_tol_pp`` of the pre-fault hit rate marks the recovery
+    point (``recovered_after_windows``); bench_chaos CI-asserts it is
+    bounded. ``rolling`` additionally reports the checkpoint boundaries
+    ``FailureInjector.kill_steps`` lands inside the outage windows — the
+    kill points a rolling-restart harness would use."""
+    tower_cfg, params, tower_fn, features_of = build_tower(arch)
+    cfgs = [CacheConfig(
+        model_id=m + 1, model_type="ctr",
+        cache_ttl_ms=int(ttl_min * MINUTE_MS),
+        failover_ttl_ms=int(failover_ttl_h * HOUR_MS),
+        n_buckets=n_buckets, ways=8, value_dim=tower_cfg.user_embed_dim,
+        backend=backend, infer_budget_per_step=float(batch),
+        failover_ttl_relax=None) for m in range(n_models)]
+    server = srv_lib.MultiModelServer(cfgs=tuple(cfgs), tower_fn=tower_fn,
+                                      miss_budget=batch)
+    state = srv_lib.init_multi_server_state(cfgs,
+                                            writebuf_capacity=batch * 4)
+
+    rng = np.random.default_rng(seed)
+    ids_all = rng.zipf(zipf_a, size=(steps, batch)).astype(np.int64) % users
+    nows_all = (np.arange(steps, dtype=np.int64) + 1) * step_ms
+    slots_all = ((np.arange(batch)[None, :] + np.arange(steps)[:, None])
+                 % n_models).astype(np.int32)
+    horizon_ms = int(nows_all[-1]) + step_ms
+
+    # the POOLED direct bucket space (every model same-sized here)
+    pooled = n_models * n_buckets
+    faults = chaos_lib.preset_faults(scenario, horizon_ms,
+                                     n_models=n_models, n_buckets=pooled,
+                                     fail_rate=fail_rate)
+    sched = chaos_lib.compile_schedule(
+        faults, nows_all, batch, n_models=n_models, n_buckets=pooled,
+        slots=slots_all, retry=chaos_lib.RetryPolicy(
+            max_retries=max_retries, backoff_ms=backoff_ms),
+        seed=seed + 1)
+    snow = np.asarray(chaos_lib.skewed_now(sched, nows_all))
+    spans = _window_steps(chaos_lib.fault_windows(faults, horizon_ms),
+                          nows_all, recovery_win)
+
+    windows = []
+    lat_hedged, lat_plain, extra_frac = [], [], []
+    t0 = time.perf_counter()
+    for wi, (w_lo, w_hi, label) in enumerate(spans):
+        acc_sum: dict = {}
+        for lo, n in _chunks(w_hi - w_lo, chunk_steps):
+            a = w_lo + lo
+            keys, feats, nows = _stage_steps(ids_all[a:a + n],
+                                             snow[a:a + n], features_of)
+            state, acc, _ = server.jit_serve_many(
+                params, state, jnp.asarray(slots_all[a:a + n]), keys,
+                feats, nows, None, chaos_lib.slice_schedule(sched, a, a + n),
+                flush_every=1, collect=False)
+            s = jax.device_get(acc)  # erlint: allow[ER002] — one per chunk
+            for k, v in s.items():
+                if np.ndim(v) == 0:
+                    acc_sum[k] = acc_sum.get(k, 0) + float(v)
+        g = lambda k: acc_sum.get(k, 0.0)
+        req = max(g("requests"), 1.0)
+        # paired latency draws: same rng seed, hedged samples the backup
+        n_lat = int(g("tower_inferences") + g("retries"))
+        p99 = p99_plain = None
+        if n_lat:
+            hd = StragglerHedger(hedge_after_ms=hedge_after_ms,
+                                 seed=seed + 100 + wi).latencies(n_lat)
+            pl = StragglerHedger(hedge_after_ms=None,
+                                 seed=seed + 100 + wi).latencies(n_lat)
+            lat_hedged.append(hd["latency_ms"])
+            lat_plain.append(pl["latency_ms"])
+            extra_frac.append((hd["extra_compute_frac"], n_lat))
+            p99 = round(float(np.percentile(hd["latency_ms"], 99)), 2)
+            p99_plain = round(float(np.percentile(pl["latency_ms"], 99)), 2)
+        row = {
+            "label": label, "steps": [w_lo, w_hi],
+            "t0_ms": int(nows_all[w_lo]), "t1_ms": int(nows_all[w_hi - 1]),
+            "requests": int(g("requests")),
+            "hit_rate": round(g("direct_hits") / req, 4),
+            "sla_served_rate": round(1.0 - g("fallbacks") / req, 4),
+            "deferred": int(g("deferred")),
+            "failover_serves": int(g("failover_serves")),
+            "mean_failover_stale_ms": round(
+                g("failover_stale_sum_ms")
+                / max(g("failover_serves"), 1), 1),
+            "fallbacks": int(g("fallbacks")),
+            "tower_inferences": int(g("tower_inferences")),
+            "tower_failures": int(g("tower_failures")),
+            "computed_serves": int(g("computed_serves")),
+            "retries": int(g("retries")),
+            "retry_successes": int(g("retry_successes")),
+            "blackout_write_drops": int(g("blackout_write_drops")),
+            "write_ring_drops": int(g("write_ring_drops")),
+            "touch_ring_drops": int(g("touch_ring_drops")),
+            "p99_ms": p99, "p99_unhedged_ms": p99_plain,
+            "conservation_ok": int(g("requests")) == int(
+                g("direct_hits") + g("computed_serves")
+                + g("failover_serves") + g("fallbacks")),
+        }
+        windows.append(row)
+    wall = time.perf_counter() - t0
+
+    tot = lambda k: sum(w[k] for w in windows)
+    requests = tot("requests")
+    sla = 1.0 - tot("fallbacks") / max(requests, 1)
+    pre = next((w for w in windows if w["label"] == "quiet"), None)
+    tail = [w for w in windows if w["label"] == "recovery"]
+    recovered_after = None
+    if pre is not None:
+        floor_hit = pre["hit_rate"] - recovery_tol_pp / 100.0
+        for i, w in enumerate(tail):
+            if w["hit_rate"] >= floor_hit:
+                recovered_after = i + 1
+                break
+    lat_h = (np.concatenate(lat_hedged) if lat_hedged
+             else np.zeros(1))
+    lat_p = (np.concatenate(lat_plain) if lat_plain else np.zeros(1))
+    n_extra = max(sum(n for _, n in extra_frac), 1)
+    out = {
+        "scenario": scenario, "arch": arch, "backend": backend,
+        "n_models": n_models, "steps": steps, "batch": batch,
+        "users": users, "step_ms": step_ms, "zipf_a": zipf_a,
+        "ttl_min": ttl_min, "n_buckets": n_buckets,
+        "fail_rate": fail_rate, "max_retries": max_retries,
+        "backoff_ms": backoff_ms, "horizon_ms": horizon_ms,
+        "requests": requests,
+        "sla_served_rate": round(sla, 5),
+        "fallbacks": tot("fallbacks"),
+        "failover_serves": tot("failover_serves"),
+        "retries": tot("retries"),
+        "retry_successes": tot("retry_successes"),
+        "blackout_write_drops": tot("blackout_write_drops"),
+        "write_ring_drops": tot("write_ring_drops"),
+        "touch_ring_drops": tot("touch_ring_drops"),
+        "conservation_ok": all(w["conservation_ok"] for w in windows),
+        "windows": windows,
+        "recovery": {
+            "pre_fault_hit_rate": None if pre is None else pre["hit_rate"],
+            "tol_pp": recovery_tol_pp,
+            "tail_windows": len(tail),
+            "recovered_after_windows": recovered_after,
+            "recovered": recovered_after is not None,
+        },
+        "hedging": {
+            "hedge_after_ms": hedge_after_ms,
+            "p99_ms": round(float(np.percentile(lat_h, 99)), 2),
+            "p99_unhedged_ms": round(float(np.percentile(lat_p, 99)), 2),
+            "extra_compute_frac": round(
+                sum(f * n for f, n in extra_frac) / n_extra, 4),
+        },
+        "wall_s": round(wall, 2),
+    }
+    if scenario == "rolling":
+        outages = [f for f in faults if isinstance(f, chaos_lib.Outage)]
+        inj = FailureInjector(
+            base_rate=0.0, burst_rate=1.0,
+            burst_windows_ms=tuple((f.t0_ms, f.t1_ms) for f in outages),
+            seed=seed)
+        out["kill_boundaries"] = inj.kill_steps(nows_all, checkpoint_every)
+    log(f"[serve-chaos {arch}] scenario={scenario} models={n_models}"
+        f" steps={steps} requests={requests}"
+        f" sla_served={out['sla_served_rate']:.4f}"
+        f" retries={out['retries']}"
+        f" (succ {out['retry_successes']})"
+        f" conservation={'ok' if out['conservation_ok'] else 'VIOLATED'}"
+        f" p99={out['hedging']['p99_ms']}ms"
+        f" (unhedged {out['hedging']['p99_unhedged_ms']}ms,"
+        f" +{out['hedging']['extra_compute_frac']:.1%} compute)"
+        f" ({wall:.1f}s)")
+    for w in windows:
+        log(f"  [{w['t0_ms']:>7}-{w['t1_ms']:>7}ms] {w['label']:<32}"
+            f" hit={w['hit_rate']:.3f} sla={w['sla_served_rate']:.4f}"
+            f" defer={w['deferred']} fo={w['failover_serves']}"
+            f" (stale {w['mean_failover_stale_ms']:.0f}ms)"
+            f" defaults={w['fallbacks']} retry={w['retries']}"
+            f"/{w['retry_successes']}"
+            f" drops={w['blackout_write_drops']}"
+            f"+{w['write_ring_drops']}+{w['touch_ring_drops']}")
+    rec = out["recovery"]
+    log(f"  recovery: pre_hit={rec['pre_fault_hit_rate']}"
+        f" recovered_after={rec['recovered_after_windows']}"
+        f"/{rec['tail_windows']} windows (tol {recovery_tol_pp}pp)")
+    return out
+
+
 def run_serving_multi(arch: str = "sasrec", minutes: int = 60,
                       users: int = 2000, batch: int = 256,
                       miss_budget_frac: float = 0.75,
@@ -888,6 +1124,22 @@ def main():
                          "(DESIGN.md §10)")
     ap.add_argument("--checkpoint-every", type=int, default=40,
                     help="--restart: serve steps between snapshots")
+    ap.add_argument("--chaos", default=None,
+                    choices=list(chaos_lib.PRESETS),
+                    help="chaos engine (DESIGN.md §14): compile the named "
+                         "multi-fault scenario into a device-resident "
+                         "schedule and replay it against the multi-model "
+                         "tier with retry/backoff, reporting the per-window "
+                         "degradation ledger")
+    ap.add_argument("--chaos-models", type=int, default=4,
+                    help="--chaos: registry size for the fan-out")
+    ap.add_argument("--chaos-steps", type=int, default=240,
+                    help="--chaos: serve steps in the scenario horizon")
+    ap.add_argument("--chaos-retries", type=int, default=2,
+                    help="--chaos: max retry attempts per failed inference")
+    ap.add_argument("--hedge-after-ms", type=float, default=25.0,
+                    help="--chaos: straggler hedge deadline for the "
+                         "p99-with/without-hedging report")
     ap.add_argument("--regions", type=int, default=None,
                     help="regional serving on device: stack N regions as a "
                          "leading axis over the cache tier, sticky routing "
@@ -918,7 +1170,29 @@ def main():
         ensure_shard_devices(args.shards)
     if args.drain and args.regions is None:
         ap.error("--drain requires --regions")
-    if args.regions is not None:
+    if args.chaos is not None:
+        if (args.restart or args.overload or args.multi
+                or args.regions is not None):
+            ap.error("--chaos is its own scenario; drop "
+                     "--restart/--overload/--multi/--regions")
+        if args.no_cache or args.coalesce:
+            ap.error("--chaos is a cache-tier scenario; drop "
+                     "--no-cache/--coalesce")
+        if args.shards > 1:
+            ap.error("--chaos runs on one device; drop --shards")
+        if args.eviction != "ttl":
+            ap.error("--chaos fixes eviction=ttl (the scenario isolates "
+                     "fault handling, not victim order)")
+        run_serving_chaos(
+            arch=args.arch, scenario=args.chaos,
+            n_models=args.chaos_models, steps=args.chaos_steps,
+            users=args.users, batch=args.batch,
+            ttl_min=0.2 if args.ttl_min is None else args.ttl_min,
+            backend=args.backend, chunk_steps=args.chunk_steps,
+            max_retries=args.chaos_retries,
+            hedge_after_ms=args.hedge_after_ms,
+            checkpoint_every=args.checkpoint_every)
+    elif args.regions is not None:
         if args.regions < 1:
             ap.error("--regions must be >= 1")
         if args.restart or args.overload or args.multi:

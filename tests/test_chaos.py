@@ -1,0 +1,430 @@
+"""Chaos engine (DESIGN.md §14): fault-schedule compilation, the serve
+path under compiled faults, retry/backoff token accounting, and the
+degradation-ledger counters.
+
+Locks the tentpole contracts:
+
+* staging-time validation — invalid scenarios raise in
+  ``compile_schedule``, never inside a trace;
+* benign parity — serving with an all-quiet schedule is BIT-EXACT with
+  ``chaos=None`` (embeddings, counters, final cache image);
+* each fault family's observable: Outage → deferrals (grant forced 0),
+  BucketBlackout → probes miss + inserts drop (accounted) + failover
+  absorbs, FlushStall → ring-overflow drops, InferFailure + RetryPolicy
+  → retries charge admission tokens and a retry landing in an outage
+  re-fails deterministically;
+* the conservation identity the CI gate asserts:
+  requests == direct_hits + computed_serves + failover_serves + fallbacks.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import server as S
+from repro.core.config import CacheConfig
+from repro.core.hashing import Key64
+from repro.ft import chaos as CH
+
+DIM = 8
+MIN = 60_000
+
+BASE = CacheConfig(model_id=1, model_type="ctr", n_buckets=64, ways=4,
+                   value_dim=DIM, cache_ttl_ms=30 * MIN,
+                   failover_ttl_ms=120 * MIN,
+                   infer_budget_per_step=64.0)
+
+
+def tower(params, feats):
+    return feats @ params
+
+
+def keys_of(ids):
+    ids = np.asarray(ids, np.int64)
+    flat = Key64.from_int(ids.reshape(-1))
+    return Key64(hi=flat.hi.reshape(ids.shape), lo=flat.lo.reshape(ids.shape))
+
+
+def feats_of(ids):
+    ids = np.asarray(ids, np.int64)
+    base = (ids[..., None] * 31 + np.arange(DIM)) % 97
+    return jnp.asarray(base, jnp.float32) / 97.0
+
+
+def stream(n_steps, batch, n_users=40, step_ms=1000, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, n_users, size=(n_steps, batch))
+    nows = ((np.arange(n_steps) + 1) * step_ms).astype(np.int32)
+    return ids, keys_of(ids), feats_of(ids), jnp.asarray(nows)
+
+
+def single_server(**extra):
+    cfg = dataclasses.replace(BASE, **extra)
+    srv = S.CachedEmbeddingServer(cfg=cfg, tower_fn=tower, miss_budget=64)
+    state = S.init_server_state(cfg, writebuf_capacity=256)
+    return srv, state, jnp.eye(DIM, dtype=jnp.float32)
+
+
+def multi_server(n_models=2, **extra):
+    cfgs = tuple(dataclasses.replace(BASE, model_id=m + 1, **extra)
+                 for m in range(n_models))
+    srv = S.MultiModelServer(cfgs=cfgs, tower_fn=tower, miss_budget=64)
+    state = S.init_multi_server_state(cfgs, writebuf_capacity=256)
+    return srv, state, jnp.eye(DIM, dtype=jnp.float32)
+
+
+def get(acc):
+    return {k: np.asarray(v) for k, v in
+            jax.device_get(acc).items()}  # erlint: allow[ER002]
+
+
+def conserved(a):
+    return int(a["requests"]) == (int(a["direct_hits"])
+                                  + int(a["computed_serves"])
+                                  + int(a["failover_serves"])
+                                  + int(a["fallbacks"]))
+
+
+# ----------------------------------------------------- staging-time checks
+def test_compile_rejects_invalid_scenarios():
+    nows = np.arange(4) * 1000
+    ok = dict(batch=8, n_models=2, n_buckets=64)
+    with pytest.raises(ValueError, match="empty window"):
+        CH.compile_schedule([CH.InferFailure(500, 500)], nows, **ok)
+    with pytest.raises(ValueError, match="rate"):
+        CH.compile_schedule([CH.InferFailure(0, 1, rate=1.5)], nows, **ok)
+    with pytest.raises(ValueError, match="InferFailure model"):
+        CH.compile_schedule([CH.InferFailure(0, 1, model=2)], nows, **ok)
+    with pytest.raises(ValueError, match="Outage model"):
+        CH.compile_schedule([CH.Outage(0, 1, model=-1)], nows, **ok)
+    with pytest.raises(ValueError, match="BucketBlackout"):
+        CH.compile_schedule([CH.BucketBlackout(0, 1, lo=0, hi=65)],
+                            nows, **ok)
+    with pytest.raises(ValueError, match="overlapping BucketBlackout"):
+        CH.compile_schedule([CH.BucketBlackout(0, 2000, lo=0, hi=8),
+                             CH.BucketBlackout(1000, 3000, lo=8, hi=16)],
+                            nows, **ok)
+    with pytest.raises(ValueError, match="overlapping ClockSkew"):
+        CH.compile_schedule([CH.ClockSkew(0, 2000, skew_ms=5),
+                             CH.ClockSkew(500, 900, skew_ms=9)], nows, **ok)
+    with pytest.raises(ValueError, match="slots"):
+        CH.compile_schedule([], nows, 8, n_models=2, n_buckets=64,
+                            slots=np.full((4, 8), 2, np.int32))
+    with pytest.raises(TypeError, match="unknown fault family"):
+        CH.compile_schedule([CH.Fault(0, 1)], nows, **ok)
+    with pytest.raises(ValueError, match="unknown chaos scenario"):
+        CH.preset_faults("nope", 1000, n_buckets=64)
+
+
+def test_compiled_shapes_and_windows():
+    nows = (np.arange(6) + 1) * 1000          # 1000..6000
+    sched = CH.compile_schedule(
+        [CH.InferFailure(2000, 4000, rate=1.0),
+         CH.Outage(3000, 5000, model=1),
+         CH.BucketBlackout(1000, 3000, lo=4, hi=12),
+         CH.FlushStall(5000, 7000),
+         CH.ClockSkew(4000, 6000, skew_ms=-250)],
+        nows, batch=8, n_models=2, n_buckets=64,
+        retry=CH.RetryPolicy(max_retries=2, backoff_ms=500))
+    assert (sched.n_steps, sched.n_retries) == (6, 2)
+    assert sched.fail.shape == (6, 8)
+    assert sched.retry_fail.shape == (6, 2, 8)
+    # half-open windows land on the right steps
+    fail = np.asarray(sched.fail)
+    assert not fail[0].any() and fail[1].all() and fail[2].all() \
+        and not fail[3:].any()
+    out = np.asarray(sched.outage)
+    assert out[:, 1].tolist() == [False, False, True, True, False, False]
+    assert not out[:, 0].any()
+    assert np.asarray(sched.blackout_hi).tolist() == [12, 12, 0, 0, 0, 0]
+    assert np.asarray(sched.flush_off).tolist() == [False] * 4 + [True, True]
+    assert np.asarray(sched.skew_ms).tolist() == [0, 0, 0, -250, -250, 0]
+    # skewed_now = staged clock + skew
+    np.testing.assert_array_equal(
+        np.asarray(CH.skewed_now(sched, nows)),
+        nows + np.asarray(sched.skew_ms))
+    # slicing preserves per-family rows
+    part = CH.slice_schedule(sched, 2, 5)
+    assert part.n_steps == 3
+    np.testing.assert_array_equal(np.asarray(part.fail), fail[2:5])
+
+
+def test_retry_refails_deterministically_inside_outage():
+    """Attempt r of a step at t is evaluated at t + backoff·mult^(r-1);
+    landing inside an Outage window forces failure regardless of rate."""
+    nows = np.asarray([1000])
+    sched = CH.compile_schedule(
+        [CH.Outage(1400, 3000, model=0)], nows, batch=16, n_models=1,
+        n_buckets=64, retry=CH.RetryPolicy(max_retries=2, backoff_ms=500,
+                                           multiplier=2), seed=3)
+    rf = np.asarray(sched.retry_fail)
+    assert rf[0, 0].all()          # attempt 1 at 1500: inside the outage
+    assert rf[0, 1].all()          # attempt 2 at 2000: still inside
+    late = CH.compile_schedule(
+        [CH.Outage(1400, 1900, model=0)], nows, batch=16, n_models=1,
+        n_buckets=64, retry=CH.RetryPolicy(max_retries=2, backoff_ms=500,
+                                           multiplier=2), seed=3)
+    assert np.asarray(late.retry_fail)[0, 0].all()      # 1500 in window
+    assert not np.asarray(late.retry_fail)[0, 1].any()  # 2000 past it
+
+
+def test_fault_windows_cut_and_label():
+    faults = [CH.InferFailure(300, 600), CH.Outage(300, 450, model=0)]
+    wins = CH.fault_windows(faults, 1000)
+    assert wins == [(0, 300, "quiet"),
+                    (300, 450, "InferFailure+Outage"),
+                    (450, 600, "InferFailure"),
+                    (600, 1000, "quiet")]
+
+
+def test_presets_compile_at_scale():
+    for name in CH.PRESETS:
+        faults = CH.preset_faults(name, 60_000, n_models=3, n_buckets=256)
+        nows = (np.arange(60) + 1) * 1000
+        sched = CH.compile_schedule(
+            faults, nows, batch=8, n_models=3, n_buckets=256,
+            retry=CH.RetryPolicy())
+        assert sched.n_steps == 60
+
+
+# ------------------------------------------------------------ benign parity
+@pytest.mark.parametrize("make", [single_server, multi_server])
+def test_benign_schedule_is_bit_exact_with_chaos_off(make):
+    srv, st0, params = make()
+    n_models = getattr(srv, "n_models", 1)
+    ids, keys, feats, nows = stream(6, 16)
+    slots = jnp.asarray(ids % n_models, jnp.int32)
+    benign = CH.benign_schedule(6, 16, n_models=n_models)
+    sargs = (slots,) if n_models > 1 else ()
+
+    base_st, base_acc, base_ys = srv.serve_many(
+        params, st0, *sargs, keys, feats, nows, None)
+    srv2, st1, _ = make()
+    chaos_st, chaos_acc, chaos_ys = srv2.serve_many(
+        params, st1, *sargs, keys, feats, nows, None, benign)
+
+    np.testing.assert_array_equal(np.asarray(base_ys[0]),
+                                  np.asarray(chaos_ys[0]))
+    np.testing.assert_array_equal(np.asarray(base_ys[1]),
+                                  np.asarray(chaos_ys[1]))
+    ga, gb = get(base_acc), get(chaos_acc)
+    for k, v in ga.items():
+        np.testing.assert_array_equal(v, gb[k], err_msg=k)
+    # chaos-only ledger keys exist and are all zero on a quiet schedule
+    for k in ("computed_serves", "retries", "retry_successes",
+              "blackout_write_drops", "write_ring_drops",
+              "touch_ring_drops"):
+        assert k in gb
+    assert int(gb["retries"]) == 0 and int(gb["blackout_write_drops"]) == 0
+    for a, b in zip(jax.tree_util.tree_leaves(S.cache_image(base_st)),
+                    jax.tree_util.tree_leaves(S.cache_image(chaos_st))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert conserved(gb)
+
+
+def test_chaos_requires_admission_control():
+    srv, st, params = single_server(infer_budget_per_step=None)
+    _, keys, feats, nows = stream(2, 8)
+    sched = CH.benign_schedule(2, 8)
+    with pytest.raises(ValueError, match="admission"):
+        srv.serve_many(params, st, keys, feats, nows, None, sched)
+
+
+# ----------------------------------------------------------- fault families
+def test_outage_defers_every_miss():
+    srv, st, params = single_server()
+    _, keys, feats, nows = stream(4, 16, step_ms=1000)
+    sched = CH.compile_schedule([CH.Outage(1, 10_000, model=0)], nows,
+                                batch=16, n_models=1, n_buckets=64)
+    _, acc, _ = srv.serve_many(params, st, keys, feats, nows, None, sched)
+    a = get(acc)
+    assert int(a["tower_inferences"]) == 0      # grant forced to 0
+    assert int(a["deferred"]) > 0
+    assert int(a["direct_hits"]) == 0           # nothing ever admitted
+    assert int(a["fallbacks"]) == int(a["requests"]) \
+        - int(a["failover_serves"])
+    assert conserved(a)
+
+
+def test_blackout_drops_writes_and_goes_dark():
+    srv, st, params = single_server()
+    ids, keys, feats, nows = stream(8, 16, n_users=24, step_ms=1000)
+    # warm 2 steps, then black out the WHOLE direct tier for the rest:
+    # with ample budget every dark probe recomputes, and the recompute's
+    # insert is dropped (the shard's write path is down too)
+    sched = CH.compile_schedule(
+        [CH.BucketBlackout(2500, 10_000, lo=0, hi=64)], nows,
+        batch=16, n_models=1, n_buckets=64)
+    _, acc, ys = srv.serve_many(params, st, keys, feats, nows, None, sched)
+    a = get(acc)
+    assert int(a["blackout_write_drops"]) > 0   # inserts in range dropped
+    src = np.asarray(ys[1])
+    # during the blackout no request is served from the direct tier
+    assert not (src[3:] == S.SRC_DIRECT).any()
+    assert (src[:2] == S.SRC_DIRECT).sum() > 0  # warmup hits were real
+    assert conserved(a)
+
+
+def test_blackout_plus_outage_is_absorbed_by_failover():
+    """The shard-loss story: probes dark AND no compute capacity — the
+    failover tier (warmed by the pre-fault steps, long TTL) absorbs the
+    reads instead of falling back to defaults."""
+    srv, st, params = single_server()
+    ids, keys, feats, nows = stream(8, 16, n_users=24, step_ms=1000)
+    sched = CH.compile_schedule(
+        [CH.BucketBlackout(2500, 10_000, lo=0, hi=64),
+         CH.Outage(2500, 10_000, model=0)], nows,
+        batch=16, n_models=1, n_buckets=64)
+    _, acc, _ = srv.serve_many(params, st, keys, feats, nows, None, sched)
+    a = get(acc)
+    assert int(a["failover_serves"]) > 0
+    assert int(a["fallbacks"]) < int(a["requests"])
+    assert conserved(a)
+
+
+def test_blackout_range_is_respected():
+    """Only probes whose bucket lands in [lo, hi) go dark: with a
+    zero-width range nothing changes; with a half-range some direct hits
+    survive."""
+    srv, st, params = single_server()
+    ids, keys, feats, nows = stream(8, 16, n_users=24)
+    sched = CH.compile_schedule(
+        [CH.BucketBlackout(2500, 10_000, lo=0, hi=32)], nows,
+        batch=16, n_models=1, n_buckets=64)
+    _, acc, ys = srv.serve_many(params, st, keys, feats, nows, None, sched)
+    src = np.asarray(ys[1])
+    assert (src[3:] == S.SRC_DIRECT).sum() > 0  # upper half still serves
+    assert conserved(get(acc))
+
+
+def test_flush_stall_accounts_ring_drops():
+    srv, _, params = single_server()
+    # tiny ring so the stall overflows it quickly
+    state = S.init_server_state(srv.cfg, writebuf_capacity=16)
+    ids, keys, feats, nows = stream(6, 16, n_users=200)
+    sched = CH.compile_schedule([CH.FlushStall(1, 10_000)], nows,
+                                batch=16, n_models=1, n_buckets=64)
+    _, acc, _ = srv.serve_many(params, state, keys, feats, nows, None,
+                               sched)
+    a = get(acc)
+    assert int(a["write_ring_drops"]) > 0
+    assert conserved(a)
+    # quiet schedule on the same stream: flush runs, no drops
+    state2 = S.init_server_state(srv.cfg, writebuf_capacity=16)
+    _, acc2, _ = srv.serve_many(params, state2, keys, feats, nows, None,
+                                CH.benign_schedule(6, 16))
+    assert int(get(acc2)["write_ring_drops"]) == 0
+
+
+def test_retries_recover_failures_and_charge_tokens():
+    srv, st, params = single_server(infer_budget_per_step=200.0)
+    _, keys, feats, nows = stream(4, 16, n_users=64)
+    # a 50ms failure blip at every step time: the first attempt fails,
+    # its retry at t+100 lands OUTSIDE the blip → all recover
+    sched = CH.compile_schedule(
+        [CH.InferFailure(int(t), int(t) + 50, rate=1.0) for t in
+         np.asarray(nows)], nows, batch=16,
+        n_models=1, n_buckets=64,
+        retry=CH.RetryPolicy(max_retries=1, backoff_ms=100), seed=5)
+    assert np.asarray(sched.fail).all()
+    assert not np.asarray(sched.retry_fail).any()
+    _, acc, _ = srv.serve_many(params, st, keys, feats, nows, None, sched)
+    a = get(acc)
+    assert int(a["retries"]) > 0
+    assert int(a["retries"]) == int(a["retry_successes"])
+    assert int(a["tower_failures"]) == 0        # every failure recovered
+    assert int(a["fallbacks"]) == 0
+    assert conserved(a)
+
+
+def test_retries_starve_on_exhausted_budget():
+    """Retries are granted from tokens LEFT after the initial grant: a
+    budget equal to demand leaves nothing, so every retry starves and the
+    failures stand."""
+    # burst = rate + 1 (bursts_of), so a 4.0 budget holds 5 tokens: 5
+    # distinct cold misses drain the bucket to exactly 0
+    srv, st, params = single_server(infer_budget_per_step=4.0,
+                                    coalesce_misses=True)
+    n = 5
+    ids = np.tile(np.arange(n), (1, 1)) + 100   # distinct cold users
+    keys, feats = keys_of(ids), feats_of(ids)
+    nows = jnp.asarray([1000], jnp.int32)
+    sched = CH.compile_schedule(
+        [CH.InferFailure(990, 1050, rate=1.0)], np.asarray([1000]),
+        batch=n, n_models=1, n_buckets=64,
+        retry=CH.RetryPolicy(max_retries=2, backoff_ms=100), seed=5)
+    assert np.asarray(sched.fail).all()
+    assert not np.asarray(sched.retry_fail).any()   # would succeed if run
+    _, acc, _ = srv.serve_many(params, st, keys, feats, nows, None, sched)
+    a = get(acc)
+    assert int(a["tower_inferences"]) == n      # initial grant drained all
+    assert int(a["retries"]) == 0               # nothing left to charge
+    assert int(a["tower_failures"]) == n
+    assert conserved(a)
+
+
+def test_multi_model_outage_hits_only_its_model():
+    srv, st, params = multi_server(n_models=2)
+    ids, keys, feats, nows = stream(6, 16, n_users=24)
+    slots = jnp.asarray(ids % 2, jnp.int32)
+    sched = CH.compile_schedule(
+        [CH.Outage(1, 10_000, model=0)], nows, batch=16, n_models=2,
+        n_buckets=64, slots=np.asarray(ids % 2, np.int32))
+    _, acc, _ = srv.serve_many(params, st, slots, keys, feats, nows, None,
+                               sched)
+    a = get(acc)
+    assert int(a["per_model_deferred"][0]) > 0
+    assert int(a["per_model_deferred"][1]) == 0
+    assert int(a["per_model_direct_hits"][0]) == 0
+    assert int(a["per_model_direct_hits"][1]) > 0
+    assert conserved(a)
+
+
+def test_infer_failure_burst_per_model():
+    srv, st, params = multi_server(n_models=2)
+    ids, keys, feats, nows = stream(4, 32, n_users=400)
+    slots_np = np.asarray(ids % 2, np.int32)
+    sched = CH.compile_schedule(
+        [CH.InferFailure(1, 10_000, rate=1.0, model=1)], nows, batch=32,
+        n_models=2, n_buckets=64, slots=slots_np, seed=2)
+    fail = np.asarray(sched.fail)
+    assert (fail == (slots_np == 1)).all()      # burst masks only model 1
+    _, acc, _ = srv.serve_many(params, st, jnp.asarray(slots_np), keys,
+                               feats, nows, None, sched)
+    a = get(acc)
+    assert int(a["per_model_fallbacks"][1]) > 0
+    assert int(a["per_model_fallbacks"][0]) == 0
+    assert conserved(a)
+
+
+def test_chunked_dispatch_equals_one_dispatch():
+    """slice_schedule chunking (the --chaos driver's loop) accumulates
+    the same ledger as a single dispatch over the full schedule."""
+    ids, keys, feats, nows = stream(8, 16, n_users=24)
+    faults = [CH.InferFailure(2500, 5500, rate=1.0),
+              CH.BucketBlackout(2500, 5500, lo=0, hi=32)]
+    sched = CH.compile_schedule(faults, np.asarray(nows), batch=16,
+                                n_models=1, n_buckets=64,
+                                retry=CH.RetryPolicy(max_retries=1))
+    srv, st, params = single_server()
+    _, acc_one, _ = srv.serve_many(params, st, keys, feats, nows, None,
+                                   sched)
+    one = get(acc_one)
+
+    srv2, st2, _ = single_server()
+    total = None
+    for lo in (0, 4):
+        hi = lo + 4
+        part_keys = Key64(hi=keys.hi[lo:hi], lo=keys.lo[lo:hi])
+        st2, acc, _ = srv2.serve_many(
+            params, st2, part_keys, feats[lo:hi], nows[lo:hi], None,
+            CH.slice_schedule(sched, lo, hi))
+        a = get(acc)
+        total = a if total is None else {
+            k: total[k] + a[k] for k in total if k != "steps"}
+    for k in ("requests", "direct_hits", "computed_serves", "retries",
+              "fallbacks", "blackout_write_drops", "failover_serves",
+              "deferred", "tower_failures"):
+        assert int(one[k]) == int(total[k]), k

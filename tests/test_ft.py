@@ -81,6 +81,44 @@ def test_straggler_hedging_cuts_p99():
     assert hedged["extra_compute_frac"] < 0.1
 
 
+def test_failure_injector_kill_steps_all_in_burst_boundaries():
+    """kill_steps returns EVERY checkpoint boundary inside a burst window
+    (rolling-restart chaos kills at each in turn); kill_step stays the
+    back-compat head of that list."""
+    inj = FailureInjector(burst_windows_ms=((1000, 3000), (5000, 5500)))
+    nows = [s * 100 for s in range(80)]          # step s at s*100 ms
+    steps = inj.kill_steps(nows, checkpoint_every=10)
+    # boundaries 10,20,...,70 → times 1000..7000; in-burst: 1000, 2000
+    # (window half-open so 3000 is out) and 5000
+    assert steps == [10, 20, 50]
+    assert inj.kill_step(nows, checkpoint_every=10) == 10
+    quiet = FailureInjector(burst_windows_ms=((100, 150),))
+    assert quiet.kill_steps(nows, checkpoint_every=10) == []
+    assert quiet.kill_step(nows, checkpoint_every=10) is None
+
+
+def test_straggler_hedge_wins_min_accounting():
+    """Hedge accounting: with paired seeds the first-sample stream is
+    identical, only requests past the deadline re-issue, the earliest
+    completion wins (min of first and deadline+second), and
+    extra_compute_frac is exactly the hedged fraction."""
+    plain = StragglerHedger(hedge_after_ms=None, seed=7).latencies(10_000)
+    h = StragglerHedger(hedge_after_ms=20.0, seed=7)
+    first = h._sample(10_000)                    # peek the paired stream
+    hedged = StragglerHedger(hedge_after_ms=20.0, seed=7).latencies(10_000)
+    np.testing.assert_array_equal(first, plain["latency_ms"])
+    mask = hedged["hedged"]
+    np.testing.assert_array_equal(mask, first > 20.0)
+    # un-hedged requests keep their first-sample latency untouched
+    np.testing.assert_array_equal(hedged["latency_ms"][~mask], first[~mask])
+    # hedged requests: effective = min(first, deadline + second) — never
+    # slower than the straggler, never faster than the deadline
+    eff = hedged["latency_ms"][mask]
+    assert (eff <= first[mask]).all()
+    assert (eff >= 20.0).all()
+    assert hedged["extra_compute_frac"] == mask.mean()
+
+
 def test_elastic_plan_divisibility():
     plan = plan_mesh(256, global_batch=512, model_parallel_min=8)
     assert plan.n_devices == 256

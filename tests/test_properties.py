@@ -176,6 +176,108 @@ def test_dedupe_first_groups_picks_first_occurrences(rows):
             assert src[i] == -1 and not rep[i]
 
 
+# ------------------------------------------- TTL/age math under clock skew
+# The chaos engine's ClockSkew fault shifts the serve clock (ft/chaos.py
+# skewed_now); the TTL predicate ``(now - write_ts) <= ttl`` runs in int32
+# on device with ER004 allowances where the sentinel wrap is masked by the
+# key match. These properties exercise that math dynamically: the int32
+# device verdict must equal an int64 host oracle EXACTLY — so a negative
+# skew can only un-expire entries by precisely its magnitude (an entry
+# expired by more than |skew| stays expired: no wrap-induced resurrection),
+# and a clock parked next to INT32_MAX never hits an empty slot even though
+# ``now - TS_EMPTY`` overflows int32.
+SKEW_ENTRIES = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=30),        # user id
+              st.integers(min_value=0, max_value=10 ** 9)),  # write ts (ms)
+    min_size=1, max_size=24, unique_by=lambda e: e[0])
+
+
+def _insert_at(entries, nb=16, ways=2, dim=4):
+    """Insert each (id, ts) with its own write timestamp; ground truth is
+    the table itself (flat_entries), so bucket overflow can't skew the
+    oracle."""
+    state = cache_lib.init_cache(nb, ways, dim)
+    for u, ts in entries:
+        val = np.full((1, dim), float(u + 1), np.float32)
+        state = cache_lib.insert(state, keys_of([u]), jnp.asarray(val),
+                                 now_ms=ts, ttl_ms=10 ** 9,
+                                 ts_ms=jnp.asarray([ts], jnp.int32))
+    keys, _, wts, _, live = cache_lib.flat_entries(state)
+    live = np.asarray(live)
+    k_live = Key64(hi=jnp.asarray(np.asarray(keys.hi)[live]),
+                   lo=jnp.asarray(np.asarray(keys.lo)[live]))
+    return state, k_live, np.asarray(wts)[live].astype(np.int64)
+
+
+@settings(max_examples=60, deadline=None)
+@given(SKEW_ENTRIES,
+       st.integers(min_value=0, max_value=cache_lib.INT32_MAX),  # clock
+       st.integers(min_value=0, max_value=2 * 10 ** 9),  # |negative skew|
+       st.integers(min_value=1, max_value=10 ** 9))      # ttl
+def test_negative_skew_never_resurrects_expired_entries(entries, now0,
+                                                        mag, ttl):
+    state, k_live, wts = _insert_at(entries)
+    skew = -min(mag, now0)          # skewed clock stays a valid int32 time
+    c = now0 + skew
+    res = cache_lib.lookup(state, k_live, c, ttl)
+    hit = np.asarray(res.hit)
+    age64 = np.int64(c) - wts       # exact oracle, no narrowing
+    want = age64 <= ttl
+    np.testing.assert_array_equal(hit, want)
+    # expired-by-more-than-|skew| at the PRE-skew clock ⇒ still expired
+    beyond = (np.int64(now0) - wts) > (ttl + np.int64(-skew))
+    assert not hit[beyond].any(), "negative skew resurrected an entry"
+    # reported age is the exact int64 difference (ER004: no int32 wrap)
+    np.testing.assert_array_equal(np.asarray(res.age_ms)[hit].astype(
+        np.int64), age64[hit])
+    assert (np.asarray(res.age_ms)[~hit] == -1).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(SKEW_ENTRIES,
+       st.integers(min_value=0, max_value=10 ** 6),      # INT32_MAX - delta
+       st.integers(min_value=1, max_value=10 ** 9))      # ttl
+def test_huge_now_near_int32_sentinel_stays_exact(entries, delta, ttl):
+    """Clock parked next to INT32_MAX: ``now - TS_EMPTY`` wraps in int32,
+    but empty slots must never hit (the key match masks the wrap) and
+    live entries must follow the int64 oracle — which at this clock is
+    'everything is expired' for any ttl ≤ 1e9 and ts ≤ 1e9."""
+    state, k_live, wts = _insert_at(entries)
+    c = cache_lib.INT32_MAX - delta
+    # absent keys (never inserted) probe empty/foreign slots
+    absent = keys_of(np.arange(1000, 1000 + 8))
+    res_a = cache_lib.lookup(state, absent, c, ttl)
+    assert not np.asarray(res_a.hit).any()
+    assert (np.asarray(res_a.age_ms) == -1).all()
+    res = cache_lib.lookup(state, k_live, c, ttl)
+    want = (np.int64(c) - wts) <= ttl
+    np.testing.assert_array_equal(np.asarray(res.hit), want)
+    assert not want.any()           # sanity: clock is past every expiry
+
+
+def test_skew_boundary_exact_on_both_backends():
+    """Deterministic cross-backend spot check of the exact expiry edge:
+    age == ttl hits, age == ttl + 1 misses, on jnp AND the pallas probe
+    kernel, at a large clock."""
+    dim, ttl = 4, 10_000
+    c = cache_lib.INT32_MAX - 5
+    state = cache_lib.init_cache(8, 2, dim)
+    ts_hit, ts_miss = c - ttl, c - ttl - 1
+    state = cache_lib.insert(state, keys_of([1]),
+                             jnp.ones((1, dim), jnp.float32), now_ms=ts_hit,
+                             ttl_ms=10 ** 9,
+                             ts_ms=jnp.asarray([ts_hit], jnp.int32))
+    state = cache_lib.insert(state, keys_of([2]),
+                             jnp.ones((1, dim), jnp.float32), now_ms=ts_miss,
+                             ttl_ms=10 ** 9,
+                             ts_ms=jnp.asarray([ts_miss], jnp.int32))
+    for backend in ("jnp", "pallas"):
+        res = cache_lib.lookup(state, keys_of([1, 2, 777]), c, ttl,
+                               backend=backend)
+        assert np.asarray(res.hit).tolist() == [True, False, False], backend
+        assert np.asarray(res.age_ms).tolist() == [ttl, -1, -1], backend
+
+
 # ---------------------------------------------------- routing invariants
 # Random drain schedules against the sticky-routing contracts the drain
 # test leans on (DESIGN.md §13): sticky absent drain/excursion, drained

@@ -285,6 +285,44 @@ def test_restore_corrupt_shard_is_cold_not_raise(tmp_path):
     assert (r.mode, r.step) == ("cold", 3)
 
 
+def _perturb_one_value(shard_path):
+    """Rewrite a shard npz LEGITIMATELY with exactly one array element
+    flipped — the zip container and its per-member CRCs are valid, so
+    only the manifest's content checksum can catch it (a raw byte flip
+    would be caught by np.load's zip CRC and never reach our check)."""
+    with np.load(shard_path) as z:
+        arrs = {k: z[k].copy() for k in z.files}
+    key = max(arrs, key=lambda k: arrs[k].size)      # a real data leaf
+    flat = arrs[key].reshape(-1)
+    flat[0] = np.bitwise_xor(flat[0], 1) if flat.dtype.kind in "iu" \
+        else flat[0] + 1
+    np.savez(shard_path, **arrs)
+    return key
+
+
+def test_restore_bitrot_shard_raises_checksum_and_fails_open(tmp_path):
+    """Silent bit-rot: one value perturbed inside an otherwise-valid
+    shard. restore_raw must refuse it (ChecksumError names the leaf),
+    and the serving restore path must degrade to cold rather than warm-
+    start from garbage."""
+    d = str(tmp_path)
+    ids = np.arange(8, dtype=np.int64)
+    srv, state, _ = served_server(BASE, ids, now_ms=1000)
+    snap.snapshot_server(d, 3, srv, state, now_ms=1000)
+    shard, = glob.glob(os.path.join(d, "step_00000003", "shard_*.npz"))
+    _perturb_one_value(shard)
+    with pytest.raises(ckpt.ChecksumError):
+        ckpt.restore_raw(d, 3)
+    r = snap.restore_server(d, srv, now_ms=1500, writebuf_capacity=16)
+    assert (r.mode, r.step) == ("cold", 3)
+    assert "ChecksumError" in r.detail
+    # a fresh, un-perturbed snapshot still round-trips (checksum in the
+    # manifest does not disturb the happy path)
+    snap.snapshot_server(d, 4, srv, state, now_ms=1000)
+    r2 = snap.restore_server(d, srv, now_ms=1500, writebuf_capacity=16)
+    assert (r2.mode, r2.step) == ("bitexact", 4)
+
+
 # ------------------------------------------------- snapshot/restore: multi
 def multi_cfgs(nb=64):
     return (dataclasses.replace(BASE, model_id=1, n_buckets=nb),
